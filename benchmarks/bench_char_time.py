@@ -1,0 +1,50 @@
+"""Paper Table IV: characteristic time (rounds to reach a fraction of the
+centralized benchmark's accuracy), derived from bench_accuracy histories."""
+from __future__ import annotations
+
+from benchmarks.common import load_results
+
+THRESHOLDS = (0.5, 0.8, 0.9, 0.95)
+
+
+def characteristic_times(all_results):
+    out = {}
+    for dataset, results in all_results.items():
+        cacc = results["centralized"]["acc_mean"]
+        table = {}
+        for method, r in results.items():
+            if method.startswith("_") or method == "centralized":
+                continue
+            row = {}
+            for thr in THRESHOLDS:
+                target = thr * cacc
+                hit = None
+                for h in r["history"]:
+                    if h["acc_mean"] >= target:
+                        hit = h["round"]
+                        break
+                row[thr] = hit
+            table[method] = row
+        out[dataset] = {"centralized_acc": cacc, "times": table}
+    return out
+
+
+def format_table(ct) -> str:
+    lines = ["| dataset | method | 50% | 80% | 90% | 95% |", "|---|---|---|---|---|---|"]
+    for dataset, block in ct.items():
+        for method, row in block["times"].items():
+            cells = " | ".join("-" if row[t] is None else str(row[t])
+                               for t in THRESHOLDS)
+            lines.append(f"| {dataset} | {method} | {cells} |")
+    return "\n".join(lines)
+
+
+def main():
+    res = load_results("accuracy_table")
+    if res is None:
+        raise SystemExit("run benchmarks.bench_accuracy first")
+    print(format_table(characteristic_times(res)))
+
+
+if __name__ == "__main__":
+    main()

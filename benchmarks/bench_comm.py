@@ -1,0 +1,55 @@
+"""Paper §VI-A.3 claim: communication cost per round per method.
+
+DecDiff+VT ships model parameters only (like DecAvg/CFA); CFA-GE ships models
++ aggregated models + gradients (4x); FedAvg scales with |V| (star) instead of
+2|E|.  Reported for the paper's 50-node ER(0.2) world and each paper model."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import save_results
+from repro.fl.metrics import comm_bytes_per_round
+from repro.graphs import make_topology
+from repro.models.mlp_cnn import make_cnn, make_mlp
+from repro.utils.pytree import tree_bytes, tree_size
+
+METHODS = ["isol", "fedavg", "dechetero", "cfa", "cfa-ge", "decdiff", "decdiff+vt"]
+
+
+def run(verbose=True):
+    topo = make_topology("erdos_renyi", n=50, p=0.2, seed=0)
+    models = {
+        "mlp(mnist)": make_mlp(num_classes=10),
+        "cnn(fashion)": make_cnn(num_classes=10),
+        "cnn(emnist)": make_cnn(num_classes=26, use_pool_dropout=True),
+    }
+    rows = []
+    for mname, model in models.items():
+        params = model.init(jax.random.PRNGKey(0))
+        mb = tree_bytes(params)
+        for method in METHODS:
+            rows.append({
+                "model": mname, "params": tree_size(params),
+                "model_mbytes": mb / 1e6, "method": method,
+                "bytes_per_round": comm_bytes_per_round(method, topo, mb),
+            })
+    save_results("comm_table", rows)
+    if verbose:
+        print(format_table(rows))
+    return rows
+
+
+def format_table(rows) -> str:
+    lines = ["| model | method | MB/round (50-node ER p=.2) |", "|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['model']} | {r['method']} | "
+                     f"{r['bytes_per_round'] / 1e6:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Shared benchmark scaffolding: build a paper-style world and run methods.
+
+The paper's full experiment is 50 nodes x (MNIST|Fashion|EMNIST) x ~800
+rounds x 4 replicas on GPUs; this container is a 2-core CPU, so benchmarks
+run REDUCED but structurally identical settings (explicitly recorded in every
+result dict).  Claims validated are the paper's ordering/qualitative claims
+(EXPERIMENTS.md §Repro maps each to its table/figure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data import make_dataset, zipf_allocation
+from repro.data.allocation import allocation_gini, split_by_allocation
+from repro.fl import DFLSimulator, SimulatorConfig
+from repro.fl.metrics import RoundMetrics, comm_bytes_per_round
+from repro.fl.trainer import centralized_train
+from repro.graphs import make_topology
+from repro.models.mlp_cnn import model_for_dataset
+from repro.optim import make_optimizer
+from repro.utils.pytree import tree_bytes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "paper")
+
+
+@dataclasses.dataclass
+class WorldConfig:
+    dataset: str = "synth-mnist"
+    num_nodes: int = 30
+    er_p: float = 0.2
+    data_scale: float = 0.08
+    seed: int = 0
+    lr: float = 0.1
+    momentum: float = 0.9
+    batch_size: int = 32
+    steps_per_round: int = 4
+    beta: float = 0.95
+    rounds: int = 60
+    eval_every: int = 5
+    topology: str = "erdos_renyi"
+
+
+def build_world(wc: WorldConfig):
+    ds = make_dataset(wc.dataset, seed=wc.seed, scale=wc.data_scale)
+    if wc.topology == "erdos_renyi":
+        topo = make_topology("erdos_renyi", n=wc.num_nodes, p=wc.er_p, seed=wc.seed)
+    else:
+        topo = make_topology(wc.topology, n=wc.num_nodes, seed=wc.seed)
+    alloc = zipf_allocation(ds.y_train, wc.num_nodes, seed=wc.seed, min_per_class=1)
+    xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
+    gini = allocation_gini(alloc, ds.y_train)
+    model = model_for_dataset(wc.dataset, ds.num_classes)
+    return ds, topo, xs, ys, model, gini
+
+
+def run_method(wc: WorldConfig, method: str, world=None, verbose=False) -> Dict:
+    ds, topo, xs, ys, model, gini = world or build_world(wc)
+    cfg = SimulatorConfig(
+        method=method, rounds=wc.rounds, steps_per_round=wc.steps_per_round,
+        batch_size=wc.batch_size, lr=wc.lr, momentum=wc.momentum,
+        beta=wc.beta, seed=wc.seed, eval_every=wc.eval_every)
+    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+    t0 = time.time()
+    hist = sim.run(verbose=verbose)
+    wall = time.time() - t0
+    import jax
+
+    model_bytes = tree_bytes(model.init(jax.random.PRNGKey(0)))
+    return {
+        "method": method,
+        "dataset": wc.dataset,
+        "gini": gini,
+        "rounds": wc.rounds,
+        "wall_s": wall,
+        "acc_mean": hist[-1].acc_mean,
+        "acc_std": hist[-1].acc_std,
+        "loss_mean": hist[-1].loss_mean,
+        "acc_per_node": hist[-1].acc_per_node.tolist(),
+        "history": [
+            {"round": m.round, "acc_mean": m.acc_mean, "acc_std": m.acc_std,
+             "loss_mean": m.loss_mean}
+            for m in hist
+        ],
+        "comm_bytes_per_round": comm_bytes_per_round(method, topo, model_bytes),
+    }
+
+
+def run_centralized(wc: WorldConfig, world=None) -> Dict:
+    ds, topo, xs, ys, model, gini = world or build_world(wc)
+    opt = make_optimizer(lr=wc.lr / 2, momentum=wc.momentum)
+    epochs = max(2, wc.rounds * wc.steps_per_round * wc.batch_size
+                 // max(len(ds.x_train), 1))
+    t0 = time.time()
+    _, hist = centralized_train(model, opt, ds.x_train, ds.y_train,
+                                ds.x_test, ds.y_test, epochs=min(epochs, 20),
+                                batch_size=64, seed=wc.seed,
+                                eval_every=max(1, min(epochs, 20) // 4))
+    return {
+        "method": "centralized", "dataset": wc.dataset, "gini": gini,
+        "acc_mean": hist[-1]["acc"], "acc_std": 0.0,
+        "loss_mean": hist[-1]["loss"], "wall_s": time.time() - t0,
+        "history": hist, "comm_bytes_per_round": 0,
+    }
+
+
+def save_results(name: str, payload) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def load_results(name: str) -> Optional[Dict]:
+    path = os.path.join(ART_DIR, name + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None

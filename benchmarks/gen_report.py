@@ -1,0 +1,244 @@
+"""Regenerate EXPERIMENTS.md from artifacts (dry-run, roofline, paper suite).
+
+    PYTHONPATH=src python -m benchmarks.gen_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as rl
+from benchmarks.common import load_results
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def repro_section() -> str:
+    out = []
+    acc = load_results("accuracy_table") or {}
+    dis = load_results("disruption") or {}
+    abl = load_results("ablation_table") or {}
+    comm = load_results("comm_table") or []
+
+    out.append("### Table II — final node-average accuracy (reduced rendition)\n")
+    if acc:
+        out.append("| dataset | GI | method | avg acc | ±std |")
+        out.append("|---|---|---|---|---|")
+        for ds, res in acc.items():
+            gi = res.get("_world", {}).get("gini", 0)
+            for m, r in res.items():
+                if m.startswith("_"):
+                    continue
+                out.append(f"| {ds} | {gi:.2f} | {m} | {r['acc_mean']:.4f} | "
+                           f"{r.get('acc_std', 0):.4f} |")
+        out.append("")
+
+        out.append("### Table IV — characteristic time (rounds to x% of centralized)\n")
+        from benchmarks.bench_char_time import THRESHOLDS, characteristic_times
+        ct = characteristic_times(acc)
+        out.append("| dataset | method | 50% | 80% | 90% | 95% |")
+        out.append("|---|---|---|---|---|---|")
+        for ds, block in ct.items():
+            for m, row in block["times"].items():
+                cells = " | ".join("-" if row[t] is None else str(row[t])
+                                   for t in THRESHOLDS)
+                out.append(f"| {ds} | {m} | {cells} |")
+        out.append("")
+
+    if dis:
+        out.append("### Fig. 1 — round-0 -> round-1 accuracy change "
+                   "(positive = disruption)\n")
+        out.append("| method | Δ accuracy |")
+        out.append("|---|---|")
+        for m, d in dis["round0_to_1_drop"].items():
+            out.append(f"| {m} | {d:+.4f} |")
+        out.append("")
+
+    if abl:
+        out.append("### Table III — ablation (CE/VT x DecAvg/DecDiff/CFA)\n")
+        base = abl.get("dechetero", {}).get("acc_mean")
+        out.append("| method | avg acc | gain vs DecHetero [%pt] |")
+        out.append("|---|---|---|")
+        for m, r in abl.items():
+            if m.startswith("_"):
+                continue
+            gain = "" if base is None else f"{100 * (r['acc_mean'] - base):+.2f}"
+            out.append(f"| {m} | {r['acc_mean']:.4f} | {gain} |")
+        out.append("")
+
+    if comm:
+        out.append("### §VI-A.3 — communication bytes per round "
+                   "(50-node ER p=.2)\n")
+        out.append("| model | method | MB/round |")
+        out.append("|---|---|---|")
+        for r in comm:
+            if r["method"] in ("isol", "fedavg", "cfa-ge", "decdiff+vt"):
+                out.append(f"| {r['model']} | {r['method']} | "
+                           f"{r['bytes_per_round'] / 1e6:.1f} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def dryrun_section() -> str:
+    out = []
+    for mesh in ("single", "multi"):
+        recs = rl.load(mesh=mesh)
+        ok = sum(1 for r in recs if r.get("ok"))
+        out.append(f"* **{mesh}-pod mesh**: {ok}/{len(recs)} combinations "
+                   f"lower+compile OK"
+                   + ("" if ok == len(recs) else "  <-- FAILURES, see artifacts"))
+    out.append("")
+    out.append("Multi-pod status per combo (compile time, per-chip terms in "
+               "artifacts/dryrun/*__multi.json):")
+    out.append("")
+    out.append("| arch | train_4k | prefill_32k | decode_32k | long_500k |")
+    out.append("|---|---|---|---|---|")
+    recs = {(r["arch"], r["shape"]): r for r in rl.load(mesh="multi")}
+    archs = sorted({a for a, _ in recs})
+    for a in archs:
+        cells = []
+        for sh in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            r = recs.get((a, sh))
+            cells.append("OK" if r and r.get("ok") else "FAIL")
+        out.append(f"| {a} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    recs = rl.load(mesh="single")
+    out = [rl.format_table(recs), ""]
+    doms = rl.summarize(recs)
+    for dom, combos in sorted(doms.items()):
+        out.append(f"* **{dom}-bound** ({len(combos)}): {', '.join(combos)}")
+        out.append(f"  * lever: {rl.LEVERS[dom]}")
+    out.append("")
+    out.append(f"* hillclimb picks: {rl.pick_hillclimb_candidates(recs)}")
+    return "\n".join(out)
+
+
+PERF_LOG = r"""
+Three pairs (picked from the baseline table): **mixtral-8x7b/train_4k**
+(most collective-bound), **arctic-480b/train_4k** (worst roofline fraction),
+**qwen3-32b/train_4k** incl. its multi-pod DFL round (most representative of
+the paper's technique — the DecDiff pod-gossip runs in this step).  All
+numbers are per-chip seconds/step from the calibrated dry-run
+(artifacts/perf/*.json); variants via `dryrun.py --variant`.
+
+### mixtral-8x7b / train_4k  (baseline C 2.11 / M 24.98 / **Coll 30.85**)
+
+| # | hypothesis | change | result (C/M/Coll s) | verdict |
+|---|---|---|---|---|
+| 1 | activation psums stem from FSDP weight sharding; forcing use-site weight gather (ZeRO-3 constraint) will trade 45 GB of activation all-reduce for ~0.8 GB of weight all-gather | `zero3_gather` flag: re-constrain per-layer weight slices to model-only inside the scan | 16.62 / 64.55 / 72.59 | **REFUTED** — GSPMD resolved the conflicting constraint by replicating compute (8× flops). Reverted. |
+| 2 | the 9.4 GB fp32 per-layer all-reduce is the MoE global-capacity buffer crossing the batch sharding; batch-local dispatch keeps tokens on their shard | `moe_dispatch="batch_local"` — first as vmap (buffers replicated: only −20%), then explicit batch dim + constraints | 2.11 / 21.18 / **17.89** | **CONFIRMED** — collective −42%, memory −15%. vmap lesson: per-partition HLO shapes showed local B=256 (replicated) until the batch dim was explicit. |
+| 3 | fp32 attention probs are the largest remaining buffer; casting to bf16 before the combine halves that traffic | `attn_probs_bf16` | 2.11 / 21.35 / 17.89 | **REFUTED** — no change; scores/softmax stay fp32 and the cast adds a conversion pass. |
+| 4 | seq-sharding the scan carry removes the residual psum chain | `moelocal+seqshard` | 2.10 / 18.73 / 16.33 | **CONFIRMED (small)** — final: collective −47%, memory −25% vs baseline. |
+
+### arctic-480b / train_4k  (baseline C 3.58 / **M 31.59** / Coll 27.47)
+
+| # | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| 1 | mixtral's batch-local dispatch transfers | `moelocal` | 5.23 / 48.77 / 32.37 | **REFUTED** — the tradeoff flips: arctic's 13.4 B params/layer of expert weights make the forced weight-gather (26.8 GB/layer) far worse than the activation psum. Expert count changes the optimum. |
+| 2 | true expert parallelism (E=128 % 16 == 0): experts sharded over model, tokens all-to-all | `expertpar` (E-dim sharding rule + buffer constraints) | 5.22 / 41.78 / 25.00 | **REFUTED overall** — collective −9% but memory +32% (fp32 dispatch buffers + per-row capacity rounding). The baseline "TP-inside-experts" never moves weights and is already decent. |
+| 3 | per-layer saved residual dominates; seq-shard the carry | `seqshard` | **2.44 / 24.63 / 22.39** | **CONFIRMED** — all three terms down (compute −32%, memory −22%, collective −18%); bytes/device 164 -> 92 GB. |
+
+### qwen3-32b / train_4k + multi-pod DFL  (baseline single C 4.58 / **M 30.44** / Coll 10.02; multi C 2.27 / M 10.18 / Coll 4.81)
+
+| # | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| 1 | the [16,4096,5120] bf16 carry saved per layer (×64) is the memory wall; seq-sharding it over model removes both the capacity and the psum chain | `seqshard` (single-pod) | 4.54 / **15.50 / 1.08** | **CONFIRMED, biggest single win** — memory −49%, collective −89% (all-reduce 475 -> 37 GB/chip), bytes/device 131.6 -> 28.4 GB. |
+| 2 | same for the multi-pod DFL round | `seqshard` (multi) | 2.27 / 9.17 / 4.76 | **PARTIAL** — only −10% memory; the vmapped round keeps its activation psums. sdy dumps show the constraints ARE correctly pod-prefixed (verified `spmd_axis_name`, now enabled) — GSPMD chooses a different global solution when the gossip einsum consumes the stacked params. Open item. |
+| 3 | manual-pod shard_map round (explicit adjacency-masked ppermute ring per DESIGN.md §3) sidesteps GSPMD's choice | `build_dfl_round_shardmap` | — | **BLOCKED** — XLA SPMD partitioner CHECK failure (spmd_partitioner_util.cc:504) on the (2,16,16) partial-auto mesh; implementation kept (works on small meshes), documented as toolchain-blocked. |
+| 4 | bf16 gossip halves the paper's exchange volume | `gossipbf16` | no measurable change | **CONFIRMED-IRRELEVANT** — napkin + measurement agree: DecDiff gossip volume is params/chip ≈ 0.25 GB ≈ 5 ms vs a 4.8 s round. At pod scale the paper's "parameters-only" exchange is already negligible; local training dominates. This *quantifies* the paper's communication-efficiency claim on real hardware. |
+
+**Stopping:** mixtral iterations 3-4 and arctic 2-3 brought <5%-per-change on
+their dominant terms after the confirmed wins; remaining headroom is in the
+`bytes accessed` proxy (fp32 softmax/score paths) and the multi-pod DFL psum
+question above.
+
+**Paper-faithful vs beyond-paper summary** (dominant-term seconds):
+
+| pair | baseline (faithful) | best variant | Δ |
+|---|---|---|---|
+| mixtral-8x7b/train_4k | Coll 30.85 | Coll 16.33 (moelocal+seqshard) | **−47%** |
+| arctic-480b/train_4k | Mem 31.59 | Mem 24.63 (seqshard) | **−22%** |
+| qwen3-32b/train_4k | Mem 30.44 | Mem 15.50 (seqshard) | **−49%** |
+"""
+
+
+def main():
+    sections = []
+    sections.append("""# EXPERIMENTS
+
+All results produced inside this (CPU-only, offline) container.  Real
+datasets are unavailable -> synthetic stand-ins (DESIGN.md §1, data gate);
+accuracy numbers are NOT the paper's absolute numbers — the claims validated
+are the paper's ordering/qualitative claims.  TPU numbers are *derived*
+(dry-run compile + v5e constants: 197 TF bf16, 819 GB/s HBM, 50 GB/s/link
+ICI), not measured.
+
+Contents: §Repro · §Dry-run · §Roofline · §Perf.
+
+---
+
+## §Repro — validating the paper's claims
+
+Reduced rendition of paper §V (ER graph, truncated-Zipf α=1.26 non-IID,
+per-node random init, SGD+momentum; 150 rounds x 30 nodes on synth-mnist,
+80 x 16 on the CNN datasets; 1 replica — CPU budget).  Claim scoreboard:
+
+| claim | paper artifact | verdict |
+|---|---|---|
+| C1 round-1 disruption hits DecHetero only | Fig. 1 | **confirmed** — DecHetero is the only method whose accuracy drops after the first aggregation (see Fig.1 table below) |
+| C2 DecDiff+VT > DecHetero, CFA; ≳ CFA-GE, FedAvg | Table II | **confirmed** — see Table II below (DecDiff+VT tops every decentralized baseline and FedAvg) |
+| C3 ablation: +VT adds over DecDiff/DecAvg alone | Table III | **confirmed for VT** (+6 %pt over DecHetero); DecDiff-alone is mixed on the synthetic task — consistent with the paper's own EMNIST row (−0.87 %pt). Beyond-paper rows show VT lifting every aggregator. |
+| C4 DecDiff+VT fastest to relative-accuracy thresholds | Table IV | **confirmed at 90/95%** (see Table IV) |
+| C5 comms: parameters only; CFA-GE ships 4x | §VI-A.3 | **confirmed** — exact accounting, 4.0x (comm table) |
+| C6 less overfitting / tighter node spread | Fig. 5/6 | **confirmed** — DecDiff+VT final node-accuracy σ is the smallest among decentralized methods (Table II ±std) |
+
+Note: on the synthetic datasets DecDiff+VT can exceed the CE-trained
+centralized benchmark — the virtual teacher acts as a strong label-smoothing
+regularizer against the generator's noise.  This does not occur in the
+paper's real-data setting and we do not claim it; the validated statement is
+the ORDERING among methods.
+""")
+    sections.append(repro_section())
+    sections.append("""
+## §Dry-run — (10 archs × 4 shapes) × (single-pod 16x16, multi-pod 2x16x16)
+
+`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both` — every
+combination must `.lower().compile()`.  Steps per shape: train_4k ->
+train_step (single) / DFL round with DecDiff pod-gossip (multi); prefill_32k
+-> forward; decode shapes -> serve_step (1 token vs KV cache; long_500k uses
+the sub-quadratic path per DESIGN.md §4).
+
+**Methodology notes (each verified, see memory/dryrun-calibration-findings):**
+1. XLA's HloCostAnalysis counts `lax.scan` bodies ONCE — all roofline terms
+   come from calibration compiles (1/2 layers, scans unrolled, chunk grids
+   enlarged) extrapolated linearly; 3-point fit for the zamba2 hybrid.
+2. cost_analysis is per-partition; memory_analysis per-device; collective
+   bytes parsed from post-SPMD HLO (result-shape ÷/× group size).
+3. `bytes accessed` double-counts producer/consumer pairs — treat memory
+   terms as an upper bound (~2x), comparable across combos.
+4. The per-device `temp` from the CPU backend includes fp32 staging XLA:TPU
+   would fuse; `fits 16GB = NO` rows are upper-bound capacity flags, with
+   the §Perf seqshard variant the worst offenders drop 2-5x.
+""")
+    sections.append(dryrun_section())
+    sections.append("""
+## §Roofline — per (arch × shape), single-pod, per chip per step
+""")
+    sections.append(roofline_section())
+    sections.append("""
+## §Perf — hypothesis → change → measure → validate
+""")
+    sections.append(PERF_LOG)
+
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path, "w") as f:
+        f.write("\n".join(sections))
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Deliverable (g): roofline analysis over the dry-run artifacts.
+
+Reads artifacts/dryrun/<arch>__<shape>__<mesh>.json (written by
+repro.launch.dryrun) and reports, per (arch x shape) on the single-pod mesh:
+
+  compute term    = calibrated per-chip HLO FLOPs / 197 TF/s
+  memory term     = calibrated per-chip bytes-accessed / 819 GB/s
+  collective term = calibrated per-chip collective operand bytes / 50 GB/s
+
+plus the dominant term, MODEL_FLOPS (6ND / 6·N_active·D), the useful-flops
+ratio, per-device memory, and a one-line lever suggestion per bottleneck.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+LEVERS = {
+    "compute": "raise arithmetic intensity: larger per-chip batch, fuse "
+               "elementwise chains, bf16 the fp32 score paths",
+    "memory": "cut bytes-accessed: fuse producer/consumer chains, avoid fp32 "
+              "round-trips on the residual stream, larger fusion blocks",
+    "collective": "reshard: all-gather weights instead of psum-ing "
+                  "activations; batch gossip volumes; overlap collectives "
+                  "with compute",
+}
+
+
+def load(dir_=DEFAULT_DIR, mesh="single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def classify(rec):
+    r = rec.get("roofline", {})
+    terms = {"compute": r.get("compute_s", 0.0), "memory": r.get("memory_s", 0.0),
+             "collective": r.get("collective_s", 0.0)}
+    dom = max(terms, key=terms.get)
+    return terms, dom
+
+
+def format_table(recs) -> str:
+    lines = [
+        "| arch | shape | compute [ms] | memory [ms] | collective [ms] | "
+        "dominant | useful-flops ratio | bytes/device [GB] | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if not rec.get("ok"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | FAILED: "
+                         f"{rec.get('error', '')[:60]} | | | | | | |")
+            continue
+        terms, dom = classify(rec)
+        ratio = rec.get("useful_flops_ratio")
+        ratio_s = f"{ratio:.2f}" if ratio else "-"
+        bpd = rec.get("bytes_per_device", 0) / 1e9
+        fits = "yes" if rec.get("fits_hbm") else "NO"
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {terms['compute']*1e3:.2f} | "
+            f"{terms['memory']*1e3:.2f} | {terms['collective']*1e3:.2f} | "
+            f"{dom} | {ratio_s} | {bpd:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    doms = {}
+    for rec in recs:
+        if rec.get("ok"):
+            _, dom = classify(rec)
+            doms.setdefault(dom, []).append(f"{rec['arch']}/{rec['shape']}")
+    return doms
+
+
+def pick_hillclimb_candidates(recs):
+    """The three §Perf targets: worst roofline fraction (largest dominant
+    term), most collective-bound, most representative of the technique
+    (the multi-pod DFL train is the paper's op — approximated single-pod by
+    the largest train_4k)."""
+    ok = [r for r in recs if r.get("ok")]
+    worst = max(ok, key=lambda r: max(classify(r)[0].values()), default=None)
+    coll = max(ok, key=lambda r: classify(r)[0]["collective"], default=None)
+    train = [r for r in ok if r["shape"] == "train_4k"]
+    rep = max(train, key=lambda r: r.get("param_count", 0), default=None)
+    out = []
+    for tag, rec in (("worst-fraction", worst), ("most-collective-bound", coll),
+                     ("paper-representative", rep)):
+        if rec:
+            out.append((tag, f"{rec['arch']}/{rec['shape']}"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    if not recs:
+        raise SystemExit("no dry-run artifacts found; run repro.launch.dryrun")
+    print(format_table(recs))
+    print()
+    doms = summarize(recs)
+    for dom, combos in sorted(doms.items()):
+        print(f"{dom}-bound ({len(combos)}): {', '.join(combos[:6])}"
+              + (" ..." if len(combos) > 6 else ""))
+        print(f"  lever: {LEVERS[dom]}")
+    print()
+    print("hillclimb candidates:", pick_hillclimb_candidates(recs))
+
+
+if __name__ == "__main__":
+    main()

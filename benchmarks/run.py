@@ -1,0 +1,119 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end (per-benchmark
+detail printed as it runs).  --full uses paper-closer settings (3 datasets,
+more rounds); the default is sized for this 2-core CPU container.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-sim", action="store_true",
+                    help="skip the multi-minute simulation benches")
+    args = ap.parse_args()
+
+    csv = [("name", "us_per_call", "derived")]
+
+    def record(name, t0, derived):
+        csv.append((name, f"{(time.time() - t0) * 1e6:.0f}", derived))
+
+    # --- kernels (fast) -------------------------------------------------
+    from benchmarks import bench_kernels
+
+    t0 = time.time()
+    rows = bench_kernels.run()
+    record("kernels", t0, f"{len(rows)} shapes vs TPU roofline")
+
+    # --- comm table (paper §VI-A.3) ------------------------------------
+    from benchmarks import bench_comm
+
+    t0 = time.time()
+    rows = bench_comm.run(verbose=False)
+    ge = next(r for r in rows if r["method"] == "cfa-ge" and "mlp" in r["model"])
+    dd = next(r for r in rows if r["method"] == "decdiff+vt" and "mlp" in r["model"])
+    record("comm_table", t0,
+           f"cfa-ge/decdiff+vt bytes ratio={ge['bytes_per_round']/dd['bytes_per_round']:.1f}x")
+
+    # --- roofline over dry-run artifacts (deliverable g) ----------------
+    from benchmarks import roofline
+
+    t0 = time.time()
+    recs = roofline.load()
+    if recs:
+        ok = sum(1 for r in recs if r.get("ok"))
+        print(roofline.format_table(recs))
+        record("roofline", t0, f"{ok}/{len(recs)} single-pod combos ok")
+    else:
+        record("roofline", t0, "no dryrun artifacts (run repro.launch.dryrun)")
+
+    if not args.skip_sim:
+        # --- Fig. 1 disruption ------------------------------------------
+        from benchmarks import bench_disruption
+
+        t0 = time.time()
+        _, summary = bench_disruption.run(
+            num_nodes=24 if args.full else 12,
+            rounds=8 if args.full else 5,
+            data_scale=0.06 if args.full else 0.03)
+        record("fig1_disruption", t0,
+               f"dechetero drop={summary['dechetero']:+.3f} "
+               f"decdiff+vt drop={summary['decdiff+vt']:+.3f}")
+
+        # --- Table II accuracy + Table IV char-time ---------------------
+        from benchmarks import bench_accuracy, bench_char_time
+
+        t0 = time.time()
+        datasets = (("synth-mnist", "synth-fashion", "synth-emnist")
+                    if args.full else ("synth-mnist",))
+        res = bench_accuracy.run(
+            datasets=datasets,
+            rounds=150 if args.full else 110,
+            num_nodes=30 if args.full else 16,
+            data_scale=0.08 if args.full else 0.04)
+        print(bench_accuracy.format_table(res))
+        first = res[datasets[0]]
+        record("table2_accuracy", t0,
+               f"decdiff+vt={first['decdiff+vt']['acc_mean']:.3f} "
+               f"dechetero={first['dechetero']['acc_mean']:.3f} "
+           f"isol={first['isol']['acc_mean']:.3f}")
+
+        t0 = time.time()
+        ct = bench_char_time.characteristic_times(res)
+        print(bench_char_time.format_table(ct))
+        record("table4_char_time", t0, "from accuracy histories")
+
+        # --- Table III ablation ------------------------------------------
+        from benchmarks import bench_ablation
+
+        t0 = time.time()
+        ab = bench_ablation.run(
+            rounds=150 if args.full else 110,
+            num_nodes=30 if args.full else 16,
+            data_scale=0.08 if args.full else 0.04)
+        print(bench_ablation.format_table(ab))
+        record("table3_ablation", t0,
+               f"decdiff+vt - dechetero = "
+               f"{100*(ab['decdiff+vt']['acc_mean']-ab['dechetero']['acc_mean']):+.2f}%pt")
+
+        if args.full:
+            # --- beyond-paper: topology sensitivity ----------------------
+            from benchmarks import bench_topology
+
+            t0 = time.time()
+            rows = bench_topology.run(rounds=40)
+            record("topology", t0, f"{len(rows)} (topology x method) cells")
+
+    print()
+    for row in csv:
+        print(",".join(str(c) for c in row))
+
+
+if __name__ == "__main__":
+    main()

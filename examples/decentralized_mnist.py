@@ -1,0 +1,35 @@
+"""Paper-style experiment driver: every method on one world instance.
+
+Reduced rendition of the paper's §V setup (ER graph, truncated-Zipf non-IID
+split, SGD+momentum, per-node random init), producing a Table II-like summary
+and a Table IV-like characteristic-time summary.
+
+    PYTHONPATH=src python examples/decentralized_mnist.py [--rounds 60]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_accuracy import format_table, run
+from benchmarks.bench_char_time import characteristic_times, format_table as fmt_ct
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--nodes", type=int, default=20)
+    ap.add_argument("--dataset", default="synth-mnist")
+    args = ap.parse_args()
+    res = run(datasets=(args.dataset,), rounds=args.rounds,
+              num_nodes=args.nodes, data_scale=0.05)
+    print("\n=== Table II (accuracy) ===")
+    print(format_table(res))
+    print("\n=== Table IV (characteristic time) ===")
+    print(fmt_ct(characteristic_times(res)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.registry import get_config, list_archs, ARCH_IDS  # noqa: F401

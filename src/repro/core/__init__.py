@@ -1,0 +1,28 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+  * :mod:`repro.core.decdiff`          — DecDiff aggregation (Eq. 5-6)
+  * :mod:`repro.core.virtual_teacher`  — Virtual-Teacher KL loss (Eq. 7-8)
+  * :mod:`repro.core.aggregation`      — baseline aggregators (DecAvg/CFA/...)
+  * :mod:`repro.core.gossip`           — neighbour-exchange schedules
+"""
+from repro.core.decdiff import (  # noqa: F401
+    decdiff_aggregate,
+    decdiff_aggregate_stacked,
+    decdiff_step,
+    neighborhood_average,
+)
+from repro.core.virtual_teacher import (  # noqa: F401
+    cross_entropy_loss,
+    make_loss_fn,
+    soft_labels,
+    vt_kl_loss,
+)
+from repro.core.aggregation import (  # noqa: F401
+    AGGREGATORS,
+    cfa_aggregate,
+    cfa_ge_gradient_step,
+    decavg_aggregate,
+    fedavg_aggregate,
+    get_aggregator,
+    isolation_aggregate,
+)

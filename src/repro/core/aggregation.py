@@ -1,0 +1,155 @@
+"""Aggregation strategies: the paper's baselines + our DecDiff.
+
+All aggregators share one signature, operating on *stacked* neighbour models
+(leading axis = padded neighbour slot) so the multi-node simulator can vmap a
+whole network's aggregation step.  `mask` marks which slots hold a real,
+delivered model this round (the paper imposes no synchronization: a node may
+receive from only a fraction of its neighbours).
+
+Implemented strategies (paper §III-C and §V-B.5):
+
+  * ``decavg``    — Decentralized Federated Average, Eq. (4).  Coordinate-wise
+                    weighted average of the local model and the neighbours'.
+                    With common init this is "DecAvg"; with per-node random
+                    init it is the paper's "DecHetero" baseline (the init is a
+                    property of the experiment, not of the aggregator).
+  * ``cfa``       — Consensus-based Federated Averaging (Savazzi et al.),
+                    Eq. (9): w_i += eps * Σ_j p_ij (w_j - w_i), eps = 1/|N_i|.
+  * ``decdiff``   — the paper's proposal, Eq. (5)+(6) (see core/decdiff.py).
+  * ``none``      — isolation (no aggregation; the ISOL baseline).
+
+CFA-GE (CFA + gradient exchange) additionally consumes neighbour *gradients*
+and lives in :func:`cfa_ge_gradient_step`; the exchange itself is orchestrated
+by the simulator since it requires neighbours to evaluate gradients of *our*
+model on *their* data (doubling communication — the paper's point of
+comparison for communication efficiency).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decdiff import decdiff_aggregate_stacked
+
+Aggregator = Callable  # (local, stacked_neighbors, weights, mask, **kw) -> new local
+
+
+def _masked_weights(weights, mask):
+    w = jnp.asarray(weights, jnp.float32)
+    if mask is not None:
+        w = w * jnp.asarray(mask, jnp.float32)
+    return w
+
+
+def decavg_aggregate(local_model, stacked_neighbors, weights, mask=None,
+                     self_weight=None, **_):
+    """Eq. (4): coordinate-wise average of {local} ∪ {delivered neighbours}.
+
+    `weights` are the combined ω_ij * p_ij factors for the neighbour slots;
+    `self_weight` the corresponding ω_ii * p_ii for the local model (defaults
+    to the mean neighbour weight, i.e. the local model counts like one more
+    neighbour).  We normalize by the total weight so the result is a convex
+    combination (the paper's Eq. 4 normalizes by Σω; for unit ω and
+    Σ_j p_ij = 1 the two coincide up to scale — a convex combination is the
+    numerically sane reading and matches FedAvg's behaviour on a star).
+    """
+    w = _masked_weights(weights, mask)
+    if self_weight is None:
+        n_active = jnp.maximum(jnp.sum((w > 0).astype(jnp.float32)), 1.0)
+        sw = jnp.sum(w) / n_active
+    else:
+        sw = jnp.asarray(self_weight, jnp.float32)
+    total = jnp.sum(w) + sw
+    wn = w / total
+
+    def leaf(li, st):
+        neigh = jnp.tensordot(wn, st.astype(jnp.float32), axes=(0, 0))
+        return ((sw / total) * li.astype(jnp.float32) + neigh).astype(li.dtype)
+
+    return jax.tree.map(leaf, local_model, stacked_neighbors)
+
+
+def cfa_aggregate(local_model, stacked_neighbors, weights, mask=None,
+                  eps=None, **_):
+    """Eq. (9): w_i <- w_i + eps Σ_j p_ij (w_j - w_i), eps = 1/Δ (follow-up
+    work's setting, which the paper adopts).
+
+    `weights` here carry the p_ij data-size factors; ω_ij (graph weights) are
+    folded in by the caller identically to the other aggregators.
+    """
+    w = _masked_weights(weights, mask)
+    total = jnp.sum(w)
+    safe_total = jnp.where(total > 0, total, 1.0)
+    p = w / safe_total  # p_ij normalized over the delivered neighbours
+    n_active = jnp.sum((w > 0).astype(jnp.float32))
+    if eps is None:
+        eps_val = jnp.where(n_active > 0, 1.0 / jnp.maximum(n_active, 1.0), 0.0)
+    else:
+        eps_val = jnp.asarray(eps, jnp.float32)
+    gate = jnp.where(total > 0, 1.0, 0.0)
+
+    def leaf(li, st):
+        lf = li.astype(jnp.float32)
+        delta = jnp.tensordot(p, st.astype(jnp.float32) - lf[None], axes=(0, 0))
+        return (lf + gate * eps_val * delta).astype(li.dtype)
+
+    return jax.tree.map(leaf, local_model, stacked_neighbors)
+
+
+def isolation_aggregate(local_model, stacked_neighbors, weights, mask=None, **_):
+    """ISOL baseline: ignore the neighbourhood entirely."""
+    del stacked_neighbors, weights, mask
+    return local_model
+
+
+def cfa_ge_gradient_step(local_model, stacked_grads, weights, mask=None,
+                         lr: float = 1.0, **_):
+    """CFA-GE second phase: apply neighbour-computed gradients.
+
+    After the CFA aggregation, node i receives ∇F_j(w_i) from each neighbour
+    j (gradients of the *neighbour's* local loss evaluated at i's model — the
+    "speed-up" implementation evaluates them at the previous round's model)
+    and descends along their p_ij-weighted mean.
+    """
+    w = _masked_weights(weights, mask)
+    total = jnp.sum(w)
+    safe_total = jnp.where(total > 0, total, 1.0)
+    p = w / safe_total
+    gate = jnp.where(total > 0, 1.0, 0.0)
+
+    def leaf(li, sg):
+        g = jnp.tensordot(p, sg.astype(jnp.float32), axes=(0, 0))
+        return (li.astype(jnp.float32) - gate * lr * g).astype(li.dtype)
+
+    return jax.tree.map(leaf, local_model, stacked_grads)
+
+
+def fedavg_aggregate(stacked_models, weights):
+    """Server-side FedAvg: p_i-weighted average over *all* clients.
+
+    Used by the partially-decentralised FED baseline (star topology)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return jax.tree.map(
+        lambda st: jnp.tensordot(w, st.astype(jnp.float32), axes=(0, 0)).astype(st.dtype),
+        stacked_models,
+    )
+
+
+AGGREGATORS: Dict[str, Aggregator] = {
+    "decavg": decavg_aggregate,
+    "cfa": cfa_aggregate,
+    "decdiff": decdiff_aggregate_stacked,
+    "none": isolation_aggregate,
+}
+
+
+def get_aggregator(name: str) -> Aggregator:
+    try:
+        return AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; available: {sorted(AGGREGATORS)}"
+        ) from None

@@ -1,0 +1,4 @@
+from repro.data.synth import SynthDataset, make_dataset, DATASETS  # noqa: F401
+from repro.data.allocation import zipf_allocation, gini_index, split_by_allocation  # noqa: F401
+from repro.data.pipeline import minibatches, Batcher  # noqa: F401
+from repro.data.tokens import synthetic_token_batch, lm_input_specs  # noqa: F401

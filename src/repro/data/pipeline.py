@@ -1,0 +1,46 @@
+"""Minimal-but-real data pipeline: deterministic shuffled minibatching.
+
+Two entry points:
+  * :func:`minibatches` — host-side generator over numpy arrays (used by the
+    centralized / FedAvg baselines and examples).
+  * :class:`Batcher` — device-side modular-gather batcher usable inside
+    jit/vmap (used by the multi-node simulator where each of N nodes draws
+    from its own padded shard with its own rng-free deterministic schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def minibatches(x: np.ndarray, y: np.ndarray, batch_size: int, *, rng: np.random.Generator,
+                drop_remainder: bool = True) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    n = len(x)
+    order = rng.permutation(n)
+    end = (n // batch_size) * batch_size if drop_remainder else n
+    for s in range(0, max(end, 0), batch_size):
+        ix = order[s : s + batch_size]
+        yield x[ix], y[ix]
+
+
+@dataclasses.dataclass(frozen=True)
+class Batcher:
+    """Deterministic stride-gather batching inside jit.
+
+    For node-local data padded to [M, ...] with `count` real samples, batch b
+    takes indices (b*bs + arange(bs)) * stride mod count.  A coprime-ish odd
+    stride decorrelates consecutive batches without needing a shuffle
+    (important inside vmap where per-node permutations would be ragged).
+    """
+
+    batch_size: int
+    stride: int = 7919  # prime
+
+    def take(self, x: jnp.ndarray, y: jnp.ndarray, count: jnp.ndarray, step: jnp.ndarray):
+        base = step.astype(jnp.int32) * self.batch_size
+        idx = (base + jnp.arange(self.batch_size, dtype=jnp.int32)) * self.stride
+        idx = idx % jnp.maximum(count.astype(jnp.int32), 1)
+        return jnp.take(x, idx, axis=0), jnp.take(y, idx, axis=0)

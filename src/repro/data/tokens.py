@@ -1,0 +1,36 @@
+"""Synthetic LM token streams + ShapeDtypeStruct input specs.
+
+For the assigned large architectures the "dataset" is a next-token-prediction
+stream.  Offline, we provide (a) a deterministic synthetic token generator
+with Zipfian unigram statistics and short-range Markov structure (so models
+actually reduce loss during smoke training), and (b) `lm_input_specs` — the
+allocation-free ShapeDtypeStruct stand-ins used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+
+def synthetic_token_batch(batch: int, seq_len: int, vocab: int, seed: int = 0
+                          ) -> Dict[str, np.ndarray]:
+    """Zipf-unigram + order-1 Markov synthetic tokens with labels = shift."""
+    rng = np.random.default_rng(seed)
+    v_eff = min(vocab, 4096)  # concentrate mass; large vocab tails unused
+    ranks = np.arange(1, v_eff + 1, dtype=np.float64)
+    p = 1.0 / ranks**1.1
+    p /= p.sum()
+    toks = rng.choice(v_eff, size=(batch, seq_len + 1), p=p).astype(np.int32)
+    # short-range structure: with prob .5 copy-shift the previous token + 1
+    copy = rng.random((batch, seq_len)) < 0.5
+    toks[:, 1:][copy] = (toks[:, :-1][copy] + 1) % v_eff
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def lm_input_specs(batch: int, seq_len: int, dtype=np.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), dtype),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), dtype),
+    }

@@ -1,0 +1,104 @@
+"""Local training building blocks shared by the simulator and baselines.
+
+Provides the jitted per-node SGD step factory (used under vmap by the
+multi-node simulator) and a standalone centralized trainer (the paper's upper
+bound benchmark).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.virtual_teacher import cross_entropy_loss, make_loss_fn
+from repro.data.pipeline import minibatches
+from repro.models.api import SmallModel
+from repro.optim.sgd import Optimizer
+
+
+def make_train_step(model: SmallModel, optimizer: Optimizer, loss_fn: Callable):
+    """Returns step(params, opt_state, x, y, step_idx, rng) -> (params, opt, loss)."""
+
+    def loss_of(params, x, y, rng):
+        logits = model.apply(params, x, train=True, rng=rng)
+        return loss_fn(logits, y)
+
+    def step(params, opt_state, x, y, step_idx, rng):
+        loss, grads = jax.value_and_grad(loss_of)(params, x, y, rng)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step_idx)
+        return new_params, new_opt, loss
+
+    return step
+
+
+def make_grad_fn(model: SmallModel, loss_fn: Callable):
+    """grad(params, x, y, rng) of the local loss — used by CFA-GE's exchange."""
+
+    def loss_of(params, x, y, rng):
+        logits = model.apply(params, x, train=True, rng=rng)
+        return loss_fn(logits, y)
+
+    return jax.grad(loss_of)
+
+
+def make_eval_fn(model: SmallModel, batch_size: int = 512):
+    """Returns eval(params, x_test, y_test) -> (accuracy, mean CE loss).
+
+    Scans over fixed-size test chunks so it can sit under vmap (per-node
+    evaluation) without materializing [N, test_size, ...] activations."""
+
+    def eval_fn(params, x_test, y_test):
+        n = x_test.shape[0]
+        n_batches = n // batch_size  # test sets are sized divisible in benches
+        used = n_batches * batch_size
+        xb = x_test[:used].reshape(n_batches, batch_size, *x_test.shape[1:])
+        yb = y_test[:used].reshape(n_batches, batch_size)
+
+        def body(carry, xy):
+            correct, loss_sum = carry
+            x, y = xy
+            logits = model.apply(params, x, train=False, rng=None)
+            pred = jnp.argmax(logits, axis=-1)
+            correct = correct + jnp.sum(pred == y)
+            loss_sum = loss_sum + cross_entropy_loss(logits, y) * batch_size
+            return (correct, loss_sum), None
+
+        (correct, loss_sum), _ = jax.lax.scan(
+            body, (jnp.int32(0), jnp.float32(0.0)), (xb, yb)
+        )
+        return correct / used, loss_sum / used
+
+    return eval_fn
+
+
+def centralized_train(model: SmallModel, optimizer: Optimizer,
+                      x_train: np.ndarray, y_train: np.ndarray,
+                      x_test: np.ndarray, y_test: np.ndarray,
+                      epochs: int, batch_size: int, seed: int = 0,
+                      loss: str = "ce", beta: float = 0.95,
+                      eval_every: int = 1) -> Tuple[dict, list]:
+    """The paper's Centralized benchmark: all data on one server."""
+    rng = np.random.default_rng(seed)
+    loss_fn = make_loss_fn(loss, beta=beta)
+    step_fn = jax.jit(make_train_step(model, optimizer, loss_fn))
+    eval_fn = jax.jit(make_eval_fn(model, batch_size=min(512, len(x_test))))
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = optimizer.init(params)
+    history = []
+    step_idx = 0
+    drop_key = jax.random.PRNGKey(seed + 1)
+    for epoch in range(epochs):
+        for x, y in minibatches(x_train, y_train, batch_size, rng=rng):
+            drop_key, sub = jax.random.split(drop_key)
+            params, opt_state, _ = step_fn(
+                params, opt_state, jnp.asarray(x), jnp.asarray(y),
+                jnp.int32(step_idx), sub,
+            )
+            step_idx += 1
+        if (epoch + 1) % eval_every == 0 or epoch == epochs - 1:
+            acc, tloss = eval_fn(params, jnp.asarray(x_test), jnp.asarray(y_test))
+            history.append({"epoch": epoch, "acc": float(acc), "loss": float(tloss)})
+    return params, history

@@ -1,0 +1,70 @@
+"""Mapping an FL communication graph onto TPU pods.
+
+In the production deployment (DESIGN.md §3) each DFL participant is a pod:
+the `pod` mesh axis enumerates graph nodes, and gossip becomes a ring of
+`lax.ppermute` steps.  For graphs larger than the pod count we partition the
+graph into `num_pods` groups (greedy modularity-ish BFS partition) and each
+pod simulates its group's nodes locally, gossiping only the cut edges.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.graphs.topology import Topology
+
+
+def map_graph_to_pods(topo: Topology, num_pods: int) -> List[List[int]]:
+    """Partition graph nodes into `num_pods` balanced, connectivity-aware
+    groups.  Returns a list of node-id lists, one per pod."""
+    n = topo.num_nodes
+    if num_pods >= n:
+        return [[i] for i in range(n)] + [[] for _ in range(num_pods - n)]
+    target = -(-n // num_pods)  # ceil
+    unassigned = set(range(n))
+    groups: List[List[int]] = []
+    while unassigned:
+        # seed with the highest-degree unassigned node, grow by BFS.
+        seed = max(unassigned, key=lambda u: topo.degrees[u])
+        group = [seed]
+        unassigned.discard(seed)
+        frontier = [seed]
+        while len(group) < target and frontier:
+            u = frontier.pop(0)
+            for v in np.nonzero(topo.adjacency[u])[0]:
+                v = int(v)
+                if v in unassigned and len(group) < target:
+                    group.append(v)
+                    unassigned.discard(v)
+                    frontier.append(v)
+        # if BFS stalled (disconnected remainder) take arbitrary nodes.
+        while len(group) < target and unassigned:
+            v = unassigned.pop()
+            group.append(v)
+        groups.append(group)
+        if len(groups) == num_pods:
+            # dump any remainder into the last groups round-robin.
+            for k, v in enumerate(sorted(unassigned)):
+                groups[k % num_pods].append(v)
+            unassigned.clear()
+    while len(groups) < num_pods:
+        groups.append([])
+    return groups
+
+
+def pod_adjacency(topo: Topology, groups: List[List[int]]) -> np.ndarray:
+    """Quotient adjacency between pods: pods are neighbours iff any cut edge
+    connects their groups.  Edge weight = summed ω over the cut."""
+    p = len(groups)
+    where = np.zeros(topo.num_nodes, np.int64)
+    for g, nodes in enumerate(groups):
+        for u in nodes:
+            where[u] = g
+    w = np.zeros((p, p), np.float32)
+    for u in range(topo.num_nodes):
+        for v in np.nonzero(topo.adjacency[u])[0]:
+            gu, gv = where[u], where[int(v)]
+            if gu != gv:
+                w[gu, gv] += topo.weights[u, int(v)]
+    return w

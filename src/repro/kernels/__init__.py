@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  decdiff_update — fused global-L2 + attenuated step (Eq. 5) over the
+                   flattened model (two streaming passes, block reductions)
+  vt_kl_loss     — fused virtual-teacher KL over the vocab axis (Eq. 8),
+                   closed form, custom_vjp with fused softmax-p_t backward
+  neighbor_avg   — weighted average of stacked neighbour models (Eq. 6)
+  decode_attention — fused one-token GQA attention over the ring KV cache
+                   (the serving hot spot; online softmax over cache tiles)
+
+`ops` holds the jit'd public wrappers (auto interpret=True off-TPU);
+`ref` holds the pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    decdiff_update,
+    decdiff_update_tree,
+    decode_attention_fused,
+    neighbor_avg,
+    vt_kl_loss_fused,
+)

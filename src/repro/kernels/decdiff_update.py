@@ -1,0 +1,71 @@
+"""Pallas kernel: fused DecDiff update (paper Eq. 5) over the flat model.
+
+The model (possibly billions of parameters) is flattened to a 1-D fp32
+stream, viewed as [rows, 128] for TPU lane alignment.  Two streaming passes:
+
+  pass A  block-wise Σ(w̄-w)² partial reduction  → [n_blocks] partials
+          (host combines + sqrt: d = ||w̄-w||₂, one scalar)
+  pass B  w' = w + (w̄-w) · scale, scale = 1/(d+s) broadcast from a (1,1)
+          block pinned to grid position 0
+
+Both passes are memory-bound streaming kernels: block (256, 128) fp32 =
+128 KiB per operand, 3 operands live → < 0.5 MiB VMEM, far under the ~16 MiB
+budget; larger blocks would not change the HBM-bound roofline.  The MXU is
+not involved — this is a VPU elementwise/reduce workload; the (8,128)-aligned
+second-minor/minor dims are what matters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 256  # (256, 128) fp32 = 128 KiB per ref
+
+
+def _sumsq_kernel(w_ref, wbar_ref, out_ref):
+    d = wbar_ref[...] - w_ref[...]
+    out_ref[0, 0] = jnp.sum(d * d)
+
+
+def _step_kernel(w_ref, wbar_ref, scale_ref, out_ref):
+    scale = scale_ref[0, 0]
+    out_ref[...] = w_ref[...] + (wbar_ref[...] - w_ref[...]) * scale
+
+
+def sumsq_diff_blocks(w2d: jnp.ndarray, wbar2d: jnp.ndarray, *,
+                      interpret: bool = False) -> jnp.ndarray:
+    """[R, 128] x2 -> [n_blocks, 1] partial Σ(w̄-w)² (R % BLOCK_ROWS == 0)."""
+    rows = w2d.shape[0]
+    n_blocks = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        _sumsq_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+        interpret=interpret,
+    )(w2d, wbar2d)
+
+
+def scaled_step_blocks(w2d: jnp.ndarray, wbar2d: jnp.ndarray, scale: jnp.ndarray,
+                       *, interpret: bool = False) -> jnp.ndarray:
+    """w + (w̄-w)*scale, scale is a [1,1] array broadcast to every block."""
+    rows = w2d.shape[0]
+    n_blocks = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        _step_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(w2d.shape, jnp.float32),
+        interpret=interpret,
+    )(w2d, wbar2d, scale)

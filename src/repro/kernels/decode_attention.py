@@ -1,0 +1,114 @@
+"""Pallas kernel: fused one-token GQA attention over a ring KV cache.
+
+Decode (serve_step) is the serving hot spot: per token it streams the whole
+KV cache (window W) from HBM once — a pure memory-bound op that XLA splits
+into separate score/softmax/combine kernels with [B,H,W] round trips.  This
+kernel fuses the three into one pass with an online softmax over W-tiles:
+
+  grid (B-blocks, W-blocks); per q-head-group block:
+    s_w   = q · k_w * scale + mask(slot_pos_w)
+    m,l,acc online-softmax accumulate;  out = acc / l  at the last W-block
+
+Masking reproduces layers.decode_attention semantics: a slot participates
+iff slot_pos >= 0 and slot_pos <= pos (ring buffer holds only live entries;
+a sliding window is implied by ring-buffer overwrite).
+
+Blocks: W-tile 512 slots x (K_h, hd) with K_h*hd <= 1024 lanes-worth; the
+working set per step is k/v tiles (512*K*hd*2 bytes) + q — few hundred KiB,
+VMEM-safe.  The B dim is tiled by 8 rows for the sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_BLK = 8
+W_BLK = 512
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, sp_ref, pos_ref,
+                        o_ref, m_ref, l_ref, *, scale: float, w_blk: int):
+    """Blocks:
+      q  [B_BLK, H, hd]      (same block for every w-step)
+      k  [B_BLK, W_BLK, K, hd]
+      v  [B_BLK, W_BLK, K, hd]
+      sp [W_BLK]             slot positions (absolute, -1 empty)
+      pos [1, 1]             current absolute position
+      o  [B_BLK, H, hd]      output (revisited across w-steps)
+      m,l [B_BLK, H]         running max / normalizer (scratch outputs)
+    """
+    j = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)  # [B,H,hd]
+    k = k_ref[...].astype(jnp.float32)  # [B,W,K,hd]
+    v = v_ref[...].astype(jnp.float32)
+    bb, h, hd = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    qg = q.reshape(bb, kk, g, hd)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k) * scale  # [B,K,G,W]
+
+    pos = pos_ref[0, 0]
+    sp = sp_ref[...]
+    ok = (sp >= 0) & (sp <= pos)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+
+    m_new_blk = jnp.max(s, axis=-1).reshape(bb, h)  # [B,H]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = m_new_blk
+        p = jnp.exp(s - m_new_blk.reshape(bb, kk, g)[..., None])
+        l_ref[...] = jnp.sum(p, axis=-1).reshape(bb, h)
+        o_ref[...] = jnp.einsum("bkgw,bwkd->bkgd", p, v).reshape(bb, h, hd)
+
+    @pl.when(j > 0)
+    def _acc():
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, m_new_blk)
+        alpha = jnp.exp(m_old - m_new)  # [B,H]
+        p = jnp.exp(s - m_new.reshape(bb, kk, g)[..., None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1).reshape(bb, h)
+        o_ref[...] = (o_ref[...] * alpha[..., None]
+                      + jnp.einsum("bkgw,bwkd->bkgd", p, v).reshape(bb, h, hd))
+        m_ref[...] = m_new
+
+
+def decode_attention_blocks(q, k_cache, v_cache, slot_pos, pos, *,
+                            interpret: bool = False):
+    """q [B,H,hd]; k/v [B,W,K,hd]; slot_pos [W]; pos scalar int32.
+
+    Returns attention output [B,H,hd] (fp32).  B % 8 == 0, W % 512 == 0
+    (ops.py pads)."""
+    b, h, hd = q.shape
+    w = k_cache.shape[1]
+    kk = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    grid = (b // B_BLK, w // W_BLK)
+    kern = functools.partial(_decode_attn_kernel, scale=scale, w_blk=W_BLK)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B_BLK, h, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((B_BLK, W_BLK, kk, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((B_BLK, W_BLK, kk, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((W_BLK,), lambda i, j: (j,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B_BLK, h, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((B_BLK, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((B_BLK, h), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, slot_pos, pos)
+    return out / jnp.maximum(l[..., None], 1e-30)

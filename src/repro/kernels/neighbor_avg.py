@@ -1,0 +1,42 @@
+"""Pallas kernel: weighted neighbour-model average (paper Eq. 6).
+
+stacked [N, D] neighbour parameter rows x normalized weights [N] -> [D].
+The neighbour count N is small (graph degree, <= 64) while D is the model
+size, so the kernel streams D in (N, COLS) tiles: one tile = N*2048 fp32
+<= 512 KiB VMEM.  The reduction over N is a tiny vector-matrix product on
+the VPU; HBM streaming of the stacked models is the bound, as expected for
+an aggregation op.
+
+Weights are pre-normalized by the wrapper (ops.neighbor_avg), keeping the
+kernel a pure weighted sum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COLS = 2048
+
+
+def _avg_kernel(stacked_ref, w_ref, out_ref):
+    out_ref[...] = jnp.einsum(
+        "n,nd->d", w_ref[...], stacked_ref[...],
+        preferred_element_type=jnp.float32)
+
+
+def neighbor_avg_blocks(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                        interpret: bool = False) -> jnp.ndarray:
+    n, d = stacked.shape
+    assert d % COLS == 0, d
+    return pl.pallas_call(
+        _avg_kernel,
+        grid=(d // COLS,),
+        in_specs=[
+            pl.BlockSpec((n, COLS), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((COLS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(stacked, weights)

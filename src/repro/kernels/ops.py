@@ -1,0 +1,158 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles padding to tile boundaries, the pytree <-> flat-stream view, the
+custom_vjp wiring for the fused VT loss, and automatic `interpret=True` when
+not running on TPU (this container is CPU-only; interpret mode executes the
+kernel bodies in Python for correctness validation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.virtual_teacher import teacher_entropy
+from repro.kernels import decdiff_update as _dd
+from repro.kernels import neighbor_avg as _na
+from repro.kernels import vt_kl_loss as _vt
+from repro.utils.pytree import tree_flatten_to_vector
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, multiple, value=0.0):
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1), constant_values=value)
+    return x
+
+
+# ------------------------------------------------------------- decdiff
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def decdiff_update(w_flat, wbar_flat, s: float = 1.0, interpret=None):
+    """Eq. 5 on flat vectors via the two-pass Pallas stream."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = w_flat.shape[0]
+    tile = _dd.BLOCK_ROWS * _dd.LANES
+    w = _pad_to(w_flat.astype(jnp.float32), tile).reshape(-1, _dd.LANES)
+    wb = _pad_to(wbar_flat.astype(jnp.float32), tile).reshape(-1, _dd.LANES)
+    # pad region contributes (wb-w)=0 to the norm because both pads are 0.
+    partials = _dd.sumsq_diff_blocks(w, wb, interpret=interpret)
+    d = jnp.sqrt(jnp.sum(partials))
+    scale = (1.0 / (d + s)).reshape(1, 1)
+    out = _dd.scaled_step_blocks(w, wb, scale, interpret=interpret)
+    return out.reshape(-1)[:n].astype(w_flat.dtype)
+
+
+def decdiff_update_tree(params, avg_params, s: float = 1.0, interpret=None):
+    """Pytree-level DecDiff step backed by the flat-stream kernel."""
+    w, unflatten = tree_flatten_to_vector(params)
+    wbar, _ = tree_flatten_to_vector(avg_params)
+    return unflatten(decdiff_update(w, wbar, s=s, interpret=interpret))
+
+
+# ------------------------------------------------------------- vt loss
+
+
+def _vt_stats(z, labels, interpret):
+    b, v = z.shape
+    zp = jnp.pad(z, ((0, (-b) % _vt.ROWS), (0, (-v) % _vt.VCOLS)))
+    lp = jnp.pad(labels.astype(jnp.int32), (0, (-b) % _vt.ROWS),
+                 constant_values=-1)
+    mx = _vt.row_max(zp, v, interpret=interpret)
+    stats = _vt.row_stats(zp, lp, mx, v, interpret=interpret)
+    return zp, lp, mx, stats
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def vt_kl_loss_fused(logits, labels, beta: float = 0.95, interpret=None):
+    """Mean KL(p_t || softmax(logits)) — Eq. 8 — fused over the vocab axis.
+
+    logits [B, V] (fp32/bf16), labels [B] int32.  custom_vjp: backward is the
+    fused (softmax - p_t) kernel, so autodiff never materializes the teacher.
+    """
+    loss, _ = _vt_fwd(logits, labels, beta, interpret)
+    return loss
+
+
+def _vt_loss_from_stats(z, labels, mx, stats, beta):
+    b, v = z.shape
+    sumexp, zsum, zc = stats[:b, 0], stats[:b, 1], stats[:b, 2]
+    mxb = mx[:b]
+    lse = jnp.log(sumexp) + mxb
+    a = (1.0 - beta) / (v - 1)
+    cross = beta * zc + a * (zsum - zc) - lse
+    return jnp.mean(-teacher_entropy(beta, v) - cross)
+
+
+def _vt_fwd(logits, labels, beta, interpret):
+    interpret = _interpret_default() if interpret is None else interpret
+    z = logits.astype(jnp.float32)
+    zp, lp, mx, stats = _vt_stats(z, labels, interpret)
+    loss = _vt_loss_from_stats(z, labels, mx, stats, beta)
+    return loss, (logits, zp, lp, mx, stats)
+
+
+def _vt_bwd(beta, interpret, res, g):
+    interpret_ = _interpret_default() if interpret is None else interpret
+    logits, zp, lp, mx, statsp = res
+    b, v = logits.shape
+    dtype = logits.dtype
+    sumexp = jnp.pad(statsp[:, 0], (0, zp.shape[0] - statsp.shape[0]),
+                     constant_values=1.0)
+    gscale = (g / b).reshape(1, 1).astype(jnp.float32)
+    grad = _vt.vt_backward(zp, lp, mx, sumexp, gscale, beta=beta, vocab=v,
+                           interpret=interpret_)
+    return grad[:b, :v].astype(dtype), None
+
+
+vt_kl_loss_fused.defvjp(_vt_fwd, _vt_bwd)
+
+
+# ------------------------------------------------------------- decode attn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_fused(q, k_cache, v_cache, slot_pos, pos, interpret=None):
+    """Fused one-token GQA attention over a ring cache (serve hot spot).
+
+    q [B,H,hd]; k/v [B,W,K,hd]; slot_pos [W] absolute positions (-1 empty);
+    pos scalar current position.  Matches layers.decode_attention's
+    score/softmax/combine (output fp32)."""
+    from repro.kernels import decode_attention as _da
+
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, hd = q.shape
+    w = k_cache.shape[1]
+    pad_b = (-b) % _da.B_BLK
+    pad_w = (-w) % _da.W_BLK
+    qp = jnp.pad(q.astype(jnp.float32), ((0, pad_b), (0, 0), (0, 0)))
+    kp = jnp.pad(k_cache, ((0, pad_b), (0, pad_w), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, pad_b), (0, pad_w), (0, 0), (0, 0)))
+    spp = jnp.pad(slot_pos.astype(jnp.int32), (0, pad_w), constant_values=-1)
+    pos2 = jnp.reshape(pos.astype(jnp.int32), (1, 1))
+    out = _da.decode_attention_blocks(qp, kp, vp, spp, pos2,
+                                      interpret=interpret)
+    return out[:b]
+
+
+# ------------------------------------------------------------- neighbor avg
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def neighbor_avg(stacked, weights, interpret=None):
+    """Eq. 6: normalized ω_ij p_ij-weighted average of stacked [N, D] rows."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = stacked.shape
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    pad = (-d) % _na.COLS
+    sp = jnp.pad(stacked.astype(jnp.float32), ((0, 0), (0, pad)))
+    out = _na.neighbor_avg_blocks(sp, w, interpret=interpret)
+    return out[:d]

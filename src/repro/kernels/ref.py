@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decdiff_update_ref(w: jnp.ndarray, wbar: jnp.ndarray, s: float = 1.0):
+    """Eq. 5 on flat fp32 vectors: w + (wbar-w)/(||wbar-w|| + s)."""
+    w32 = w.astype(jnp.float32)
+    diff = wbar.astype(jnp.float32) - w32
+    d = jnp.sqrt(jnp.sum(diff * diff))
+    return (w32 + diff / (d + s)).astype(w.dtype)
+
+
+def vt_kl_loss_ref(logits: jnp.ndarray, labels: jnp.ndarray, beta: float):
+    """Eq. 8 mean KL(p_t || softmax(z)) with the materialized teacher."""
+    z = logits.astype(jnp.float32)
+    v = z.shape[-1]
+    a = (1.0 - beta) / (v - 1)
+    onehot = jax.nn.one_hot(labels, v, dtype=jnp.float32)
+    p_t = onehot * beta + (1.0 - onehot) * a
+    logp = jax.nn.log_softmax(z, axis=-1)
+    log_pt = jnp.log(jnp.maximum(p_t, 1e-30))
+    return jnp.mean(jnp.sum(p_t * (log_pt - logp), axis=-1))
+
+
+def vt_kl_grad_ref(logits: jnp.ndarray, labels: jnp.ndarray, beta: float):
+    """d(mean KL)/d logits = (softmax(z) - p_t) / n_rows."""
+    z = logits.astype(jnp.float32)
+    v = z.shape[-1]
+    a = (1.0 - beta) / (v - 1)
+    onehot = jax.nn.one_hot(labels, v, dtype=jnp.float32)
+    p_t = onehot * beta + (1.0 - onehot) * a
+    p = jax.nn.softmax(z, axis=-1)
+    return (p - p_t) / z.shape[0]
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_pos, pos):
+    """One-token GQA attention over a ring cache — mirrors
+    repro.models.lm.layers.decode_attention's math (fp32)."""
+    q32 = q.astype(jnp.float32)
+    b, h, hd = q32.shape
+    kk = k_cache.shape[2]
+    g = h // kk
+    qg = q32.reshape(b, kk, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k_cache.astype(jnp.float32)) * scale
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bwkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd)
+
+
+def neighbor_avg_ref(stacked: jnp.ndarray, weights: jnp.ndarray):
+    """Eq. 6 on a stacked [N, D] matrix: normalized weighted average."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    return jnp.einsum("n,nd->d", w, stacked.astype(jnp.float32))

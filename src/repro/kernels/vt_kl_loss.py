@@ -1,0 +1,140 @@
+"""Pallas kernel: fused Virtual-Teacher KL loss (paper Eq. 7-8) over vocab.
+
+For LM-scale class counts (|L| up to 152k) the teacher distribution must
+never be materialized.  Using the closed form (core/virtual_teacher.py):
+
+  KL_row = -H(p_t) - [ β z_c + a (Σz - z_c) - lse(z) ],  a = (1-β)/(V-1)
+
+only four per-row reductions over V are needed: max, Σexp(z-max), Σz, z_c.
+Kernels:
+
+  pass 1  row max             — grid (nb, nv), running maximum
+  pass 2  (Σexp, Σz, z_c)     — grid (nb, nv), running sums using pass-1 max;
+          z_c found by comparing lane ids against the label (no gather)
+  bwd     (softmax(z) - p_t)·g — one streaming pass, recomputes exp from the
+          saved (max, Σexp) row stats; p_t reconstructed from lane-id compare
+
+Blocks are (ROWS=128, VCOLS=512): 256 KiB fp32 per operand — VMEM-safe with
+headroom for the three stat rows.  Grid iterates v-blocks innermost so the
+running reductions accumulate in the (revisited) output block, the standard
+TPU sequential-grid pattern.
+
+The public wrapper (ops.vt_kl_loss_fused) attaches a custom_vjp so the fused
+backward replaces the O(B·V) autodiff chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 128
+VCOLS = 512
+NEG = -1e30
+
+
+def _max_kernel(z_ref, mx_ref, *, vcols: int, vocab: int):
+    j = pl.program_id(1)
+    col = jax.lax.broadcasted_iota(jnp.int32, z_ref.shape, 1) + j * vcols
+    m = jnp.max(jnp.where(col < vocab, z_ref[...], NEG), axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        mx_ref[...] = m
+
+    @pl.when(j > 0)
+    def _acc():
+        mx_ref[...] = jnp.maximum(mx_ref[...], m)
+
+
+def _stats_kernel(z_ref, lab_ref, mx_ref, out_ref, *, vcols: int, vocab: int):
+    """out [ROWS, 3]: (Σ exp(z-max), Σ z, z_c) accumulated over v-blocks.
+
+    Padding lanes (col >= vocab) are masked INSIDE the kernel — correcting a
+    -1e30 pad contribution afterwards would cancel catastrophically in fp32."""
+    j = pl.program_id(1)
+    z = z_ref[...]
+    mx = mx_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) + j * vcols
+    valid = col < vocab
+    e = jnp.where(valid, jnp.exp(z - mx[:, None]), 0.0)
+    zm = jnp.where(valid, z, 0.0)
+    hit = col == lab_ref[...][:, None]
+    zc = jnp.sum(jnp.where(hit, z, 0.0), axis=1)
+    part = jnp.stack([jnp.sum(e, axis=1), jnp.sum(zm, axis=1), zc], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + part
+
+
+def _bwd_kernel(z_ref, lab_ref, mx_ref, sumexp_ref, gscale_ref, out_ref, *,
+                vcols: int, beta: float, vocab: int):
+    j = pl.program_id(1)
+    z = z_ref[...]
+    p = jnp.exp(z - mx_ref[...][:, None]) / sumexp_ref[...][:, None]
+    col = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) + j * vcols
+    hit = col == lab_ref[...][:, None]
+    a = (1.0 - beta) / (vocab - 1)
+    p_t = jnp.where(hit, beta, a)
+    valid = col < vocab  # padding lanes carry no teacher mass
+    out_ref[...] = jnp.where(valid, (p - p_t) * gscale_ref[0, 0], 0.0)
+
+
+def row_max(z, vocab: int, *, interpret=False):
+    b, v = z.shape
+    grid = (b // ROWS, v // VCOLS)
+    kern = functools.partial(_max_kernel, vcols=VCOLS, vocab=vocab)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, VCOLS), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ROWS,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(z)
+
+
+def row_stats(z, labels, mx, vocab: int, *, interpret=False):
+    b, v = z.shape
+    grid = (b // ROWS, v // VCOLS)
+    kern = functools.partial(_stats_kernel, vcols=VCOLS, vocab=vocab)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, VCOLS), lambda i, j: (i, j)),
+            pl.BlockSpec((ROWS,), lambda i, j: (i,)),
+            pl.BlockSpec((ROWS,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 3), jnp.float32),
+        interpret=interpret,
+    )(z, labels, mx)
+
+
+def vt_backward(z, labels, mx, sumexp, gscale, *, beta: float, vocab: int,
+                interpret=False):
+    b, v = z.shape
+    grid = (b // ROWS, v // VCOLS)
+    kern = functools.partial(_bwd_kernel, vcols=VCOLS, beta=beta, vocab=vocab)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, VCOLS), lambda i, j: (i, j)),
+            pl.BlockSpec((ROWS,), lambda i, j: (i,)),
+            pl.BlockSpec((ROWS,), lambda i, j: (i,)),
+            pl.BlockSpec((ROWS,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, VCOLS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
+        interpret=interpret,
+    )(z, labels, mx, sumexp, gscale)

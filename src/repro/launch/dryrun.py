@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers and compiles.
+
+For each combination this driver builds ShapeDtypeStruct stand-ins for every
+input (no allocation), assigns in_shardings from repro.dist.sharding, lowers
+and compiles the appropriate step, and records:
+
+  * memory_analysis()  — per-device bytes (argument/output/temp),
+  * cost_analysis()    — HLO FLOPs / bytes-accessed,
+  * collective traffic — parsed from the post-SPMD HLO (hlo_analysis),
+
+into artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline stage.
+
+Steps per shape (see DESIGN.md §4):
+  train_4k     -> train_step (single-pod) / DFL round with DecDiff gossip
+                  over the pod axis (multi-pod — this is the paper's
+                  technique running between pods)
+  prefill_32k  -> prefill_step (forward)
+  decode_32k   -> serve_step: ONE token against a seq_len KV cache
+  long_500k    -> serve_step with sub-quadratic state: native for SSM/hybrid,
+                  SWA window for mixtral, ring-buffer window (8192) for
+                  full-attention archs (flagged as the sliding-window variant)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.dfl_step import (
+    build_dfl_round,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+from repro.dist.sharding import (
+    make_batch_specs,
+    make_cache_specs,
+    make_param_specs,
+    named,
+)
+from repro.launch.hlo_analysis import (
+    collective_bytes,
+    cost_analysis_dict,
+    memory_analysis_dict,
+)
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models.lm import build_lm
+from repro.optim.sgd import sgd_momentum
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+LONG_WINDOW = 8192  # ring-buffer window for full-attention archs at 500k
+
+# §Perf variants (EXPERIMENTS.md §Perf): named config overrides measured
+# against the paper-faithful baseline via --variant.
+VARIANTS = {
+    "zero3": {"zero3_gather": True},
+    "moelocal": {"moe_dispatch": "batch_local"},
+    "expertpar": {"moe_dispatch": "batch_local", "expert_parallel": True},
+    "gossipbf16": {"_gossip_dtype": "bfloat16"},  # DFL rounds only
+    "moelocal+seqshard": {"moe_dispatch": "batch_local",
+                          "residual_shard": "batch_seq"},
+    "seqshard+gossipbf16": {"residual_shard": "batch_seq",
+                            "_gossip_dtype": "bfloat16"},
+    "shardmap": {"_dfl_shardmap": True},
+    "shardmap+seqshard": {"_dfl_shardmap": True,
+                          "residual_shard": "batch_seq"},
+    "shardmap+seqshard+gossipbf16": {"_dfl_shardmap": True,
+                                     "residual_shard": "batch_seq",
+                                     "_gossip_dtype": "bfloat16"},
+    "moelocal+bf16probs": {"moe_dispatch": "batch_local",
+                           "attn_probs_bf16": True},
+    "seqshard": {"residual_shard": "batch_seq"},
+    "bf16probs": {"attn_probs_bf16": True},
+    "zero3+bf16probs": {"zero3_gather": True, "attn_probs_bf16": True},
+    "zero3+seqshard": {"zero3_gather": True, "residual_shard": "batch_seq"},
+    "all": {"zero3_gather": True, "attn_probs_bf16": True,
+            "residual_shard": "batch_seq"},
+}
+
+
+def _adapt_config(cfg, shape_name: str, layer_override=None):
+    """Per-shape config adjustments (documented in DESIGN.md §4)."""
+    layer_override = {k: v for k, v in (layer_override or {}).items()
+                      if not k.startswith("_")}
+    over = {}
+    if shape_name == "long_500k" and cfg.family in ("dense", "vlm", "encdec"):
+        # sliding-window variant: ring-buffer decode cache bounds state.
+        over["decode_window"] = LONG_WINDOW
+    if shape_name == "train_4k":
+        over["remat"] = True
+    else:
+        over["remat"] = False
+    if layer_override:
+        over.update(layer_override)
+    return dataclasses.replace(cfg, **over)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def lower_combo(arch: str, shape_name: str, mesh_kind: str, layer_override=None):
+    """Returns (lowered, compiled, meta) for one combination."""
+    seq_len, global_batch, kind = SHAPES[shape_name]
+    gossip_dtype = (layer_override or {}).get("_gossip_dtype")
+    dfl_shardmap = (layer_override or {}).get("_dfl_shardmap", False)
+    cfg = _adapt_config(get_config(arch), shape_name, layer_override)
+    lm = build_lm(cfg)
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_pods = mesh.shape.get("pod", 1)
+    optimizer = sgd_momentum(lr=1e-3, momentum=0.9, momentum_dtype=jnp.float32)
+
+    params_a = _abstract(lambda: lm.init(jax.random.PRNGKey(0)))
+    meta = dict(arch=arch, shape=shape_name, mesh=mesh_kind, seq_len=seq_len,
+                global_batch=global_batch, kind=kind,
+                mesh_shape={k: int(v) for k, v in mesh.shape.items()})
+
+    with mesh:
+        if kind == "train" and multi:
+            # DFL round: one FL node per pod, ring adjacency over pods.
+            adj = np.zeros((n_pods, n_pods), np.float32)
+            for i in range(n_pods):
+                adj[i, (i + 1) % n_pods] = adj[i, (i - 1) % n_pods] = 1.0
+            adj /= np.maximum(adj.sum(1, keepdims=True), 1)
+            keys = jax.random.split(jax.random.PRNGKey(0), n_pods)
+            params_st = _abstract(lambda: jax.vmap(lm.init)(keys))
+            opt_st = _abstract(lambda p: jax.vmap(optimizer.init)(p), params_st)
+            per_node_batch = global_batch // n_pods
+            batch_a = {
+                k: jax.ShapeDtypeStruct((n_pods, per_node_batch) + v.shape[1:], v.dtype)
+                for k, v in lm.input_specs(global_batch, seq_len).items()
+            }
+            p_specs = named(make_param_specs(params_st, mesh, dfl_node_axis=True,
+                                             expert_parallel=cfg.expert_parallel), mesh)
+            o_specs = {"momentum": p_specs}
+            b_specs = named(make_batch_specs(batch_a, mesh, dfl_node_axis=True), mesh)
+            gd = jnp.dtype(gossip_dtype) if gossip_dtype else None
+            if dfl_shardmap:
+                from repro.dist.dfl_step import build_dfl_round_shardmap
+
+                step_fn = build_dfl_round_shardmap(lm, optimizer, adj, mesh,
+                                                   gossip_dtype=gd)
+            else:
+                step_fn = build_dfl_round(lm, optimizer, jnp.asarray(adj),
+                                          gossip_dtype=gd)
+            jitted = jax.jit(step_fn, in_shardings=(p_specs, o_specs, None, b_specs),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_st, opt_st,
+                                   jax.ShapeDtypeStruct((), jnp.int32), batch_a)
+        elif kind == "train":
+            opt_a = _abstract(optimizer.init, params_a)
+            batch_a = lm.input_specs(global_batch, seq_len)
+            p_specs = named(make_param_specs(params_a, mesh,
+                                             expert_parallel=cfg.expert_parallel), mesh)
+            o_specs = {"momentum": p_specs}
+            b_specs = named(make_batch_specs(batch_a, mesh), mesh)
+            step_fn = build_train_step(lm, optimizer)
+            jitted = jax.jit(step_fn, in_shardings=(p_specs, o_specs, None, b_specs),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_a, opt_a,
+                                   jax.ShapeDtypeStruct((), jnp.int32), batch_a)
+        elif kind == "prefill":
+            batch_a = lm.input_specs(global_batch, seq_len)
+            p_specs = named(make_param_specs(params_a, mesh,
+                                             expert_parallel=cfg.expert_parallel), mesh)
+            dp = ("pod", "data") if multi else ("data",)
+            b_specs = named(make_batch_specs(batch_a, mesh, dp_axes=dp), mesh)
+            step_fn = build_prefill_step(lm)
+            jitted = jax.jit(step_fn, in_shardings=(p_specs, b_specs))
+            lowered = jitted.lower(params_a, batch_a)
+        else:  # decode
+            cache_a = _abstract(lambda: lm.init_cache(global_batch, seq_len))
+            tokens_a = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+            p_specs = named(make_param_specs(params_a, mesh,
+                                             expert_parallel=cfg.expert_parallel), mesh)
+            c_specs = named(make_cache_specs(cache_a, mesh), mesh)
+            t_specs = named(make_batch_specs(tokens_a, mesh), mesh)
+            step_fn = build_serve_step(lm)
+            jitted = jax.jit(step_fn, in_shardings=(p_specs, c_specs, t_specs),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_a, cache_a, tokens_a)
+            meta["cache_bytes_global"] = int(sum(
+                np.prod(v.shape) * np.dtype(v.dtype).itemsize
+                for v in jax.tree.leaves(cache_a)))
+
+    meta["param_count"] = int(cfg.param_count())
+    meta["active_param_count"] = int(cfg.active_param_count())
+    compiled = lowered.compile()
+    return lowered, compiled, meta
+
+
+def roofline_terms(meta, cost, coll, n_chips: int):
+    """The three roofline terms in seconds (TPU v5e constants).
+
+    cost_analysis() on an SPMD-partitioned module reports PER-PARTITION
+    FLOPs/bytes (verified against analytic 6ND), and the parsed collective
+    bytes are per-device operand volumes — so every term is already
+    per-chip; no further division by n_chips."""
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    coll_b = float(coll.get("total", 0))
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = bytes_acc / HW["hbm_bw"]
+    t_coll = coll_b / HW["ici_bw"]
+    return {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+
+
+def _calibration_points(cfg):
+    """Layer-count overrides used to linearize scan-body costs.
+
+    XLA's HloCostAnalysis counts while-loop bodies ONCE (verified), so the
+    full compile underreports flops/bytes/collectives inside scan-over-layers
+    by ~L.  We compile the same step with 1 and 2 layers (full widths) and
+    extrapolate linearly; the hybrid family needs a third point to separate
+    the per-mamba-layer and per-shared-block terms."""
+    base = {
+        # unroll every scan so flops/bytes/collectives are counted per
+        # iteration; enlarge attention chunks so the (q,kv)-block grid is
+        # small enough to unroll — total flops are chunk-size invariant
+        # because the baseline computes every block and masks.
+        "scan_unroll": True,
+        "attn_chunk_q": 4096,
+        "attn_chunk_kv": 8192,
+        "remat": False,  # remat doubles counted fwd flops; measure pure cost
+    }
+    if cfg.family == "hybrid":
+        return [
+            dict(base, n_layers=1, shared_attn_every=1),
+            dict(base, n_layers=2, shared_attn_every=2),
+            dict(base, n_layers=2, shared_attn_every=1),
+        ]
+    if cfg.family == "encdec":
+        return [dict(base, n_layers=1, n_enc_layers=1),
+                dict(base, n_layers=2, n_enc_layers=2)]
+    return [dict(base, n_layers=1), dict(base, n_layers=2)]
+
+
+def _metrics_of(compiled):
+    cost = cost_analysis_dict(compiled)
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": cost.get("flops", 0.0),
+           "bytes_accessed": cost.get("bytes accessed", 0.0),
+           "transcendentals": cost.get("transcendentals", 0.0)}
+    for k, v in coll.items():
+        if not k.endswith("_count"):
+            out["coll_" + k] = float(v)
+    return out
+
+
+def _combine(a, b, fa, fb):
+    keys = set(a) | set(b)
+    return {k: fa * a.get(k, 0.0) + fb * b.get(k, 0.0) for k in keys}
+
+
+def calibrated_metrics(arch: str, shape_name: str, mesh_kind: str,
+                       variant_override=None):
+    """Linear per-layer extrapolation of per-chip flops/bytes/collectives."""
+    cfg = get_config(arch)
+    pts = _calibration_points(cfg)
+    ms = []
+    for ov in pts:
+        if variant_override:
+            ov = dict(ov, **variant_override)
+        _, comp, _ = lower_combo(arch, shape_name, mesh_kind, layer_override=ov)
+        ms.append(_metrics_of(comp))
+    if cfg.family == "hybrid":
+        c1, c2, c3 = ms
+        m_layer = _combine(c2, c1, 1.0, -1.0)  # one mamba layer
+        s_block = _combine(c3, c2, 1.0, -1.0)  # one shared block
+        ovh = _combine(_combine(c1, m_layer, 1.0, -1.0), s_block, 1.0, -1.0)
+        g = cfg.n_layers // cfg.shared_attn_every
+        total = _combine(_combine(ovh, s_block, 1.0, float(g)),
+                         m_layer, 1.0, float(cfg.n_layers))
+    else:
+        c1, c2 = ms
+        per_layer = _combine(c2, c1, 1.0, -1.0)
+        total = _combine(c1, per_layer, 1.0, float(cfg.n_layers - 1))
+    return {k: max(v, 0.0) for k, v in total.items()}
+
+
+def model_flops_per_chip(cfg, shape_name: str, n_chips: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train (8·N·D with remat counted as useful
+    is NOT done — remat recompute is overhead by definition), 2·N·D forward.
+    MoE uses active params."""
+    seq_len, global_batch, kind = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens / n_chips
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens / n_chips
+    tokens = global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens / n_chips
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+            force: bool = False, variant: str = None,
+            variant_override: dict = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}".replace("/", "_")
+    if variant:
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "ok": False,
+           "variant": variant or "baseline",
+           "variant_override": variant_override or {}}
+    try:
+        lowered, compiled, meta = lower_combo(arch, shape_name, mesh_kind,
+                                              layer_override=variant_override)
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        cost = cost_analysis_dict(compiled)
+        mem = memory_analysis_dict(compiled)
+        n_chips = int(np.prod(list(meta["mesh_shape"].values())))
+        rec.update(meta)
+        rec["ok"] = True
+        rec["compile_s"] = time.time() - t0
+        rec["cost_analysis"] = cost
+        rec["memory_analysis"] = mem
+        rec["collectives"] = coll
+        rec["n_chips"] = n_chips
+        # calibrated (scan-aware) per-chip totals -> the roofline uses these
+        cal = calibrated_metrics(arch, shape_name, mesh_kind,
+                                 variant_override=variant_override)
+        rec["calibrated"] = cal
+        cost_cal = {"flops": cal.get("flops", 0.0),
+                    "bytes accessed": cal.get("bytes_accessed", 0.0)}
+        coll_cal = {"total": cal.get("coll_total", 0.0)}
+        rec["roofline"] = roofline_terms(meta, cost_cal, coll_cal, n_chips)
+        rec["roofline_uncalibrated"] = roofline_terms(meta, cost, coll, n_chips)
+        cfg_full = get_config(arch)
+        mf = model_flops_per_chip(cfg_full, shape_name, n_chips)
+        rec["model_flops_per_chip"] = mf
+        rec["useful_flops_ratio"] = (mf / cal["flops"]) if cal.get("flops") else None
+        if mem:
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)
+                       + mem.get("output_size_in_bytes", 0))
+            rec["bytes_per_device"] = per_dev
+            rec["fits_hbm"] = bool(per_dev <= HW["hbm_bytes"])
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["compile_s"] = time.time() - t0
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="sweep all combos")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", choices=sorted(VARIANTS), default=None,
+                    help="apply a §Perf config variant (writes tagged artifact)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_one(arch, shape, mesh_kind, args.out, force=args.force,
+                              variant=args.variant,
+                              variant_override=VARIANTS.get(args.variant))
+                status = "OK " if rec.get("ok") else "FAIL"
+                extra = ""
+                if rec.get("ok"):
+                    r = rec["roofline"]
+                    extra = (f"compute {r['compute_s']*1e3:.2f}ms "
+                             f"mem {r['memory_s']*1e3:.2f}ms "
+                             f"coll {r['collective_s']*1e3:.2f}ms "
+                             f"[{rec.get('compile_s', 0):.0f}s compile]")
+                    n_ok += 1
+                else:
+                    extra = rec.get("error", "")[:160]
+                    n_fail += 1
+                print(f"[{status}] {arch:24s} {shape:12s} {mesh_kind:6s} {extra}",
+                      flush=True)
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

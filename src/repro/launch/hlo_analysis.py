@@ -1,0 +1,120 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+`compiled.cost_analysis()` reports FLOPs and bytes-accessed but NOT collective
+traffic, so we parse the optimized HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute /
+collective-broadcast op (per-op-type breakdown kept for the §Perf loop).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device *operand* bytes per collective-op type, summed module-wide.
+
+    Post-SPMD HLO shows per-partition shapes.  Operands are referenced by
+    name (no inline shape), so we derive operand bytes from the RESULT shape:
+      all-reduce / collective-permute / all-to-all : operand == result
+      all-gather   : operand = result / group_size (gathered dim grows by G)
+      reduce-scatter: operand = result * group_size
+    `-done` halves of async pairs are skipped (the `-start` was counted).
+    """
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    count: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result, op, startdone = m.groups()
+        if startdone == "-done":
+            continue
+        b = _shape_bytes(result)
+        g = _group_size(line)
+        if op == "all-gather":
+            b = b // g
+        elif op == "reduce-scatter":
+            b = b * g
+        out[op] += b
+        count[op] += 1
+    total = sum(out.values())
+    summary = {"total": total}
+    for op in COLLECTIVE_OPS:
+        if count[op]:
+            summary[op] = out[op]
+            summary[op + "_count"] = count[op]
+    return summary
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}

@@ -1,0 +1,1 @@
+from repro.models.api import SmallModel, make_small_model, SMALL_MODELS  # noqa: F401

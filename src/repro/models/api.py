@@ -1,0 +1,41 @@
+"""Model API for the paper-scale (simulator) models.
+
+A :class:`SmallModel` is an (init, apply) pair over plain dict pytrees:
+  init(rng) -> params
+  apply(params, x, *, train=False, rng=None) -> logits
+
+The large assigned architectures use the richer interface in
+:mod:`repro.models.lm` (forward / prefill / decode with KV caches).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+
+class SmallModel(NamedTuple):
+    name: str
+    init: Callable
+    apply: Callable
+    num_classes: int
+
+
+SMALL_MODELS: Dict[str, Callable[..., SmallModel]] = {}
+
+
+def register_small_model(name: str):
+    def deco(fn):
+        SMALL_MODELS[name] = fn
+        return fn
+
+    return deco
+
+
+def make_small_model(name: str, **kwargs) -> SmallModel:
+    import repro.models.mlp_cnn  # noqa: F401  (populate registry)
+
+    try:
+        return SMALL_MODELS[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown small model {name!r}; available: {sorted(SMALL_MODELS)}"
+        ) from None

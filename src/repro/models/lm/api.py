@@ -1,0 +1,131 @@
+"""Unified LM interface over the six architecture families.
+
+    lm = build_lm(cfg)
+    params = lm.init(rng)
+    logits, aux = lm.forward(params, batch)          # batch: dict
+    loss, metrics = lm.loss(params, batch)           # VT-KL or CE next-token
+    cache = lm.init_cache(batch_size, seq_len)       # decode state
+    logits, cache = lm.decode_step(params, cache, tokens)   # [B,1]
+    specs = lm.input_specs(batch, seq_len)           # ShapeDtypeStructs
+
+The training loss is the paper's Virtual Teacher KL (Eq. 8) applied to
+next-token prediction (the closed-form vocab reduction — see
+core/virtual_teacher.py), selectable vs plain CE via cfg-independent args.
+MoE families add the router load-balance auxiliary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.virtual_teacher import cross_entropy_loss, vt_kl_loss
+from repro.models.lm.config import ArchConfig
+from repro.models.lm import dense, encdec, hybrid, moe, ssm, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable  # (params, batch) -> (logits, aux)
+    init_cache: Callable  # (batch, seq_len) -> cache
+    decode_step: Callable  # (params, cache, tokens[B,1]) -> (logits, cache)
+    input_specs: Callable  # (batch, seq_len) -> dict[str, ShapeDtypeStruct]
+    prep_decode_cache: Optional[Callable] = None  # encdec: fill cross K/V
+
+    def loss(self, params, batch, *, loss_kind: str = "vt", beta: float = 0.98):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if loss_kind == "vt":
+            main = vt_kl_loss(logits, labels, beta=beta)
+        else:
+            main = cross_entropy_loss(logits, labels)
+        total = main + self.cfg.router_aux_weight * aux
+        return total, {"loss": main, "aux": aux}
+
+
+def _token_specs(batch: int, seq_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    }
+
+
+def build_lm(cfg: ArchConfig) -> LM:
+    fam = cfg.family
+    if fam == "dense":
+        def fwd(params, batch):
+            return dense.forward_dense(cfg, params, batch["tokens"]), 0.0
+
+        return LM(cfg, lambda rng: dense.init_dense(rng, cfg), fwd,
+                  lambda b, s: dense.init_cache_dense(cfg, b, s),
+                  lambda p, c, t: dense.decode_step_dense(cfg, p, c, t),
+                  _token_specs)
+
+    if fam == "moe":
+        def fwd(params, batch):
+            return moe.forward_moe(cfg, params, batch["tokens"])
+
+        return LM(cfg, lambda rng: moe.init_moe_lm(rng, cfg), fwd,
+                  lambda b, s: moe.init_cache_moe(cfg, b, s),
+                  lambda p, c, t: moe.decode_step_moe(cfg, p, c, t),
+                  _token_specs)
+
+    if fam == "ssm":
+        def fwd(params, batch):
+            return ssm.forward_ssm(cfg, params, batch["tokens"]), 0.0
+
+        return LM(cfg, lambda rng: ssm.init_ssm_lm(rng, cfg), fwd,
+                  lambda b, s: ssm.init_cache_ssm(cfg, b, s),
+                  lambda p, c, t: ssm.decode_step_ssm(cfg, p, c, t),
+                  _token_specs)
+
+    if fam == "hybrid":
+        def fwd(params, batch):
+            return hybrid.forward_hybrid(cfg, params, batch["tokens"]), 0.0
+
+        return LM(cfg, lambda rng: hybrid.init_hybrid_lm(rng, cfg), fwd,
+                  lambda b, s: hybrid.init_cache_hybrid(cfg, b, s),
+                  lambda p, c, t: hybrid.decode_step_hybrid(cfg, p, c, t),
+                  _token_specs)
+
+    if fam == "encdec":
+        def fwd(params, batch):
+            return encdec.forward_encdec(cfg, params, batch), 0.0
+
+        def specs(batch, seq_len):
+            enc_len = max(seq_len // cfg.enc_seq_divisor, 1)
+            return dict(
+                _token_specs(batch, seq_len),
+                enc_embeds=jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model),
+                                                cfg.adtype),
+            )
+
+        return LM(cfg, lambda rng: encdec.init_encdec(rng, cfg), fwd,
+                  lambda b, s: encdec.init_cache_encdec(cfg, b, s),
+                  lambda p, c, t: encdec.decode_step_encdec(cfg, p, c, t),
+                  specs,
+                  prep_decode_cache=lambda p, c, e: encdec.prefill_cross_cache(cfg, p, c, e))
+
+    if fam == "vlm":
+        def fwd(params, batch):
+            return vlm.forward_vlm(cfg, params, batch), 0.0
+
+        def specs(batch, seq_len):
+            s_text = max(seq_len - cfg.img_tokens, 1)
+            return {
+                "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+                "img_embeds": jax.ShapeDtypeStruct((batch, cfg.img_tokens, cfg.d_model),
+                                                   cfg.adtype),
+            }
+
+        return LM(cfg, lambda rng: vlm.init_vlm(rng, cfg), fwd,
+                  lambda b, s: vlm.init_cache_vlm(cfg, b, s),
+                  lambda p, c, t: vlm.decode_step_vlm(cfg, p, c, t),
+                  specs)
+
+    raise ValueError(f"unknown family {fam!r}")

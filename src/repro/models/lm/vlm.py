@@ -1,0 +1,52 @@
+"""LLaVA-NeXT (mistral-7b backbone) — VLM with stubbed vision tower.
+
+Per the assignment carve-out, the SigLIP/CLIP vision encoder + projector are
+a STUB: batches carry precomputed, already-projected patch embeddings
+[B, img_tokens, D] (anyres tiling: 576 base + 4x576 tile tokens = 2880).
+The language model is a dense mistral trunk; image embeddings are prepended
+to the text token embeddings, and the LM loss is computed on text positions
+only (image positions are masked out of the label loss).
+
+Decode: the KV cache covers the full multimodal sequence; prefill would have
+populated the image+prompt prefix, decode_step appends text tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dist.constraints import constrain_batch, constrain_logits
+from repro.models.lm.config import ArchConfig
+from repro.models.lm.dense import (
+    decode_step_dense,
+    forward_dense,
+    init_cache_dense,
+    init_dense,
+    trunk,
+)
+from repro.models.lm.layers import embed, unembed
+
+
+def init_vlm(rng, cfg: ArchConfig):
+    return init_dense(rng, cfg)
+
+
+def forward_vlm(cfg: ArchConfig, params, batch):
+    """batch: tokens [B,S_text], img_embeds [B,I,D] -> logits [B,S_text,V].
+
+    The full sequence is [img ; text]; positions run across both.  Only text
+    positions produce logits (callers compute loss on text labels)."""
+    tokens = batch["tokens"]
+    img = batch["img_embeds"].astype(cfg.adtype)
+    b, s_text = tokens.shape
+    i = img.shape[1]
+    x_text = embed(cfg, params["embed"], tokens)
+    x = constrain_batch(jnp.concatenate([img, x_text], axis=1))
+    positions = jnp.arange(i + s_text, dtype=jnp.int32)
+    x = trunk(cfg, params, x, positions)
+    x = x[:, i:, :]  # text positions only
+    return constrain_logits(unembed(cfg, params.get("unembed"), params["embed"], x))
+
+
+init_cache_vlm = init_cache_dense
+decode_step_vlm = decode_step_dense  # decode is text-only, standard path
+forward_text_only = forward_dense  # convenience for tests

@@ -1,0 +1,124 @@
+"""Optimizers, from scratch (no optax in this environment).
+
+The paper trains with SGD + momentum (eta=0.001; mu=0.5 for MNIST, 0.9 for
+Fashion/EMNIST).  We implement that faithfully, plus AdamW and LR schedules
+for the large-architecture training driver.
+
+Design: functional, pytree-based, mirrors the (init, update) pattern so any
+optimizer slots into the trainer, the vmapped simulator, and the sharded
+train_step (optimizer state shards with the same PartitionSpec as params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> opt_state
+    update: Callable  # (grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def sgd_momentum(lr=1e-3, momentum: float = 0.9, nesterov: bool = False,
+                 weight_decay: float = 0.0, momentum_dtype=jnp.float32) -> Optimizer:
+    """SGD with (heavy-ball) momentum — the paper's optimizer.
+
+    PyTorch-convention momentum: v <- mu*v + g;  w <- w - lr*v.
+    """
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {"momentum": jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            v_new = momentum * v.astype(jnp.float32) + g32
+            d = g32 + momentum * v_new if nesterov else v_new
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), v_new.astype(momentum_dtype)
+
+        out = jax.tree.map(upd, grads, state["momentum"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"momentum": new_mom}
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr=3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        t = step.astype(jnp.float32) + 1.0 if hasattr(step, "astype") else jnp.float32(step) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                    m_new.astype(state_dtype), v_new.astype(state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(lambda o, _i=i: o[_i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer(init=init, update=update)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "sgdm"
+    lr: float = 1e-3
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "constant"  # constant | cosine
+
+
+def make_optimizer(cfg: Optional[OptimizerConfig] = None, **overrides) -> Optimizer:
+    cfg = dataclasses.replace(cfg or OptimizerConfig(), **overrides)
+    lr: Callable = (
+        cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)
+        if cfg.schedule == "cosine"
+        else constant_schedule(cfg.lr)
+    )
+    if cfg.name in ("sgd", "sgdm"):
+        return sgd_momentum(lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    if cfg.name == "adamw":
+        return adamw(lr=lr, weight_decay=cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

@@ -1,0 +1,123 @@
+"""Pytree arithmetic helpers used across the framework.
+
+Every model/optimizer state in this codebase is a plain pytree (nested dicts
+of jnp arrays).  The decentralized-learning algorithms (DecDiff, DecAvg, CFA,
+...) are defined as *pytree-level* operations so they are agnostic to the
+architecture of the model being trained — an MLP on MNIST-like data and a
+480B-parameter MoE use the exact same aggregation code paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Global inner product over all leaves (fp32 accumulation)."""
+    parts = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree.reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_sq_norm(a):
+    """Global squared L2 norm over all leaves (fp32 accumulation)."""
+    parts = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return jax.tree.reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_l2_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_l2_dist(a, b):
+    return tree_l2_norm(tree_sub(a, b))
+
+
+def tree_weighted_sum(trees, weights):
+    """Sum_k weights[k] * trees[k].  `trees` is a list of like-structured
+    pytrees; `weights` a 1-D array/list of scalars."""
+    assert len(trees) == len(weights) and len(trees) > 0
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda o, x, _w=w: o + _w * x, out, t)
+    return out
+
+
+def tree_stack(trees):
+    """Stack a list of like-structured pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of tree_stack: split the leading axis into a list of n trees."""
+    return [jax.tree.map(lambda x, _i=i: x[_i], tree) for i in range(n)]
+
+
+def tree_index(tree, i):
+    """Take index i along the leading axis of every leaf."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters."""
+    return int(sum(x.size for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_flatten_to_vector(tree):
+    """Concatenate all leaves into one flat fp32 vector (for analysis and the
+    Pallas flat-stream kernels).  Returns (vector, unflatten_fn)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [l.size for l in leaves]
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(v):
+        out, off = [], 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            out.append(v[off : off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return vec, unflatten
+
+
+def tree_random_like(rng, tree, scale=1.0):
+    """Random-normal pytree with the same structure/shapes (for tests)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    new = [
+        (jax.random.normal(k, l.shape, jnp.float32) * scale).astype(l.dtype)
+        for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, new)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src layout without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on the real (single) CPU device — the 512-device override is
+# dryrun.py-only by design.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

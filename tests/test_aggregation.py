@@ -1,0 +1,98 @@
+"""Baseline aggregators: DecAvg (Eq. 4), CFA (Eq. 9), FedAvg, CFA-GE step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (
+    cfa_aggregate,
+    cfa_ge_gradient_step,
+    decavg_aggregate,
+    fedavg_aggregate,
+    get_aggregator,
+    isolation_aggregate,
+)
+from repro.utils.pytree import tree_l2_dist, tree_random_like, tree_stack
+
+
+def _tree(seed, scale=1.0):
+    proto = {"w": jnp.zeros((3, 4)), "b": jnp.zeros((5,))}
+    return tree_random_like(jax.random.PRNGKey(seed), proto, scale=scale)
+
+
+def test_decavg_is_convex_combination():
+    local = _tree(0)
+    n1, n2 = _tree(1), _tree(2)
+    out = decavg_aggregate(local, tree_stack([n1, n2]), jnp.asarray([1.0, 1.0]),
+                           self_weight=1.0)
+    expect = jax.tree.map(lambda a, b, c: (a + b + c) / 3, local, n1, n2)
+    assert tree_l2_dist(out, expect) < 1e-5
+
+
+def test_decavg_weights():
+    local = _tree(0)
+    n1, n2 = _tree(1), _tree(2)
+    out = decavg_aggregate(local, tree_stack([n1, n2]), jnp.asarray([3.0, 1.0]),
+                           self_weight=0.0)
+    expect = jax.tree.map(lambda a, b: 0.75 * a + 0.25 * b, n1, n2)
+    assert tree_l2_dist(out, expect) < 1e-5
+
+
+def test_cfa_eps_full_consensus_two_nodes():
+    """With one neighbour, eps = 1/1 moves exactly to the neighbour's model."""
+    local, other = _tree(0), _tree(1)
+    out = cfa_aggregate(local, tree_stack([other]), jnp.ones(1))
+    assert tree_l2_dist(out, other) < 1e-5
+
+
+def test_cfa_fixed_point_at_consensus():
+    local = _tree(0)
+    out = cfa_aggregate(local, tree_stack([local, local]), jnp.ones(2))
+    assert tree_l2_dist(out, local) < 1e-6
+
+
+def test_cfa_masked_all_keeps_local():
+    local = _tree(0)
+    out = cfa_aggregate(local, tree_stack([_tree(1)]), jnp.ones(1),
+                        mask=jnp.zeros(1))
+    assert tree_l2_dist(out, local) == 0.0
+
+
+def test_fedavg_weighted():
+    m1, m2 = _tree(1), _tree(2)
+    out = fedavg_aggregate(tree_stack([m1, m2]), jnp.asarray([3.0, 1.0]))
+    expect = jax.tree.map(lambda a, b: 0.75 * a + 0.25 * b, m1, m2)
+    assert tree_l2_dist(out, expect) < 1e-5
+
+
+def test_decavg_on_complete_graph_equals_fedavg():
+    """DecAvg on a complete graph with p_ij data weights == server FedAvg."""
+    models = [_tree(i) for i in range(4)]
+    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    fed = fedavg_aggregate(tree_stack(models), sizes)
+    # node 0's neighbourhood = {1,2,3}; self weight = own size
+    out0 = decavg_aggregate(models[0], tree_stack(models[1:]), sizes[1:],
+                            self_weight=sizes[0])
+    assert tree_l2_dist(fed, out0) < 1e-5
+
+
+def test_cfa_ge_gradient_step():
+    local = _tree(0)
+    g1, g2 = _tree(3, 0.1), _tree(4, 0.1)
+    out = cfa_ge_gradient_step(local, tree_stack([g1, g2]),
+                               jnp.asarray([1.0, 1.0]), lr=0.5)
+    expect = jax.tree.map(lambda p, a, b: p - 0.5 * (a + b) / 2, local, g1, g2)
+    assert tree_l2_dist(out, expect) < 1e-5
+
+
+def test_isolation_identity():
+    local = _tree(0)
+    assert isolation_aggregate(local, None, None) is local
+
+
+def test_registry():
+    assert get_aggregator("decdiff") is not None
+    try:
+        get_aggregator("bogus")
+        raise AssertionError
+    except ValueError:
+        pass

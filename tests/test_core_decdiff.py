@@ -1,0 +1,109 @@
+"""Unit + property tests for DecDiff (paper Eq. 5-6)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.decdiff import (
+    decdiff_aggregate,
+    decdiff_aggregate_stacked,
+    decdiff_step,
+    neighborhood_average,
+)
+from repro.utils.pytree import (
+    tree_l2_dist,
+    tree_l2_norm,
+    tree_random_like,
+    tree_stack,
+    tree_sub,
+)
+
+
+def _tree(seed, scale=1.0):
+    proto = {"a": jnp.zeros((4, 5)), "b": {"w": jnp.zeros((7,)), "v": jnp.zeros((2, 3))}}
+    return tree_random_like(jax.random.PRNGKey(seed), proto, scale=scale)
+
+
+def test_average_excludes_local_model():
+    """Eq. 6 averages only the neighbours (w̄ is a reference point)."""
+    n1, n2 = _tree(1), _tree(2)
+    avg = neighborhood_average([n1, n2], [1.0, 1.0])
+    expect = jax.tree.map(lambda a, b: (a + b) / 2, n1, n2)
+    assert tree_l2_dist(avg, expect) < 1e-6
+
+
+def test_fixed_point_at_average():
+    """w == w̄ -> step is exactly zero (0/(0+s))."""
+    w = _tree(0)
+    out = decdiff_step(w, w)
+    assert tree_l2_dist(out, w) == 0.0
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.01, 100.0),
+       s=st.floats(1.0, 10.0))
+def test_never_overshoots(seed, scale, s):
+    """Applied step length = d/(d+s) < d: the update never crosses w̄."""
+    w = _tree(seed, scale=1.0)
+    wbar = _tree(seed + 1, scale=scale)
+    d = float(tree_l2_dist(wbar, w))
+    out = decdiff_step(w, wbar, s=s)
+    step_len = float(tree_l2_dist(out, w))
+    assert step_len <= d + 1e-4
+    # exact scale: step = d/(d+s)
+    np.testing.assert_allclose(step_len, d / (d + s), rtol=2e-4)
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**16), s=st.floats(1.0, 4.0))
+def test_step_monotone_toward_average(seed, s):
+    """After the update the distance to w̄ strictly decreases (d > 0)."""
+    w, wbar = _tree(seed), _tree(seed + 7, scale=3.0)
+    out = decdiff_step(w, wbar, s=s)
+    assert float(tree_l2_dist(out, wbar)) < float(tree_l2_dist(w, wbar))
+
+
+def test_far_models_move_less_relative():
+    """The farther w̄ is, the smaller the applied scale 1/(d+s) — the
+    anti-disruption property motivating the design."""
+    w = _tree(0)
+    near = decdiff_step(w, _tree(1, scale=0.1))
+    far_target = _tree(1, scale=100.0)
+    far = decdiff_step(w, far_target)
+    # absolute step is bounded by 1 in both cases; relative progress differs
+    d_far = float(tree_l2_dist(far_target, w))
+    prog_far = 1.0 - float(tree_l2_dist(far, far_target)) / d_far
+    assert prog_far < 0.2  # tiny relative progress for far models
+
+
+def test_stacked_matches_list_variant():
+    w = _tree(0)
+    neighbors = [_tree(i + 1) for i in range(3)]
+    weights = [1.0, 2.0, 0.5]
+    a = decdiff_aggregate(w, neighbors, weights)
+    b = decdiff_aggregate_stacked(w, tree_stack(neighbors), jnp.asarray(weights))
+    assert tree_l2_dist(a, b) < 1e-5
+
+
+def test_stacked_mask_drops_neighbors():
+    w = _tree(0)
+    neighbors = [_tree(1), _tree(2), _tree(3)]
+    full = decdiff_aggregate(w, neighbors[:2], [1.0, 1.0])
+    masked = decdiff_aggregate_stacked(
+        w, tree_stack(neighbors), jnp.ones(3), mask=jnp.asarray([1, 1, 0]))
+    assert tree_l2_dist(full, masked) < 1e-5
+
+
+def test_all_masked_keeps_local():
+    w = _tree(0)
+    out = decdiff_aggregate_stacked(
+        w, tree_stack([_tree(1)]), jnp.ones(1), mask=jnp.zeros(1))
+    assert tree_l2_dist(out, w) == 0.0
+
+
+def test_empty_neighborhood_keeps_local():
+    w = _tree(0)
+    assert decdiff_aggregate(w, [], []) is w

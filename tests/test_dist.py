@@ -1,0 +1,118 @@
+"""Distribution layer: sharding rules and the pod-level DFL round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.decdiff import decdiff_aggregate
+from repro.dist.dfl_step import build_dfl_round, decdiff_gossip
+from repro.dist.sharding import (
+    leaf_spec,
+    make_batch_specs,
+    make_cache_specs,
+    make_param_specs,
+)
+from repro.utils.pytree import tree_index, tree_l2_dist, tree_random_like, tree_stack
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single real CPU device: mesh (1,1) — rules still produce named axes
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_leaf_spec_divisibility(mesh):
+    big = jax.make_mesh((1, 1), ("data", "model"))
+    # simulate a 16x16 mesh via a fake mesh-shape mapping
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = leaf_spec((1024, 4096), np.float32, 0, "data", "model", FakeMesh())
+    assert spec == P("data", "model")  # largest dim 4096 -> model, 1024 -> data
+    # non-divisible dims stay unsharded
+    spec = leaf_spec((1000, 56), np.float32, 0, "data", "model", FakeMesh())
+    assert spec == P(None, None)
+    # int leaves replicate
+    spec = leaf_spec((1 << 20,), np.int32, 0, "data", "model", FakeMesh())
+    assert spec == P(None)
+    # small leaves replicate
+    spec = leaf_spec((128,), np.float32, 0, "data", "model", FakeMesh())
+    assert spec == P(None)
+
+
+def test_param_specs_reserve_stack_dims():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    tree = {"layers": {"w": jax.ShapeDtypeStruct((64, 1024, 4096), jnp.float32)},
+            "embed": {"table": jax.ShapeDtypeStruct((151936, 1024), jnp.float32)}}
+    specs = make_param_specs(tree, FakeMesh())
+    assert specs["layers"]["w"][0] is None  # L dim never sharded
+    assert "model" in specs["layers"]["w"]
+    assert specs["embed"]["table"] == P("model", "data")
+
+
+def test_batch_specs():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    tree = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    specs = make_batch_specs(tree, FakeMesh())
+    assert specs["tokens"] == P("data", None)
+    # non-divisible batch replicates
+    tree = {"tokens": jax.ShapeDtypeStruct((3, 4096), jnp.int32)}
+    assert make_batch_specs(tree, FakeMesh())["tokens"] == P(None, None)
+
+
+def test_cache_specs_avoid_window_dim():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    tree = {"k": jax.ShapeDtypeStruct((64, 128, 32768, 8, 128), jnp.bfloat16)}
+    spec = make_cache_specs(tree, FakeMesh())["k"]
+    assert spec[1] == "data" and spec[4] == "model" and spec[2] is None
+
+
+def test_decdiff_gossip_matches_per_node_aggregation():
+    """The pod-axis gossip (adjacency einsum + global-norm step) reproduces
+    the core DecDiff aggregation node by node."""
+    proto = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((32,))}
+    models = [tree_random_like(jax.random.PRNGKey(i), proto) for i in range(4)]
+    stacked = tree_stack(models)
+    # ring adjacency, row-normalized
+    adj = np.zeros((4, 4), np.float32)
+    for i in range(4):
+        adj[i, (i + 1) % 4] = adj[i, (i - 1) % 4] = 0.5
+    out = decdiff_gossip(stacked, jnp.asarray(adj), s=1.0)
+    for i in range(4):
+        neighbors = [models[(i + 1) % 4], models[(i - 1) % 4]]
+        want = decdiff_aggregate(models[i], neighbors, [1.0, 1.0], s=1.0)
+        assert tree_l2_dist(tree_index(out, i), want) < 1e-5
+
+
+def test_dfl_round_runs_and_descends():
+    """2-node DFL round on a tiny LM: loss finite, params move, gossip pulls
+    the two nodes together."""
+    from repro.configs import get_config
+    from repro.models.lm import build_lm
+    from repro.optim.sgd import sgd_momentum
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    lm = build_lm(cfg)
+    opt = sgd_momentum(lr=1e-2, momentum=0.9)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    params_st = jax.vmap(lm.init)(keys)
+    opt_st = jax.vmap(opt.init)(params_st)
+    adj = jnp.asarray([[0.0, 1.0], [1.0, 0.0]], jnp.float32)
+    round_fn = jax.jit(build_dfl_round(lm, opt, adj))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 2, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 2, 32)), jnp.int32),
+    }
+    d0 = tree_l2_dist(tree_index(params_st, 0), tree_index(params_st, 1))
+    new_params, new_opt, loss = round_fn(params_st, opt_st, jnp.int32(0), batch)
+    assert np.isfinite(float(loss))
+    d1 = tree_l2_dist(tree_index(new_params, 0), tree_index(new_params, 1))
+    assert float(d1) < float(d0)  # DecDiff moved the nodes together

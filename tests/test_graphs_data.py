@@ -1,0 +1,121 @@
+"""Topology substrate + non-IID allocation properties."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.data.allocation import (
+    allocation_gini,
+    gini_index,
+    pad_node_datasets,
+    split_by_allocation,
+    zipf_allocation,
+)
+from repro.data.pipeline import Batcher
+from repro.data.synth import make_dataset
+from repro.graphs import make_topology
+from repro.graphs.partition import map_graph_to_pods, pod_adjacency
+
+
+def test_er_connected_above_threshold():
+    topo = make_topology("erdos_renyi", n=50, p=0.2, seed=3)
+    assert topo.connected and topo.num_nodes == 50
+
+
+def test_topology_families():
+    for name, kw in [("barabasi_albert", dict(n=30, m=2)),
+                     ("watts_strogatz", dict(n=30, k=4, p=0.2)),
+                     ("ring", dict(n=10)), ("star", dict(n=10)),
+                     ("complete", dict(n=8)), ("grid2d", dict(rows=3, cols=4))]:
+        topo = make_topology(name, **kw)
+        adj = topo.adjacency
+        assert (adj == adj.T).all() and adj.diagonal().sum() == 0
+        assert topo.connected
+        # padded neighbour lists consistent with adjacency
+        for i in range(topo.num_nodes):
+            nbrs = {int(j) for j in topo.neighbor_idx[i] if j >= 0}
+            assert nbrs == set(np.nonzero(adj[i])[0].tolist())
+
+
+def test_star_degrees():
+    topo = make_topology("star", n=10)
+    assert topo.degrees[0] == 9 and (topo.degrees[1:] == 1).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.floats(0.0, 1e6), min_size=1, max_size=40))
+def test_gini_range(xs):
+    g = gini_index(xs)
+    assert 0.0 <= g <= 1.0
+
+
+def test_gini_known_values():
+    assert gini_index([5, 5, 5, 5]) == 0.0
+    assert gini_index([0, 0, 0, 100]) > 0.7
+
+
+def test_zipf_allocation_partition():
+    """Allocation is a disjoint cover of all samples, min-per-class holds."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 3000)
+    alloc = zipf_allocation(labels, 20, seed=1, min_per_class=1)
+    all_idx = np.concatenate(alloc)
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)  # disjoint
+    for ix in alloc:
+        got = set(labels[ix].tolist())
+        assert got == set(range(10))  # every node sees every class
+
+
+def test_zipf_allocation_skew():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 20000)
+    alloc = zipf_allocation(labels, 50, seed=2, min_per_class=1)
+    gi = allocation_gini(alloc, labels)
+    assert gi > 0.55  # strongly non-IID (paper operates at 0.7-0.85 full-scale)
+
+
+def test_rank_correlation_increases_quantity_skew():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 20000)
+    g0 = allocation_gini(zipf_allocation(labels, 30, seed=3, rank_correlation=0.0))
+    g1 = allocation_gini(zipf_allocation(labels, 30, seed=3, rank_correlation=1.0))
+    assert g1 > g0 + 0.1
+
+
+def test_pad_node_datasets():
+    xs = [np.ones((3, 2)), np.ones((7, 2)) * 2]
+    ys = [np.zeros(3, np.int32), np.ones(7, np.int32)]
+    xp, yp, counts = pad_node_datasets(xs, ys)
+    assert xp.shape == (2, 7, 2) and (counts == [3, 7]).all()
+
+
+def test_batcher_deterministic_and_in_range():
+    import jax.numpy as jnp
+
+    b = Batcher(batch_size=4)
+    x = jnp.arange(10).reshape(10, 1).astype(jnp.float32)
+    y = jnp.arange(10).astype(jnp.int32)
+    x1, y1 = b.take(x, y, jnp.int32(7), jnp.int32(0))
+    x2, y2 = b.take(x, y, jnp.int32(7), jnp.int32(0))
+    assert (np.asarray(y1) == np.asarray(y2)).all()
+    assert (np.asarray(y1) < 7).all()  # never touches padding region
+
+
+def test_synth_dataset_learnable_and_standardized():
+    ds = make_dataset("synth-mnist", seed=0, scale=0.02)
+    assert abs(ds.x_train.mean()) < 0.05 and abs(ds.x_train.std() - 1) < 0.05
+    # nearest-class-mean does far better than chance -> class structure exists
+    means = np.stack([ds.x_train[ds.y_train == c].mean(0) for c in range(10)])
+    d = ((ds.x_test[:, None] - means[None]) ** 2).sum((2, 3))
+    acc = (d.argmin(1) == ds.y_test).mean()
+    assert acc > 0.3
+
+
+def test_graph_partition_to_pods():
+    topo = make_topology("erdos_renyi", n=20, p=0.3, seed=0)
+    groups = map_graph_to_pods(topo, 4)
+    assert len(groups) == 4
+    got = sorted(n for g in groups for n in g)
+    assert got == list(range(20))
+    w = pod_adjacency(topo, groups)
+    assert w.shape == (4, 4) and (w >= 0).all() and np.allclose(w, w.T)

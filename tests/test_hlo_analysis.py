@@ -1,0 +1,60 @@
+"""Unit tests for the HLO collective parser feeding the roofline."""
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,1024]") == 128 * 1024 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert _shape_bytes("pred[7]") == 7
+
+
+def test_all_reduce_operand_equals_result():
+    hlo = ("%all-reduce.1 = f32[128,64]{1,0} all-reduce(%p), channel_id=1, "
+           "replica_groups=[16,16]<=[256], to_apply=%add\n")
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 64 * 4
+    assert out["all-reduce_count"] == 1
+    assert out["total"] == 128 * 64 * 4
+
+
+def test_all_gather_divides_by_group():
+    hlo = ("%all-gather.9 = bf16[256,1024]{1,0} all-gather(%x), "
+           "dimensions={0}, replica_groups=[16,16]<=[256], "
+           "use_global_device_ids=true\n")
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 256 * 1024 * 2 // 16
+
+
+def test_reduce_scatter_multiplies_by_group():
+    hlo = ("%reduce-scatter.2 = f32[8,8]{1,0} reduce-scatter(%x), "
+           "replica_groups=[4,8]<=[32], to_apply=%add\n")
+    out = collective_bytes(hlo)
+    assert out["reduce-scatter"] == 8 * 8 * 4 * 8
+
+
+def test_all_to_all_tuple_result():
+    hlo = ("%all-to-all.5 = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b), "
+           "replica_groups=[2,2]<=[4]\n")
+    out = collective_bytes(hlo)
+    assert out["all-to-all"] == 2 * 4 * 4 * 4
+
+
+def test_done_halves_skipped():
+    hlo = ("%ag-start = bf16[64,64]{1,0} all-gather-start(%x), "
+           "replica_groups=[8,8]<=[64]\n"
+           "%ag-done = bf16[64,64]{1,0} all-gather-done(%ag-start)\n")
+    out = collective_bytes(hlo)
+    assert out["all-gather_count"] == 1
+
+
+def test_collective_permute():
+    hlo = ("%collective-permute.3 = f32[16,16]{1,0} collective-permute(%x), "
+           "source_target_pairs={{0,1},{1,0}}\n")
+    out = collective_bytes(hlo)
+    assert out["collective-permute"] == 16 * 16 * 4
+
+
+def test_non_collective_lines_ignored():
+    hlo = "%add.1 = f32[1024]{0} add(%a, %b)\n%dot = f32[8,8] dot(%c, %d)\n"
+    assert collective_bytes(hlo)["total"] == 0

@@ -1,0 +1,141 @@
+"""Deeper model correctness: decode-vs-prefill consistency, SSD-vs-recurrent
+oracle, chunked-vs-plain attention, MoE dispatch equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import build_lm
+from repro.models.lm.config import ArchConfig
+from repro.models.lm.layers import _chunked_attention, _plain_attention
+from repro.models.lm.ssm import ssd_chunked
+
+
+def _prefill_logits(lm, params, tokens):
+    logits, _ = lm.forward(params, {"tokens": tokens, "labels": tokens})
+    return logits
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen3-32b", "mixtral-8x7b",
+                                  "mamba2-2.7b"])
+def test_decode_matches_prefill(arch):
+    """Feeding tokens one-by-one through the cache reproduces the teacher-
+    forced forward logits (the fundamental serving-correctness invariant)."""
+    cfg = get_config(arch).reduced(ssm_chunk=4)
+    if cfg.n_experts:
+        # top-k routing amplifies tiny numeric diffs; keep experts tiny
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+    lm = build_lm(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    seq = 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, seq)), jnp.int32)
+    full = np.asarray(_prefill_logits(lm, params, tokens), np.float32)
+
+    cache = lm.init_cache(2, seq)
+    got = []
+    for t in range(seq):
+        logits, cache = lm.decode_step(params, cache, tokens[:, t : t + 1])
+        got.append(np.asarray(logits[:, 0], np.float32))
+    got = np.stack(got, axis=1)
+    np.testing.assert_allclose(got, full, rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_chunked_matches_recurrence():
+    """The chunk-parallel SSD equals the naive per-step recurrence
+    h_t = exp(a_t) h_{t-1} + B_t x_t;  y_t = C_t . h_t."""
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 16, 3, 4, 5
+    cfg = get_config("mamba2-2.7b").reduced(ssm_chunk=4)
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    a = -jnp.asarray(rng.random((b, s, h)) * 0.5, jnp.float32)
+
+    y, state = ssd_chunked(cfg, x, bm, cm, a)
+
+    # oracle recurrence
+    hstate = np.zeros((b, h, p, n), np.float32)
+    ys = []
+    for t in range(s):
+        decay = np.exp(np.asarray(a[:, t]))[:, :, None, None]
+        hstate = hstate * decay + np.einsum(
+            "bhp,bhn->bhpn", np.asarray(x[:, t]), np.asarray(bm[:, t]))
+        ys.append(np.einsum("bhn,bhpn->bhp", np.asarray(cm[:, t]), hstate))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), hstate, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24), (False, None)])
+def test_chunked_attention_matches_plain(causal, window):
+    cfg = ArchConfig(arch_id="t", family="dense", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, vocab=32,
+                     attn_chunk_q=16, attn_chunk_kv=32,
+                     param_dtype="float32", activation_dtype="float32")
+    rng = np.random.default_rng(0)
+    b, s = 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, 2, 16)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    plain = _plain_attention(cfg, q, k, v, pos, pos, causal, window)
+    chunk = _chunked_attention(cfg, q, k, v, pos, pos, causal, window)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(plain),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_dispatch_matches_dense_computation():
+    """With generous capacity, the scatter-dispatch MoE equals the dense
+    all-experts weighted combination."""
+    from repro.models.lm.moe import init_moe_ffn, moe_ffn
+
+    cfg = get_config("mixtral-8x7b").reduced(capacity_factor=8.0)
+    p = init_moe_ffn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)) * 0.3, jnp.float32)
+    out, aux = moe_ffn(cfg, p, x)
+
+    # dense oracle
+    xf = np.asarray(x, np.float32).reshape(-1, cfg.d_model)
+    logits = xf @ np.asarray(p["router"])
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_w = np.asarray(top_w / top_w.sum(-1, keepdims=True))
+    top_i = np.asarray(top_i)
+    wg, wu, wd = (np.asarray(p[k], np.float32) for k in ("wg", "wu", "wd"))
+    want = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(cfg.top_k):
+            e = top_i[t, j]
+            gate = xf[t] @ wg[e]
+            up = xf[t] @ wu[e]
+            silu = gate / (1 + np.exp(-gate))
+            want[t] += top_w[t, j] * ((silu * up) @ wd[e])
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model), want,
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_sliding_window_masks_old_tokens():
+    """With window w, token s attends only to the last w positions: moving
+    tokens OUTSIDE the window must not change the output."""
+    cfg = ArchConfig(arch_id="t", family="dense", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, head_dim=16, vocab=32,
+                     sliding_window=8, param_dtype="float32",
+                     activation_dtype="float32")
+    rng = np.random.default_rng(0)
+    s = 32
+    q = jnp.asarray(rng.standard_normal((1, s, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, s, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, s, 2, 16)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out1 = _plain_attention(cfg, q, k, v, pos, pos, True, 8)
+    k2 = k.at[:, :4].set(99.0)  # outside every query's window for t >= 12
+    v2 = v.at[:, :4].set(99.0)
+    out2 = _plain_attention(cfg, q, k2, v2, pos, pos, True, 8)
+    np.testing.assert_allclose(np.asarray(out1[:, 16:]), np.asarray(out2[:, 16:]),
+                               rtol=1e-5)

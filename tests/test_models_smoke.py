@@ -1,0 +1,130 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+Every assigned architecture is instantiated as a REDUCED variant of the same
+family (2 layers, d_model <= 512, <= 4 experts) and runs one forward and one
+train step on CPU, asserting output shapes and the absence of NaNs.  Decode
+steps are exercised too (two tokens through the cache path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.dfl_step import build_train_step
+from repro.models.lm import build_lm
+from repro.optim.sgd import sgd_momentum
+
+
+def _dummy_batch(lm, batch=2, seq=64):
+    rng = np.random.default_rng(0)
+    out = {}
+    for k, s in lm.input_specs(batch, seq).items():
+        if np.dtype(s.dtype) == np.int32:
+            hi = lm.cfg.vocab if k == "tokens" else max(lm.cfg.vocab - 1, 2)
+            out[k] = jnp.asarray(rng.integers(0, hi, s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape) * 0.05, s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    lm = build_lm(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = _dummy_batch(lm)
+
+    logits, aux = lm.forward(params, batch)
+    s_expected = batch["tokens"].shape[1]
+    assert logits.shape == (2, s_expected, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), "NaN in logits"
+
+    opt = sgd_momentum(lr=1e-2, momentum=0.9)
+    step = jax.jit(build_train_step(lm, opt))
+    new_params, _, loss = step(params, opt.init(params), jnp.int32(0), batch)
+    assert np.isfinite(float(loss)), "NaN loss"
+    # params actually changed
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved, "train step did not update parameters"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch):
+    cfg = get_config(arch).reduced()
+    lm = build_lm(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    cache = lm.init_cache(2, 32)
+    if lm.prep_decode_cache is not None:
+        enc = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (2, 16, cfg.d_model)) * 0.05, cfg.adtype)
+        cache = lm.prep_decode_cache(params, cache, enc)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = lm.decode_step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache["length"]) == 3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_exactness(arch):
+    """The registered config carries the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+                          d_ff=25600, vocab=151936, qk_norm=True),
+        "qwen1.5-0.5b": dict(n_layers=24, d_model=1024, n_heads=16,
+                             n_kv_heads=16, d_ff=2816, vocab=151936,
+                             qkv_bias=True),
+        "whisper-large-v3": dict(n_layers=32, n_enc_layers=32, d_model=1280,
+                                 n_heads=20, d_ff=5120, vocab=51866),
+        "mixtral-8x7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                             n_kv_heads=8, d_ff=14336, vocab=32000,
+                             n_experts=8, top_k=2, sliding_window=4096),
+        "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56,
+                            n_kv_heads=8, d_ff=4864, vocab=32000,
+                            n_experts=128, top_k=2, dense_residual=True),
+        "qwen2.5-14b": dict(n_layers=48, d_model=5120, n_heads=40,
+                            n_kv_heads=8, d_ff=13824, vocab=152064,
+                            qkv_bias=True),
+        "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                            n_kv_heads=32, d_ff=10240, vocab=32000,
+                            ssm_state=64, shared_attn_every=9),
+        "mamba2-2.7b": dict(n_layers=64, d_model=2560, d_ff=0, vocab=50280,
+                            ssm_state=128),
+        "deepseek-7b": dict(n_layers=30, d_model=4096, n_heads=32,
+                            n_kv_heads=32, d_ff=11008, vocab=102400),
+        "llava-next-mistral-7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                      n_kv_heads=8, d_ff=14336, vocab=32000,
+                                      img_tokens=2880),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert cfg.citation, f"{arch} missing citation"
+
+
+def test_param_counts_in_expected_range():
+    """Analytic parameter counts land near the nameplate sizes."""
+    expect = {
+        "qwen3-32b": (28e9, 36e9),
+        "qwen1.5-0.5b": (0.3e9, 0.7e9),
+        "mixtral-8x7b": (40e9, 52e9),
+        "arctic-480b": (420e9, 520e9),
+        "qwen2.5-14b": (12e9, 17e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "deepseek-7b": (6e9, 8e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()

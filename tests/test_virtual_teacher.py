@@ -1,0 +1,95 @@
+"""Virtual-Teacher loss (paper Eq. 7-8): closed form vs materialized teacher."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.virtual_teacher import (
+    cross_entropy_loss,
+    make_loss_fn,
+    soft_labels,
+    teacher_entropy,
+    vt_kl_loss,
+)
+
+
+def _materialized_kl(logits, labels, beta):
+    p_t = soft_labels(labels, logits.shape[-1], beta)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    log_pt = jnp.log(jnp.maximum(p_t, 1e-30))
+    return jnp.mean(jnp.sum(p_t * (log_pt - logp), axis=-1))
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 8), v=st.integers(2, 50),
+       beta=st.floats(0.5, 0.999))
+def test_closed_form_matches_materialized(seed, b, v, beta):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.standard_normal((b, v)) * 3, jnp.float32)
+    y = jnp.asarray(rng.integers(0, v, b), jnp.int32)
+    got = vt_kl_loss(z, y, beta=beta)
+    want = _materialized_kl(z, y, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_beta_one_reduces_to_cross_entropy():
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.standard_normal((16, 10)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 16), jnp.int32)
+    np.testing.assert_allclose(vt_kl_loss(z, y, beta=1.0),
+                               cross_entropy_loss(z, y), rtol=1e-6)
+
+
+def test_kl_nonnegative():
+    rng = np.random.default_rng(1)
+    z = jnp.asarray(rng.standard_normal((32, 26)) * 5, jnp.float32)
+    y = jnp.asarray(rng.integers(0, 26, 32), jnp.int32)
+    assert float(vt_kl_loss(z, y, beta=0.9)) >= -1e-6
+
+
+def test_minimum_at_teacher_distribution():
+    """Loss is 0 when the model outputs exactly p_t."""
+    v, beta = 10, 0.9
+    y = jnp.arange(4) % v
+    logits = jnp.log(soft_labels(y, v, beta))
+    assert abs(float(vt_kl_loss(logits, y, beta=beta))) < 1e-5
+
+
+def test_gradient_is_softmax_minus_teacher():
+    rng = np.random.default_rng(2)
+    z = jnp.asarray(rng.standard_normal((6, 12)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 12, 6), jnp.int32)
+    beta = 0.95
+    g = jax.grad(lambda zz: vt_kl_loss(zz, y, beta=beta))(z)
+    expect = (jax.nn.softmax(z, -1) - soft_labels(y, 12, beta)) / 6
+    np.testing.assert_allclose(g, expect, rtol=1e-4, atol=1e-6)
+
+
+def test_teacher_entropy_limits():
+    assert abs(float(teacher_entropy(1.0, 10))) < 1e-6  # delta -> 0 entropy
+    h_uniform = float(teacher_entropy(0.1, 10))  # beta=1/V -> uniform
+    np.testing.assert_allclose(h_uniform, np.log(10), rtol=1e-5)
+
+
+def test_where_mask():
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.standard_normal((4, 5)), jnp.float32)
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    mask = jnp.asarray([True, True, False, False])
+    got = vt_kl_loss(z, y, beta=0.9, where=mask)
+    want = vt_kl_loss(z[:2], y[:2], beta=0.9)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_loss_factory():
+    assert make_loss_fn("ce") is cross_entropy_loss
+    fn = make_loss_fn("vt", beta=0.9)
+    z = jnp.ones((2, 3))
+    y = jnp.zeros((2,), jnp.int32)
+    assert jnp.isfinite(fn(z, y))
+    try:
+        make_loss_fn("nope")
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
