@@ -12,14 +12,12 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import Dict, Optional
 
 from repro.data import make_dataset, zipf_allocation
 from repro.data.allocation import allocation_gini, split_by_allocation
 from repro.fl import DFLSimulator, SimulatorConfig
-from repro.fl.metrics import RoundMetrics, comm_bytes_per_round
+from repro.fl.metrics import comm_bytes_per_round
 from repro.fl.trainer import centralized_train
 from repro.graphs import make_topology
 from repro.models.mlp_cnn import model_for_dataset

@@ -48,7 +48,6 @@ def main():
         adj[i, (i + 1) % args.nodes] = adj[i, (i - 1) % args.nodes] = 0.5
     round_fn = jax.jit(build_dfl_round(lm, opt, jnp.asarray(adj)))
 
-    rng = np.random.default_rng(0)
     from repro.data.tokens import synthetic_token_batch
 
     d0 = float(tree_l2_dist(tree_index(params, 0), tree_index(params, 1)))

@@ -1,1 +1,1 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.ckpt import latest_step, restore_checkpoint, save_checkpoint  # noqa: F401

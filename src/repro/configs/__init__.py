@@ -1,1 +1,1 @@
-from repro.configs.registry import get_config, list_archs, ARCH_IDS  # noqa: F401
+from repro.configs.registry import ARCH_IDS, get_config, list_archs  # noqa: F401

@@ -5,6 +5,15 @@
   * :mod:`repro.core.aggregation`      — baseline aggregators (DecAvg/CFA/...)
   * :mod:`repro.core.gossip`           — neighbour-exchange schedules
 """
+from repro.core.aggregation import (  # noqa: F401
+    AGGREGATORS,
+    cfa_aggregate,
+    cfa_ge_gradient_step,
+    decavg_aggregate,
+    fedavg_aggregate,
+    get_aggregator,
+    isolation_aggregate,
+)
 from repro.core.decdiff import (  # noqa: F401
     decdiff_aggregate,
     decdiff_aggregate_stacked,
@@ -16,13 +25,4 @@ from repro.core.virtual_teacher import (  # noqa: F401
     make_loss_fn,
     soft_labels,
     vt_kl_loss,
-)
-from repro.core.aggregation import (  # noqa: F401
-    AGGREGATORS,
-    cfa_aggregate,
-    cfa_ge_gradient_step,
-    decavg_aggregate,
-    fedavg_aggregate,
-    get_aggregator,
-    isolation_aggregate,
 )

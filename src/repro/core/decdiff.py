@@ -19,7 +19,8 @@ step size automatically shrinks when models are topologically far apart
 
 Everything here operates on pytrees; distances are accumulated leafwise in
 fp32.  For sharded (pjit/shard_map) execution see `repro.dist.dfl_step`,
-which reuses these functions with a `psum`-reduced squared norm.
+which applies the same update over a stacked node axis (vmapped, or
+shard_mapped over the pod ring).
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-from repro.data.synth import SynthDataset, make_dataset, DATASETS  # noqa: F401
-from repro.data.allocation import zipf_allocation, gini_index, split_by_allocation  # noqa: F401
-from repro.data.pipeline import minibatches, Batcher  # noqa: F401
-from repro.data.tokens import synthetic_token_batch, lm_input_specs  # noqa: F401
+from repro.data.allocation import gini_index, split_by_allocation, zipf_allocation  # noqa: F401
+from repro.data.pipeline import Batcher, minibatches  # noqa: F401
+from repro.data.synth import DATASETS, SynthDataset, make_dataset  # noqa: F401
+from repro.data.tokens import lm_input_specs, synthetic_token_batch  # noqa: F401

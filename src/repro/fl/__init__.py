@@ -1,7 +1,7 @@
-from repro.fl.simulator import DFLSimulator, SimulatorConfig, METHODS  # noqa: F401
 from repro.fl.metrics import (  # noqa: F401
+    RoundMetrics,
     characteristic_time,
     comm_bytes_per_round,
-    RoundMetrics,
 )
+from repro.fl.simulator import METHODS, DFLSimulator, SimulatorConfig  # noqa: F401
 from repro.fl.trainer import centralized_train  # noqa: F401

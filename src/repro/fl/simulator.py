@@ -32,7 +32,6 @@ import numpy as np
 
 from repro.core.aggregation import (
     cfa_aggregate,
-    cfa_ge_gradient_step,
     decavg_aggregate,
     fedavg_aggregate,
 )

@@ -1,6 +1,6 @@
+from repro.graphs.partition import map_graph_to_pods  # noqa: F401
 from repro.graphs.topology import (  # noqa: F401
+    TOPOLOGY_BUILDERS,
     Topology,
     make_topology,
-    TOPOLOGY_BUILDERS,
 )
-from repro.graphs.partition import map_graph_to_pods  # noqa: F401

@@ -1,1 +1,1 @@
-from repro.models.api import SmallModel, make_small_model, SMALL_MODELS  # noqa: F401
+from repro.models.api import SMALL_MODELS, SmallModel, make_small_model  # noqa: F401

@@ -1,2 +1,2 @@
+from repro.models.lm.api import LM, build_lm  # noqa: F401
 from repro.models.lm.config import ArchConfig  # noqa: F401
-from repro.models.lm.api import build_lm, LM  # noqa: F401

@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.virtual_teacher import cross_entropy_loss, vt_kl_loss
-from repro.models.lm.config import ArchConfig
 from repro.models.lm import dense, encdec, hybrid, moe, ssm, vlm
+from repro.models.lm.config import ArchConfig
 
 
 @dataclasses.dataclass(frozen=True)

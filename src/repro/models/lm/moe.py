@@ -22,9 +22,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.dist.constraints import (constrain_batch, constrain_logits,
-                                     constrain_residual, gather_weights)
+from repro.dist.constraints import (
+    constrain_batch,
+    constrain_expert_sharded,
+    constrain_logits,
+    constrain_residual,
+    gather_weights,
+)
 from repro.models.lm.config import ArchConfig
+from repro.models.lm.dense import init_cache_dense
 from repro.models.lm.layers import (
     _dense_init,
     apply_norm,
@@ -33,14 +39,12 @@ from repro.models.lm.layers import (
     embed,
     init_attention,
     init_embedding,
-    init_kv_cache,
     init_linear,
     init_mlp,
     init_norm,
     mlp,
     unembed,
 )
-from repro.models.lm.dense import init_cache_dense
 
 
 def init_moe_ffn(rng, cfg: ArchConfig):
@@ -88,8 +92,6 @@ def _moe_batch_local(cfg: ArchConfig, p, x):
     never leave their data shard; the expert-weight contraction then cannot
     psum over data (the output is batch-sharded) and GSPMD is forced into the
     cheap per-layer weight all-gather instead (§Perf iteration log)."""
-    from repro.dist.constraints import constrain_batch
-
     b, s, d = x.shape
     k, e = cfg.top_k, cfg.n_experts
     xf = constrain_batch(x)
@@ -125,8 +127,6 @@ def _moe_batch_local(cfg: ArchConfig, p, x):
     h = buf.reshape(b, e, cap, d)
     if cfg.expert_parallel:
         # all-to-all: move token slots to the model-shard owning their expert
-        from repro.dist.constraints import constrain_expert_sharded
-
         h = constrain_expert_sharded(h)
     gate = jax.nn.silu(jnp.einsum("becd,edf->becf", h, p["wg"].astype(h.dtype)))
     up = jnp.einsum("becd,edf->becf", h, p["wu"].astype(h.dtype))

@@ -19,8 +19,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.dist.constraints import (constrain_batch, constrain_logits,
-                                     constrain_residual, gather_weights)
+from repro.dist.constraints import (
+    constrain_batch,
+    constrain_logits,
+    constrain_residual,
+    gather_weights,
+)
 from repro.models.lm.config import ArchConfig
 from repro.models.lm.layers import (
     _dense_init,

@@ -1,8 +1,8 @@
 from repro.optim.sgd import (  # noqa: F401
     Optimizer,
-    sgd_momentum,
     adamw,
-    make_optimizer,
-    cosine_schedule,
     constant_schedule,
+    cosine_schedule,
+    make_optimizer,
+    sgd_momentum,
 )

@@ -23,7 +23,6 @@ def mesh():
 
 
 def test_leaf_spec_divisibility(mesh):
-    big = jax.make_mesh((1, 1), ("data", "model"))
     # simulate a 16x16 mesh via a fake mesh-shape mapping
     class FakeMesh:
         shape = {"data": 16, "model": 16}

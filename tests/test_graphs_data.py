@@ -1,4 +1,8 @@
 """Topology substrate + non-IID allocation properties."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (a dev dependency; CI installs it)")
+
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings
@@ -7,7 +11,6 @@ from repro.data.allocation import (
     allocation_gini,
     gini_index,
     pad_node_datasets,
-    split_by_allocation,
     zipf_allocation,
 )
 from repro.data.pipeline import Batcher

@@ -1,5 +1,5 @@
 """Unit tests for the HLO collective parser feeding the roofline."""
-from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+from repro.launch.hlo_analysis import _shape_bytes, collective_bytes
 
 
 def test_shape_bytes():

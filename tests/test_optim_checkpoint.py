@@ -1,5 +1,4 @@
 """Optimizers (SGD+momentum faithful to the paper) and checkpointing."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

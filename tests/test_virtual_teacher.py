@@ -1,4 +1,8 @@
 """Virtual-Teacher loss (paper Eq. 7-8): closed form vs materialized teacher."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (a dev dependency; CI installs it)")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
