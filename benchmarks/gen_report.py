@@ -69,14 +69,79 @@ def repro_section() -> str:
     if comm:
         out.append("### §VI-A.3 — communication bytes per round "
                    "(50-node ER p=.2)\n")
-        out.append("| model | method | MB/round |")
+        out.append("| model | method | MB/round (fp32) |")
         out.append("|---|---|---|")
         for r in comm:
+            if r.get("codec", "fp32") != "fp32":
+                continue
             if r["method"] in ("isol", "fedavg", "cfa-ge", "decdiff+vt"):
                 out.append(f"| {r['model']} | {r['method']} | "
                            f"{r['bytes_per_round'] / 1e6:.1f} |")
         out.append("")
+
+    front = load_results("comm_frontier") or []
+    if front:
+        out.append("### Comm tentpole — accuracy-vs-bytes frontier "
+                   "(8-node BA smoke, DecDiff+VT)\n")
+        out.append("Codec x drift-trigger sweep; wire bytes are the "
+                   "simulator's exact dynamic accounting (event-triggered "
+                   "silence costs nothing).  Read it as: how many bytes buy "
+                   "how much accuracy.\n")
+        out.append("| codec | trigger thr | final acc | wire MB | reduction | "
+                   "Δacc vs dense | trig frac |")
+        out.append("|---|---|---|---|---|---|---|")
+        for r in front:
+            ratio = f" (r={r['topk_ratio']})" if r.get("topk_ratio") else ""
+            out.append(
+                f"| {r['codec']}{ratio} | {r['threshold']} | "
+                f"{r['acc_mean']:.4f} | {r['bytes_on_wire'] / 1e6:.2f} | "
+                f"{r['reduction_vs_dense']:.1f}x | "
+                f"{r['acc_delta_vs_dense']:+.4f} | {r['triggered_frac']:.2f} |")
+        out.append("")
     return "\n".join(out)
+
+
+def write_bench_comm() -> str:
+    """Fold the comm artifacts into BENCH_comm.json: the static per-codec
+    table, the accuracy-vs-bytes frontier, and the acceptance verdict
+    (some int8/top-k point with >= 2x fewer bytes within 1% of dense acc)."""
+    table = load_results("comm_table") or []
+    front = load_results("comm_frontier") or []
+    if not front:
+        # never clobber a committed BENCH_comm.json with an empty verdict
+        # just because artifacts/ was cleaned; the frontier sweep
+        # (bench_comm.frontier / bench_comm.run) is what refreshes it.
+        print("comm_frontier artifact missing; BENCH_comm.json not rewritten")
+        return None
+    dense = next((r for r in front
+                  if r["codec"] == "fp32" and r["threshold"] == 0.0), None)
+    passing = [
+        r for r in front
+        if r["codec"] in ("int8", "topk")
+        and r["reduction_vs_dense"] >= 2.0
+        # within 1%: at most 1% (relative) BELOW dense; better-than-dense passes
+        and r["acc_delta_vs_dense"] >= -0.01 * max(dense["acc_mean"], 1e-9)
+    ] if dense else []
+    payload = {
+        "dense_baseline": dense,
+        "frontier": front,
+        "acceptance": {
+            "criterion": ">=2x bytes-on-wire reduction within 1% of dense "
+                         "final accuracy (int8 or top-k, seeded smoke)",
+            "passed": bool(passing),
+            "passing_points": passing,
+            "note": "trigger_threshold > 0 points trade accuracy for bytes "
+                    "on this short smoke run (see frontier deltas); the "
+                    "within-1% bar is cleared by the always-send int8 point. "
+                    "The trigger's own guarantee (>=2x at bounded loss) is "
+                    "pinned separately in tests/test_system.py.",
+        },
+        "static_table": table,
+    }
+    path = os.path.join(ROOT, "BENCH_comm.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
 
 
 def dryrun_section() -> str:
@@ -237,6 +302,7 @@ the sub-quadratic path per DESIGN.md §4).
     with open(path, "w") as f:
         f.write("\n".join(sections))
     print("wrote", path)
+    print("wrote", write_bench_comm())
 
 
 if __name__ == "__main__":

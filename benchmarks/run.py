@@ -35,9 +35,11 @@ def main() -> None:
     from benchmarks import bench_comm
 
     t0 = time.time()
-    rows = bench_comm.run(verbose=False)
-    ge = next(r for r in rows if r["method"] == "cfa-ge" and "mlp" in r["model"])
-    dd = next(r for r in rows if r["method"] == "decdiff+vt" and "mlp" in r["model"])
+    rows = bench_comm.run(verbose=False, with_frontier=False)
+    ge = next(r for r in rows if r["method"] == "cfa-ge" and "mlp" in r["model"]
+              and r["codec"] == "fp32")
+    dd = next(r for r in rows if r["method"] == "decdiff+vt"
+              and "mlp" in r["model"] and r["codec"] == "fp32")
     record("comm_table", t0,
            f"cfa-ge/decdiff+vt bytes ratio={ge['bytes_per_round']/dd['bytes_per_round']:.1f}x")
 

@@ -1,0 +1,77 @@
+"""Event-triggered, compressed DecDiff gossip — the comm layer end to end.
+
+Runs DecDiff+VT on a seeded 8-node Barabási–Albert world under different
+gossip transports and prints the accuracy-vs-bytes tradeoff, e.g.:
+
+    PYTHONPATH=src python examples/compressed_gossip.py --rounds 15
+    PYTHONPATH=src python examples/compressed_gossip.py \
+        --codec int8 --threshold 1.0 --verbose
+
+With no --codec it sweeps the default frontier (fp32 dense reference, bf16,
+int8 with and without the drift trigger, top-k).  See README "The
+repro.comm layer" for how to read the output; `python -m
+benchmarks.bench_comm` is the full artifact-emitting version.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.comm import CommConfig
+from repro.fl import DFLSimulator, SimulatorConfig
+
+
+def run_one(world, comm, rounds, verbose=False):
+    ds, topo, xs, ys, model = world
+    cfg = SimulatorConfig(method="decdiff+vt", rounds=rounds,
+                          steps_per_round=4, batch_size=32, lr=0.1,
+                          momentum=0.9, eval_every=5, seed=0, comm=comm)
+    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+    hist = sim.run(verbose=verbose)
+    return sim, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--codec", choices=["fp32", "bf16", "int8", "topk"])
+    ap.add_argument("--threshold", type=float, default=0.0)
+    ap.add_argument("--topk-ratio", type=float, default=0.05)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.bench_comm import smoke_world
+
+    world = smoke_world()
+    if args.codec:
+        sweep = [CommConfig(codec=args.codec, trigger_threshold=args.threshold,
+                            topk_ratio=args.topk_ratio)]
+    else:
+        sweep = [
+            CommConfig(codec="fp32"),
+            CommConfig(codec="bf16"),
+            CommConfig(codec="int8"),
+            CommConfig(codec="int8", trigger_threshold=1.0),
+            CommConfig(codec="topk", topk_ratio=args.topk_ratio),
+        ]
+
+    print(f"{'codec':>6} {'thr':>5} | {'final acc':>9} | {'wire MB':>8} | "
+          f"{'trig':>5} | reduction")
+    dense_bytes = None
+    for comm in sweep:
+        sim, hist = run_one(world, comm, args.rounds, verbose=args.verbose)
+        if dense_bytes is None and comm.codec == "fp32" \
+                and comm.trigger_threshold == 0.0:
+            dense_bytes = sim.comm_bytes_total
+        red = ("-" if dense_bytes is None
+               else f"{dense_bytes / max(sim.comm_bytes_total, 1):.1f}x")
+        print(f"{comm.codec:>6} {comm.trigger_threshold:>5} | "
+              f"{hist[-1].acc_mean:>9.4f} | "
+              f"{sim.comm_bytes_total / 1e6:>8.2f} | "
+              f"{hist[-1].triggered_frac:>5.2f} | {red}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""repro.comm — the gossip transport layer between training and aggregation.
+
+What the paper models as "ship full fp32 models to every neighbour every
+round" becomes a measured quantity here:
+
+  codecs    — per-edge payload compression (fp32 / bf16 / stochastic int8 /
+              top-k with error feedback), each with exact bytes_on_wire,
+  trigger   — event-triggered transmission: send only when the model has
+              drifted past a threshold since the last payload,
+  transport — CommConfig + GossipTransport tying both into the simulator
+              (repro.fl.simulator) and the dist rounds (repro.dist.dfl_step),
+              with bytes/round and triggered-fraction accounting.
+
+Receivers always dequantize before aggregating, so DecDiff's Eq. 5-6 act on
+reconstructed models and the algorithm's semantics never change — only the
+bytes on the wire do.
+"""
+from repro.comm.codecs import (  # noqa: F401
+    CODECS,
+    BF16Codec,
+    Codec,
+    FP32Codec,
+    Int8Codec,
+    TopKCodec,
+    make_codec,
+    payload_nbytes,
+)
+from repro.comm.transport import (  # noqa: F401
+    CommConfig,
+    CommState,
+    GossipTransport,
+    codec_roundtrip_stacked,
+)
+from repro.comm.trigger import drift_gate, edge_delivery  # noqa: F401

@@ -1,0 +1,190 @@
+"""Per-edge payload codecs for the gossip transport.
+
+A codec turns one node's flat model vector (or model delta) into a *wire
+payload* — a small pytree whose leaves carry the exact dtypes that would be
+serialized onto the network — and back.  Three contracts every codec obeys:
+
+  * `decode(encode(x)) ≈ x` with a codec-specific error bound (exact for
+    fp32, one bf16 ulp for bf16, one quantization grain for int8, and the
+    error-feedback invariant for top-k/int8: residual' + decode(payload)
+    == x + residual, so nothing is ever silently dropped — only delayed),
+  * `bytes_on_wire(payload)` equals the byte length of the serialized
+    payload (Σ leaf.size × leaf.dtype.itemsize — validated against
+    `tobytes()` in tests/test_comm_codecs.py),
+  * encode/decode are pure jnp functions of their arguments, so they vmap
+    over the node axis and run inside jit/shard_map (dist/dfl_step.py
+    all_gathers the *payload*, which is where the wire savings come from).
+
+Codecs marked `is_delta=True` are meant to compress the model *difference*
+w − w_last_sent (plus the carried residual); the transport reconstructs
+ŵ = w_last_sent + decode(payload).  With a zero reference they degrade
+gracefully to compressing the full model (the dist-layer rounds use them
+that way, reference-free).
+
+Stochastic int8 rounding is unbiased (E[decode] == input); pass rng=None for
+deterministic round-to-nearest (required when the vmap and shard_map rounds
+must agree bit-for-bit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def payload_nbytes(payload) -> int:
+    """Exact serialized size of a wire payload: every leaf ships as raw
+    little-endian machine words, no framing (Σ size × itemsize)."""
+    return int(sum(x.size * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(payload)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base codec: interface + shared accounting."""
+
+    name: str = "codec"
+    is_delta: bool = False      # compresses w - w_last_sent (EF scheme)
+    needs_rng: bool = False     # encode consumes a PRNG key
+    has_residual: bool = False  # carries an error-feedback residual
+
+    def init_residual(self, vec):
+        return jnp.zeros_like(vec, jnp.float32) if self.has_residual else None
+
+    def encode(self, vec, rng=None, residual=None):
+        raise NotImplementedError
+
+    def decode(self, payload, out_size=None):
+        raise NotImplementedError
+
+    def bytes_on_wire(self, payload) -> int:
+        return payload_nbytes(payload)
+
+    def payload_bytes_for(self, size: int) -> int:
+        """Exact wire bytes for one encoded vector of `size` elements,
+        computed from payload shapes alone (no FLOPs: jax.eval_shape)."""
+        proto = jax.ShapeDtypeStruct((size,), jnp.float32)
+        payload, _ = jax.eval_shape(lambda v: self.encode(v), proto)
+        return payload_nbytes(payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class FP32Codec(Codec):
+    """Dense fp32 passthrough — the accounting baseline (bit-exact)."""
+
+    name: str = "fp32"
+
+    def encode(self, vec, rng=None, residual=None):
+        return {"w": vec.astype(jnp.float32)}, residual
+
+    def decode(self, payload, out_size=None):
+        return payload["w"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BF16Codec(Codec):
+    """Dense bf16 cast — halves the wire, one-bf16-ulp relative error."""
+
+    name: str = "bf16"
+
+    def encode(self, vec, rng=None, residual=None):
+        return {"w": vec.astype(jnp.bfloat16)}, residual
+
+    def decode(self, payload, out_size=None):
+        return payload["w"].astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(Codec):
+    """Symmetric per-vector int8 with optional stochastic rounding + EF.
+
+    scale = max|x| / 127; wire = int8 values + one fp32 scale (4x fewer
+    bytes than fp32, minus 4 bytes of scale).  Stochastic rounding keeps the
+    quantizer unbiased across rounds; the residual catches the per-round
+    grain so the error-feedback invariant holds exactly.
+    """
+
+    name: str = "int8"
+    is_delta: bool = True
+    needs_rng: bool = True   # only consumed when stochastic
+    has_residual: bool = True
+    stochastic: bool = True
+
+    def encode(self, vec, rng=None, residual=None):
+        x = vec.astype(jnp.float32)
+        if residual is not None:
+            x = x + residual
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        y = x / scale
+        if self.stochastic and rng is not None:
+            u = jax.random.uniform(rng, y.shape)
+        else:
+            u = 0.5
+        q = jnp.clip(jnp.floor(y + u), -127, 127).astype(jnp.int8)
+        new_res = (x - q.astype(jnp.float32) * scale
+                   if residual is not None else None)
+        return {"q": q, "scale": scale}, new_res
+
+    def decode(self, payload, out_size=None):
+        return payload["q"].astype(jnp.float32) * payload["scale"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification with error-feedback residuals.
+
+    Ships the k largest-|.| coordinates as (int32 index, fp32 value) pairs;
+    everything else stays in the residual and rides along to the next send.
+    k = max(1, round(ratio * size)) — static per vector length, so the wire
+    size is static too (8k + 4 bytes incl. the length word).
+    """
+
+    name: str = "topk"
+    is_delta: bool = True
+    has_residual: bool = True
+    ratio: float = 0.01
+
+    def k_for(self, size: int) -> int:
+        return max(1, int(round(self.ratio * size)))
+
+    def encode(self, vec, rng=None, residual=None):
+        x = vec.astype(jnp.float32)
+        if residual is not None:
+            x = x + residual
+        k = self.k_for(x.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        vals = x[idx]
+        new_res = (x.at[idx].set(0.0) if residual is not None else None)
+        payload = {
+            "idx": idx.astype(jnp.int32),
+            "vals": vals.astype(jnp.float32),
+            # length word: receivers must know the dense size to scatter into
+            "size": jnp.asarray(x.shape[-1], jnp.int32),
+        }
+        return payload, new_res
+
+    def decode(self, payload, out_size=None):
+        # out_size must be given under jit/vmap: the payload's length word
+        # is a traced scalar there and cannot size the dense output.  The
+        # None path serves concrete (off-trace) payloads only.
+        size = int(payload["size"]) if out_size is None else out_size
+        return (jnp.zeros((size,), jnp.float32)
+                .at[payload["idx"]].set(payload["vals"]))
+
+
+CODECS = {
+    "fp32": FP32Codec,
+    "bf16": BF16Codec,
+    "int8": Int8Codec,
+    "topk": TopKCodec,
+}
+
+
+def make_codec(name: str, **kwargs) -> Codec:
+    """Factory: `make_codec("int8", stochastic=False)`, `make_codec("topk",
+    ratio=0.05)`, ..."""
+    if name not in CODECS:
+        raise ValueError(f"unknown codec {name!r}; available: {sorted(CODECS)}")
+    return CODECS[name](**kwargs)

@@ -1,0 +1,174 @@
+"""Gossip transport: codecs x event trigger x exact bytes-on-wire accounting.
+
+Sits between local training and aggregation.  Each round every node:
+
+  1. measures its drift ||w_i - w_i^last_sent|| and decides whether to
+     transmit (trigger.drift_gate; threshold 0 = always send),
+  2. if transmitting, encodes its payload — delta codecs (int8, top-k)
+     compress w_i - w_i^last_sent plus the carried error-feedback residual,
+     dense codecs (fp32, bf16) the model itself,
+  3. receivers dequantize first and aggregate second, so DecDiff's Eq. 5-6
+     semantics are untouched: the aggregator simply sees ŵ_j instead of w_j.
+
+The transport is a shared-memory stand-in for N independent radios, so the
+"wire" state is held once: `last_sent[j]` doubles as the sender's trigger
+reference AND the receivers' cached copy of j's reconstruction reference
+(receivers of a delta codec start from the all-zeros reference, so no
+out-of-band full-model bootstrap is assumed — the first payload carries the
+whole model through the codec).
+
+Accounting is exact and static: `payload_bytes` is the serialized size of
+one payload (codec.payload_bytes_for), so bytes-on-wire per round is
+payload_bytes x Σ_i gate_i x outdeg_i — a transmitting node broadcasts one
+payload per outgoing edge.  Failed links still burn the sender's bytes
+(the sender cannot know), they just deliver nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codecs import Codec, make_codec
+from repro.comm.trigger import drift_gate
+from repro.utils.pytree import tree_flatten_stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Transport knobs, carried on SimulatorConfig.comm.
+
+    codec: "fp32" | "bf16" | "int8" | "topk".
+    trigger_threshold: L2 drift below which a node stays silent (0 = the
+      legacy always-send behaviour, bit-for-bit).
+    topk_ratio: fraction of coordinates the top-k codec ships.
+    stochastic: int8 rounding mode (True = unbiased stochastic rounding;
+      False = deterministic nearest, needed for vmap/shard_map equality).
+    on_silence: what receivers aggregate for a neighbour whose trigger did
+      not fire.  "stale" (default, the Zehtabi et al. event-triggered DFL
+      semantics): its cached last-transmitted model — silence means "use
+      what you have", costs nothing, and degrades convergence more
+      gracefully than dropping (staleness still drags; see the BENCH_comm
+      frontier for the measured accuracy-vs-bytes tradeoff per threshold).
+      "drop": mask the neighbour out entirely, like a failed link.
+      Exogenous link failures always drop (a loss, not a decision).
+    """
+
+    codec: str = "fp32"
+    trigger_threshold: float = 0.0
+    topk_ratio: float = 0.01
+    stochastic: bool = True
+    on_silence: str = "stale"
+
+    def __post_init__(self):
+        if self.on_silence not in ("stale", "drop"):
+            raise ValueError(f"on_silence must be 'stale' or 'drop', "
+                             f"got {self.on_silence!r}")
+
+    def make_codec(self) -> Codec:
+        kwargs = {}
+        if self.codec == "topk":
+            kwargs["ratio"] = self.topk_ratio
+        if self.codec == "int8":
+            kwargs["stochastic"] = self.stochastic
+        return make_codec(self.codec, **kwargs)
+
+
+class CommState(NamedTuple):
+    """Per-node transport state, threaded through the jitted round."""
+
+    last_sent: jnp.ndarray            # [N, D] last reconstruction on the wire
+    residual: Optional[jnp.ndarray]   # [N, D] EF residual (None if stateless)
+    ever_sent: jnp.ndarray            # [N] {0,1}: has node i transmitted yet?
+
+
+class GossipTransport:
+    """Flatten -> trigger -> encode -> decode -> unflatten, vmapped over N."""
+
+    def __init__(self, config: CommConfig, stacked_params):
+        self.config = config
+        self.codec = config.make_codec()
+        mat, self._unflatten = tree_flatten_stacked(stacked_params)
+        self.n, self.d = int(mat.shape[0]), int(mat.shape[1])
+        # exact serialized payload size for ONE node's transmission
+        self.payload_bytes = self.codec.payload_bytes_for(self.d)
+        self.dense_bytes = 4 * self.d  # fp32 reference for reduction ratios
+        self.wants_rng = (self.codec.needs_rng
+                          and getattr(self.codec, "stochastic", True))
+
+    def init_state(self, stacked_params) -> CommState:
+        mat, _ = tree_flatten_stacked(stacked_params)
+        residual = (jnp.zeros_like(mat) if self.codec.has_residual else None)
+        # zero reference: the first transmission carries the full model
+        # through the codec, so receivers need no out-of-band bootstrap.
+        return CommState(last_sent=jnp.zeros_like(mat), residual=residual,
+                         ever_sent=jnp.zeros((self.n,), jnp.float32))
+
+    def exchange(self, stacked_params, state: CommState, rng=None):
+        """One transport round for all nodes at once.
+
+        Returns (decoded_models, gate, new_state):
+          decoded_models — pytree with leaves [N, ...]: for each sender the
+            model its neighbours reconstruct this round (rows of silent
+            nodes hold their previous reconstruction; the aggregation mask
+            zeroes them out anyway),
+          gate — [N] {0,1} who transmitted,
+          new_state — the threaded CommState.
+        """
+        codec = self.codec
+        w, _ = tree_flatten_stacked(stacked_params)
+        gate, _ = drift_gate(w, state.last_sent, self.config.trigger_threshold)
+
+        x = w - state.last_sent if codec.is_delta else w
+        if self.wants_rng:
+            if rng is None:
+                raise ValueError(f"codec {codec.name!r} needs an rng key")
+            keys = jax.random.split(rng, self.n)
+        else:
+            keys = jnp.zeros((self.n, 2), jnp.uint32)
+
+        def enc_dec(xi, key, res):
+            payload, new_res = codec.encode(
+                xi, rng=key if self.wants_rng else None, residual=res)
+            return codec.decode(payload, out_size=self.d), new_res
+
+        if codec.has_residual:
+            dec, new_res = jax.vmap(enc_dec)(x, keys, state.residual)
+        else:
+            dec, _ = jax.vmap(lambda xi, key: enc_dec(xi, key, None))(x, keys)
+            new_res = None
+
+        recon = state.last_sent + dec if codec.is_delta else dec
+        sent = gate[:, None] > 0
+        new_last = jnp.where(sent, recon, state.last_sent)
+        if codec.has_residual:
+            # a silent node keeps accumulating: its un-flushed residual
+            # stays put until the trigger fires again.
+            new_res = jnp.where(sent, new_res, state.residual)
+        new_state = CommState(last_sent=new_last, residual=new_res,
+                              ever_sent=jnp.maximum(state.ever_sent, gate))
+        return self._unflatten(new_last), gate, new_state
+
+
+def codec_roundtrip_stacked(codec: Codec, stacked, rng=None):
+    """Reference-free encode->decode of stacked [N, ...] models.
+
+    The dist-layer rounds (repro.dist.dfl_step) use this to model wire
+    effects without transport state: delta codecs compress against the
+    implicit zero reference (= the full model goes through the codec).
+    Returns the decoded stacked pytree (leaves cast back to input dtypes).
+    """
+    w, unflatten = tree_flatten_stacked(stacked)
+    n, d = int(w.shape[0]), int(w.shape[1])
+    wants_rng = codec.needs_rng and getattr(codec, "stochastic", True) \
+        and rng is not None
+    keys = (jax.random.split(rng, n) if wants_rng
+            else jnp.zeros((n, 2), jnp.uint32))
+
+    def enc_dec(xi, key):
+        payload, _ = codec.encode(xi, rng=key if wants_rng else None)
+        return codec.decode(payload, out_size=d)
+
+    return unflatten(jax.vmap(enc_dec)(w, keys))

@@ -1,0 +1,56 @@
+"""Event-triggered transmission policy (Zehtabi et al., 2022 style).
+
+The paper imposes no round synchronization, and its communication-efficiency
+claim invites going further: a node only *transmits* when its model has
+drifted since the last payload it put on the wire,
+
+    send_i = 1{ ||w_i - w_i^last_sent||_2 >= threshold },
+
+so stretches of slow local progress cost zero bytes.  threshold = 0
+degenerates to always-send (drift >= 0 holds identically), which is how the
+equivalence tests pin this path against the legacy Bernoulli-mask round.
+
+The gate is a per-*sender* decision; exogenous per-edge link failures (the
+existing `participation` Bernoulli mask) compose multiplicatively on top:
+an edge delivers iff the sender fired AND the link stayed up.
+
+What a receiver does about a silent neighbour is the transport's
+`on_silence` policy: "stale" aggregates the neighbour's cached
+last-transmitted model (deliberate silence = "use what you have"), "drop"
+feeds the gate into `edge_delivery` so silence looks like a failed link.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def drift_gate(w, last_sent, threshold: float):
+    """Per-node send gates from model drift.
+
+    Args:
+      w: [N, D] current flat models (fp32).
+      last_sent: [N, D] flat models as of each node's last transmission.
+      threshold: drift threshold in global-L2 units; 0 = always send.
+
+    Returns:
+      (gate [N] {0.,1.} float32, drift [N] float32 L2 drift per node).
+    """
+    drift = jnp.sqrt(jnp.sum(jnp.square(
+        w.astype(jnp.float32) - last_sent.astype(jnp.float32)), axis=1))
+    gate = (drift >= jnp.float32(threshold)).astype(jnp.float32)
+    return gate, drift
+
+
+def edge_delivery(gate, link_mask, nbr_idx):
+    """Compose sender gates with an exogenous per-edge link mask.
+
+    Args:
+      gate: [N] sender gates.
+      link_mask: [N, D] receiver-side mask in the padded-neighbour layout
+        (1 = link up; already includes neighbour validity).
+      nbr_idx: [N, D] int neighbour ids per slot.
+
+    Returns [N, D] delivery mask: slot d of node i delivers iff neighbour
+    j = nbr_idx[i, d] transmitted and the (j -> i) link was up.
+    """
+    return link_mask * gate[nbr_idx]

@@ -22,6 +22,7 @@ images at 28x28 on this container).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
@@ -117,7 +118,9 @@ def make_dataset(name: str, seed: int = 0, scale: float = 1.0) -> SynthDataset:
     """Build a deterministic synthetic dataset.  `scale` shrinks train/test
     sizes proportionally (benchmarks use scale < 1 to fit the CPU budget)."""
     spec = DATASETS[name]
-    rng = np.random.default_rng(abs(hash((name, seed))) % (2**31))
+    # NB: not Python's hash() — string hashing is randomized per process
+    # (PYTHONHASHSEED), which silently broke the determinism contract.
+    rng = np.random.default_rng([zlib.crc32(name.encode()), seed])
     h, w = spec.image_hw
     protos = np.stack([
         np.stack([

@@ -16,6 +16,11 @@ Both support per-neighbour delivery masks: the paper imposes no round
 synchronization, so a node may hear from any subset of its neighbours; a
 masked neighbour contributes nothing and a fully-masked node keeps its local
 model (see `decdiff_aggregate_stacked`).
+
+Both also accept a repro.comm codec: the exchange then carries the encoded
+payload (int8 / top-k wire format — in the shard_map round the all_gather
+itself moves the payload, which is the real inter-pod traffic win) and every
+receiver dequantizes before DecDiff, leaving Eq. 5-6 semantics unchanged.
 """
 from __future__ import annotations
 
@@ -24,8 +29,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.transport import codec_roundtrip_stacked
 from repro.core.decdiff import DEFAULT_S
 from repro.dist.sharding import NODE_AXIS
+from repro.utils.pytree import tree_flatten_stacked
 
 
 def _normalized(adj, mask):
@@ -64,7 +71,8 @@ def _decdiff_apply(local, full, wn, row, s):
     return jax.tree.map(step_leaf, local, diff)
 
 
-def decdiff_gossip(stacked, adj, s=DEFAULT_S, *, mask=None, gossip_dtype=None):
+def decdiff_gossip(stacked, adj, s=DEFAULT_S, *, mask=None, gossip_dtype=None,
+                   codec=None):
     """DecDiff aggregation for all nodes at once.
 
     Args:
@@ -78,13 +86,22 @@ def decdiff_gossip(stacked, adj, s=DEFAULT_S, *, mask=None, gossip_dtype=None):
       gossip_dtype: optional dtype the exchanged models are cast to before
         averaging (e.g. bf16 gossip halves inter-pod traffic); the norm and
         the update stay fp32.
+      codec: optional repro.comm codec modelling the wire: every exchanged
+        model is encode->decode roundtripped (deterministic, reference-free)
+        before averaging — dequantize-then-DecDiff, so Eq. 5-6 semantics are
+        unchanged and the local (un-roundtripped) model stays exact.
+        Takes precedence over `gossip_dtype`.
 
     Returns the updated stacked models; matches per-node
     `decdiff_aggregate` to fp32 round-off.
     """
     wn, row = _normalized(adj, mask)
-    full = (jax.tree.map(lambda x: x.astype(gossip_dtype), stacked)
-            if gossip_dtype is not None else stacked)
+    if codec is not None:
+        full = codec_roundtrip_stacked(codec, stacked)
+    elif gossip_dtype is not None:
+        full = jax.tree.map(lambda x: x.astype(gossip_dtype), stacked)
+    else:
+        full = stacked
     return _decdiff_apply(stacked, full, wn, row, s)
 
 
@@ -129,7 +146,7 @@ def build_serve_step(lm):
 
 
 def build_dfl_round(lm, opt, adj, *, loss_kind: str = "vt", beta: float = 0.98,
-                    s=DEFAULT_S, gossip_dtype=None, mask=None):
+                    s=DEFAULT_S, gossip_dtype=None, mask=None, codec=None):
     """One DFL communication round over stacked per-node state.
 
     (params [N,...], opt_state [N,...], step, batch [N,B,S], mask=None) ->
@@ -140,6 +157,11 @@ def build_dfl_round(lm, opt, adj, *, loss_kind: str = "vt", beta: float = 0.98,
     the round function additionally accepts a runtime `mask` (overriding the
     baked one), so per-round stochastic delivery — the paper's
     no-synchronization model — needs no retrace.
+
+    `codec` (repro.comm) compresses the gossip exchange: neighbours see the
+    encode->decode roundtrip of each model (the local model and the norm
+    stay exact).  Use a deterministic codec so this round stays equal to the
+    shard_map formulation.
     """
     adj = jnp.asarray(adj, jnp.float32)
     node_step = _make_node_step(lm, opt, loss_kind, beta)
@@ -150,7 +172,7 @@ def build_dfl_round(lm, opt, adj, *, loss_kind: str = "vt", beta: float = 0.98,
             node_step, in_axes=(0, 0, None, 0))(params, opt_state, step, batch)
         m = mask if mask is not None else built_mask
         new_params = decdiff_gossip(new_params, adj, s=s, mask=m,
-                                    gossip_dtype=gossip_dtype)
+                                    gossip_dtype=gossip_dtype, codec=codec)
         return new_params, new_state, jnp.mean(losses)
 
     return round_fn
@@ -158,7 +180,7 @@ def build_dfl_round(lm, opt, adj, *, loss_kind: str = "vt", beta: float = 0.98,
 
 def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
                              beta: float = 0.98, s=DEFAULT_S,
-                             gossip_dtype=None, mask=None):
+                             gossip_dtype=None, mask=None, codec=None):
     """`build_dfl_round` as an explicit shard_map over the "pod" axis.
 
     Each pod holds `N / n_pods` nodes; the gossip exchange is an all_gather
@@ -170,10 +192,17 @@ def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
     `build_dfl_round`: a baked builder `mask` plus an optional runtime
     `mask` argument on the round function.  Falls back to the vmap
     formulation when the mesh has no pod axis.
+
+    With a `codec` (repro.comm) the all_gather moves the *encoded payload*
+    (e.g. int8 values + one fp32 scale per node) instead of fp32 models —
+    the actual inter-pod wire reduction — and each pod dequantizes after the
+    gather, before DecDiff.  The codec must be deterministic (stochastic=
+    False for int8) so this round matches `build_dfl_round(codec=...)`.
     """
     if NODE_AXIS not in mesh.shape:
         return build_dfl_round(lm, opt, adj, loss_kind=loss_kind, beta=beta,
-                               s=s, gossip_dtype=gossip_dtype, mask=mask)
+                               s=s, gossip_dtype=gossip_dtype, mask=mask,
+                               codec=codec)
 
     adj = jnp.asarray(adj, jnp.float32)
     n_nodes = int(adj.shape[0])
@@ -186,15 +215,34 @@ def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
     built_mask = (jnp.asarray(mask, jnp.float32) if mask is not None
                   else jnp.ones_like(adj))
 
-    def block(params, opt_state, step, batch, mask):
-        new_params, new_state, losses = jax.vmap(
-            node_step, in_axes=(0, 0, None, 0))(params, opt_state, step, batch)
+    def gather_full(new_params):
+        """The gossip exchange: what actually crosses the pod ring.
+
+        codec set   -> all_gather the encoded payload (int8/top-k wire
+                       format), dequantize after the gather;
+        dtype set   -> all_gather the cast models (bf16 gossip);
+        neither     -> all_gather the fp32 models.
+        """
+        if codec is not None:
+            w, unflatten = tree_flatten_stacked(new_params)  # [per_pod, D]
+            d = int(w.shape[1])
+            payload, _ = jax.vmap(lambda xi: codec.encode(xi))(w)
+            gathered = jax.tree.map(
+                lambda x: jax.lax.all_gather(x, NODE_AXIS, axis=0, tiled=True),
+                payload)
+            dec = jax.vmap(lambda p: codec.decode(p, out_size=d))(gathered)
+            return unflatten(dec)  # [N, ...] reconstructed models
         cast = ((lambda x: x.astype(gossip_dtype))
                 if gossip_dtype is not None else (lambda x: x))
-        full = jax.tree.map(
+        return jax.tree.map(
             lambda x: jax.lax.all_gather(cast(x), NODE_AXIS, axis=0,
                                          tiled=True),
             new_params)
+
+    def block(params, opt_state, step, batch, mask):
+        new_params, new_state, losses = jax.vmap(
+            node_step, in_axes=(0, 0, None, 0))(params, opt_state, step, batch)
+        full = gather_full(new_params)
         wn, row = _normalized(adj, mask)
         i0 = jax.lax.axis_index(NODE_AXIS) * per_pod
         wn_blk = jax.lax.dynamic_slice_in_dim(wn, i0, per_pod, axis=0)

@@ -1,3 +1,4 @@
+from repro.comm import CommConfig  # noqa: F401  (re-export: lives on SimulatorConfig.comm)
 from repro.fl.metrics import (  # noqa: F401
     RoundMetrics,
     characteristic_time,

@@ -22,6 +22,12 @@ class RoundMetrics:
     round: int
     acc_per_node: np.ndarray  # [N]
     loss_per_node: np.ndarray  # [N]
+    # Comm-transport accounting (None when the simulator runs without a
+    # CommConfig): cumulative bytes actually put on the wire up to and
+    # including this round, and the running mean fraction of nodes whose
+    # drift trigger fired per round.
+    bytes_on_wire: Optional[float] = None
+    triggered_frac: Optional[float] = None
 
     @property
     def acc_mean(self) -> float:
@@ -53,7 +59,13 @@ def characteristic_time(history: Sequence[RoundMetrics], centralized_acc: float,
 
 
 def comm_bytes_per_round(method: str, topo: Topology, model_bytes: int) -> int:
-    """Total bytes moved in the system per communication round.
+    """Total bytes moved in the system per always-send communication round.
+
+    `model_bytes` is the serialized per-edge payload size; with a comm codec
+    in play pass `codec.payload_bytes_for(model_size)` (exact bytes on wire,
+    repro.comm.codecs) rather than the raw fp32 tree size.  Event-triggered
+    runs are accounted dynamically by the simulator instead
+    (RoundMetrics.bytes_on_wire).
 
     Model-exchange methods ship one model per directed edge.  CFA-GE
     additionally ships (a) the freshly aggregated model back out and (b) the

@@ -16,6 +16,12 @@ flavours (DecAvg, FedAvg).  Partial participation — the paper imposes no
 synchronization; a node may hear from a fraction of its neighbours — is
 modelled with a per-round Bernoulli delivery mask.
 
+Communication is free by default (full fp32 models).  Passing a
+`CommConfig` (repro.comm) routes the exchange through the gossip transport:
+payload codecs (bf16 / stochastic int8 / top-k with error feedback), an
+event-triggered drift rule replacing always-send, and exact bytes-on-wire +
+triggered-fraction accounting on every RoundMetrics.
+
 Method registry (paper §V-B.5):
   isol, fedavg, decavg, dechetero, cfa, cfa-ge, decdiff, decdiff+vt
 (plus beyond-paper combos: dechetero+vt, cfa+vt, fedavg+vt for ablations).
@@ -30,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CommConfig, GossipTransport
 from repro.core.aggregation import (
     cfa_aggregate,
     decavg_aggregate,
@@ -81,6 +88,10 @@ class SimulatorConfig:
     # same at all nodes"): per-node number of local steps per round, sampled
     # uniformly from [min, steps_per_round].  0 disables (= homogeneous).
     hetero_steps_min: int = 0
+    # Gossip transport (repro.comm): payload codec + event-triggered sending
+    # with exact bytes-on-wire accounting.  None = legacy free-communication
+    # model (full fp32 models, always delivered modulo `participation`).
+    comm: Optional[CommConfig] = None
 
 
 class DFLSimulator:
@@ -125,8 +136,6 @@ class DFLSimulator:
             make_eval_fn(self.model, batch_size=min(config.eval_batch, len(x_test))),
             in_axes=(0, None, None),
         ))
-        self._round = jax.jit(self._make_round_fn(), donate_argnums=(0, 1))
-
         # --- init (heterogeneous unless the method coordinates) ---
         base = jax.random.PRNGKey(config.seed)
         if self.spec.get("common_init", False):
@@ -136,6 +145,24 @@ class DFLSimulator:
         self.params = jax.vmap(self.model.init)(keys)
         self.opt_state = jax.vmap(self.optimizer.init)(self.params)
         self.rng = jax.random.fold_in(base, 23)
+
+        # --- gossip transport (optional; neighbour-gossip methods only) ---
+        self.transport = None
+        self.comm_state = None
+        self.comm_bytes_total = 0.0
+        self._trig_sum = 0.0
+        self._comm_rounds = 0
+        if config.comm is not None:
+            if self.spec["agg"] not in ("decavg", "cfa", "decdiff") or \
+                    self.spec.get("grad_exchange", False):
+                raise ValueError(
+                    f"comm transport models neighbour model-gossip only; "
+                    f"method {config.method!r} is unsupported")
+            self.transport = GossipTransport(config.comm, self.params)
+            self.comm_state = self.transport.init_state(self.params)
+
+        donate = (0, 1, 2) if self.transport is not None else (0, 1)
+        self._round = jax.jit(self._make_round_fn(), donate_argnums=donate)
 
     # ------------------------------------------------------------------
     def _make_round_fn(self):
@@ -249,6 +276,49 @@ class DFLSimulator:
 
             return jax.tree.map(apply, params, acc)
 
+        def gossip_aggregate(params, gathered, mask):
+            if agg_kind == "decavg":
+                self_w = counts.astype(jnp.float32)  # ω_ii=1, weight |D_i|
+                return agg_fn(params, gathered, nbr_weight, mask, self_w)
+            return agg_fn(params, gathered, nbr_weight, mask)
+
+        transport = self.transport
+        degrees = jnp.sum(nbr_valid, axis=1)
+
+        def comm_round_fn(params, opt, comm_state, round_idx, rng):
+            """The legacy round with the transport in the middle: encode ->
+            (event-triggered, possibly failing) wire -> decode -> aggregate.
+            With the fp32 codec and threshold 0 this is bit-for-bit the
+            plain round (same rng stream, identical payload values)."""
+            from repro.comm.trigger import edge_delivery
+
+            params, opt, rng, train_loss = local_training(params, opt, round_idx, rng)
+            rng, sub = jax.random.split(rng)
+            link = delivery_mask(sub)  # exogenous failures (participation)
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+            else:
+                ck = None
+            decoded, gate, comm_state = transport.exchange(params, comm_state, ck)
+            # `decoded` rows of silent nodes hold their cached last-sent
+            # model, so "stale" aggregates them at full weight (masking only
+            # neighbours that have NEVER transmitted — their cache is still
+            # the zero bootstrap reference); "drop" masks any silent node
+            # like a failed link.
+            if transport.config.on_silence == "drop":
+                mask = edge_delivery(gate, link, nbr_idx)
+            else:
+                mask = edge_delivery(comm_state.ever_sent, link, nbr_idx)
+            gathered = jax.tree.map(lambda p: p[nbr_idx], decoded)
+            params = gossip_aggregate(params, gathered, mask)
+            # a transmitting node broadcasts one payload per outgoing edge;
+            # failed links still burn the sender's bytes.  Return the edge
+            # COUNT (small, exact in f32) — the byte multiply happens in
+            # Python so exact accounting survives past f32's 2^24 integers.
+            sent_edges = jnp.sum(gate * degrees)
+            return (params, opt, comm_state, rng, train_loss,
+                    sent_edges, jnp.mean(gate))
+
         def round_fn(params, opt, round_idx, rng):
             params, opt, rng, train_loss = local_training(params, opt, round_idx, rng)
             rng, sub = jax.random.split(rng)
@@ -264,18 +334,14 @@ class DFLSimulator:
                 pass
             else:
                 gathered = jax.tree.map(lambda p: p[nbr_idx], params)  # [n, D, ...]
-                if agg_kind == "decavg":
-                    self_w = counts.astype(jnp.float32)  # ω_ii=1, weight |D_i|
-                    params = agg_fn(params, gathered, nbr_weight, mask, self_w)
-                else:
-                    params = agg_fn(params, gathered, nbr_weight, mask)
+                params = gossip_aggregate(params, gathered, mask)
                 if spec.get("grad_exchange", False):
                     rng, sub = jax.random.split(rng)
                     params = gradient_exchange(params, mask, round_idx, sub)
 
             return params, opt, rng, train_loss
 
-        return round_fn
+        return comm_round_fn if transport is not None else round_fn
 
     # ------------------------------------------------------------------
     def evaluate(self) -> RoundMetrics:
@@ -291,14 +357,31 @@ class DFLSimulator:
         eval_every = self.cfg.eval_every if eval_every is None else eval_every
         history: List[RoundMetrics] = []
         for r in range(rounds):
-            self.params, self.opt_state, self.rng, _ = self._round(
-                self.params, self.opt_state, jnp.int32(r), self.rng
-            )
+            if self.transport is not None:
+                (self.params, self.opt_state, self.comm_state, self.rng, _,
+                 sent_edges, trig) = self._round(
+                    self.params, self.opt_state, self.comm_state,
+                    jnp.int32(r), self.rng)
+                self.comm_bytes_total += (self.transport.payload_bytes
+                                          * float(sent_edges))
+                self._trig_sum += float(trig)
+                self._comm_rounds += 1
+            else:
+                self.params, self.opt_state, self.rng, _ = self._round(
+                    self.params, self.opt_state, jnp.int32(r), self.rng
+                )
             if r % eval_every == 0 or r == rounds - 1:
                 m = self.evaluate()
                 m.round = r
+                if self.transport is not None:
+                    m.bytes_on_wire = self.comm_bytes_total
+                    m.triggered_frac = self._trig_sum / max(self._comm_rounds, 1)
                 history.append(m)
                 if verbose:
+                    comm = ("" if m.bytes_on_wire is None else
+                            f"  wire {m.bytes_on_wire / 1e6:.2f} MB"
+                            f"  trig {m.triggered_frac:.2f}")
                     print(f"[{self.cfg.method}] round {r:4d}  "
-                          f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  loss {m.loss_mean:.4f}")
+                          f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  "
+                          f"loss {m.loss_mean:.4f}{comm}")
         return history

@@ -5,6 +5,8 @@
   vt_kl_loss     — fused virtual-teacher KL over the vocab axis (Eq. 8),
                    closed form, custom_vjp with fused softmax-p_t backward
   neighbor_avg   — weighted average of stacked neighbour models (Eq. 6)
+  dequant_avg    — fused int8-dequantize + weighted average (Eq. 6 applied
+                   directly to the comm layer's quantized gossip payloads)
   decode_attention — fused one-token GQA attention over the ring KV cache
                    (the serving hot spot; online softmax over cache tiles)
 
@@ -15,6 +17,7 @@ from repro.kernels.ops import (  # noqa: F401
     decdiff_update,
     decdiff_update_tree,
     decode_attention_fused,
+    dequant_neighbor_avg,
     neighbor_avg,
     vt_kl_loss_fused,
 )

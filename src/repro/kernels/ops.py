@@ -156,3 +156,25 @@ def neighbor_avg(stacked, weights, interpret=None):
     sp = jnp.pad(stacked.astype(jnp.float32), ((0, 0), (0, pad)))
     out = _na.neighbor_avg_blocks(sp, w, interpret=interpret)
     return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_neighbor_avg(q, scales, weights, interpret=None):
+    """Eq. 6 over int8 comm payloads: dequantize-and-accumulate in one pass.
+
+    q [N, D] int8 rows (the neighbours' wire payloads), scales [N] fp32
+    per-row quantization scales, weights [N] ω_ij p_ij (normalized here).
+    Equals neighbor_avg(q * scales[:, None], weights) without ever writing
+    the dequantized models back to HBM.
+    """
+    from repro.kernels import dequant_avg as _dqa
+
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = q.shape
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    ws = w * scales.astype(jnp.float32)
+    pad = (-d) % _dqa.COLS
+    qp = jnp.pad(q.astype(jnp.int8), ((0, 0), (0, pad)))
+    out = _dqa.dequant_avg_blocks(qp, ws, interpret=interpret)
+    return out[:d]

@@ -58,3 +58,12 @@ def neighbor_avg_ref(stacked: jnp.ndarray, weights: jnp.ndarray):
     w = weights.astype(jnp.float32)
     w = w / jnp.sum(w)
     return jnp.einsum("n,nd->d", w, stacked.astype(jnp.float32))
+
+
+def dequant_neighbor_avg_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                             weights: jnp.ndarray):
+    """Eq. 6 over int8 payloads: dequantize rows, then normalized average."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    dq = q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    return jnp.einsum("n,nd->d", w, dq)

@@ -8,6 +8,8 @@ architecture of the model being trained — an MLP on MNIST-like data and a
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -110,6 +112,35 @@ def tree_flatten_to_vector(tree):
         return jax.tree.unflatten(treedef, out)
 
     return vec, unflatten
+
+
+def tree_flatten_stacked(tree):
+    """Flatten a pytree with leaves [N, ...] into one [N, D] fp32 matrix.
+
+    The per-node counterpart of `tree_flatten_to_vector`: row i is node i's
+    whole model as a flat vector (the layout the comm codecs operate on).
+    Returns (matrix, unflatten_fn); `unflatten_fn` accepts any [M, D] matrix
+    (M need not equal N — e.g. decoding an all_gathered payload) and restores
+    the original leaf shapes/dtypes behind the leading axis.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    assert leaves, "empty pytree"
+    lead = leaves[0].shape[0]
+    tails = [l.shape[1:] for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [math.prod(t) for t in tails]
+    mat = jnp.concatenate(
+        [l.reshape(lead, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unflatten(m):
+        out, off = [], 0
+        for tail, dtype, size in zip(tails, dtypes, sizes):
+            out.append(m[:, off:off + size]
+                       .reshape((m.shape[0],) + tail).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return mat, unflatten
 
 
 def tree_random_like(rng, tree, scale=1.0):

@@ -90,6 +90,66 @@ def test_decdiff_gossip_matches_per_node_aggregation():
         assert tree_l2_dist(tree_index(out, i), want) < 1e-5
 
 
+def _tiny_lm_world(nodes=2):
+    from repro.configs import get_config
+    from repro.models.lm import build_lm
+    from repro.optim.sgd import sgd_momentum
+
+    cfg = get_config("qwen1.5-0.5b").reduced(n_layers=2, d_model=128, vocab=512)
+    lm = build_lm(cfg)
+    opt = sgd_momentum(lr=1e-2, momentum=0.9)
+    keys = jax.random.split(jax.random.PRNGKey(0), nodes)
+    params = jax.vmap(lm.init)(keys)
+    opt_state = jax.vmap(opt.init)(params)
+    adj = jnp.asarray(np.ones((nodes, nodes)) - np.eye(nodes), jnp.float32)
+    rng = np.random.default_rng(0)
+    batch = {k: jnp.asarray(rng.integers(0, cfg.vocab, (nodes, 2, 16)),
+                            jnp.int32) for k in ("tokens", "labels")}
+    return lm, opt, adj, params, opt_state, batch
+
+
+def test_compressed_vmap_round_tracks_dense_round():
+    """int8 wire compression perturbs the DecDiff round by at most the
+    quantization grain: the compressed round stays near the dense round and
+    the gossip still pulls nodes together."""
+    from repro.comm import make_codec
+
+    lm, opt, adj, params, opt_state, batch = _tiny_lm_world()
+    dense_fn = jax.jit(build_dfl_round(lm, opt, adj))
+    codec = make_codec("int8", stochastic=False)
+    comp_fn = jax.jit(build_dfl_round(lm, opt, adj, codec=codec))
+    dense = dense_fn(params, opt_state, jnp.int32(0), batch)
+    comp = comp_fn(params, opt_state, jnp.int32(0), batch)
+    d0 = float(tree_l2_dist(tree_index(params, 0), tree_index(params, 1)))
+    d_dense_comp = float(tree_l2_dist(dense[0], comp[0]))
+    assert 0.0 < d_dense_comp < 0.05 * d0  # wire noise, not a different round
+    d1 = float(tree_l2_dist(tree_index(comp[0], 0), tree_index(comp[0], 1)))
+    assert d1 < d0  # compressed DecDiff still contracts the pair
+
+
+@pytest.mark.multihost
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices for a (pod, data, model) mesh")
+def test_compressed_shardmap_round_matches_compressed_vmap_round():
+    """The int8-compressed shard_map round (payload all_gather over the pod
+    ring, dequantize-then-DecDiff) must reproduce the compressed vmap round
+    on a multi-device CPU mesh (CI forces 4 host devices via XLA_FLAGS)."""
+    from repro.comm import make_codec
+    from repro.dist.dfl_step import build_dfl_round_shardmap
+
+    lm, opt, adj, params, opt_state, batch = _tiny_lm_world()
+    codec = make_codec("int8", stochastic=False)
+    ref = jax.jit(build_dfl_round(lm, opt, adj, codec=codec))(
+        params, opt_state, jnp.int32(0), batch)
+    mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"))
+    with mesh:
+        got = jax.jit(build_dfl_round_shardmap(lm, opt, adj, mesh,
+                                               codec=codec))(
+            params, opt_state, jnp.int32(0), batch)
+    assert float(tree_l2_dist(ref[0], got[0])) < 1e-4
+    assert abs(float(ref[2]) - float(got[2])) < 1e-5
+
+
 def test_dfl_round_runs_and_descends():
     """2-node DFL round on a tiny LM: loss finite, params move, gossip pulls
     the two nodes together."""

@@ -109,6 +109,39 @@ def test_neighbor_avg_sweep(n, d, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("n,d", [(1, 10), (3, 100), (16, 5000), (50, 2048)])
+def test_dequant_neighbor_avg_sweep(n, d):
+    from repro.kernels import dequant_neighbor_avg
+    from repro.kernels.ref import dequant_neighbor_avg_ref
+
+    rng = np.random.default_rng(n * d + 1)
+    q = jnp.asarray(rng.integers(-127, 128, (n, d)), jnp.int8)
+    sc = jnp.asarray(rng.random(n) * 0.02 + 1e-4, jnp.float32)
+    w = jnp.asarray(rng.random(n) + 0.1, jnp.float32)
+    got = dequant_neighbor_avg(q, sc, w)
+    want = dequant_neighbor_avg_ref(q, sc, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dequant_neighbor_avg_fuses_codec_payload():
+    """Feeding the kernel a real int8 codec payload equals dequantize-then-
+    neighbor_avg (the unfused two-pass reference)."""
+    from repro.comm import make_codec
+    from repro.kernels import dequant_neighbor_avg
+
+    codec = make_codec("int8", stochastic=False)
+    rng = np.random.default_rng(9)
+    vecs = jnp.asarray(rng.standard_normal((6, 4096)), jnp.float32)
+    enc = jax.vmap(lambda v: codec.encode(v)[0])(vecs)
+    dq = jax.vmap(codec.decode)(enc)  # [6, 4096] dequantized models
+    w = jnp.asarray(rng.random(6) + 0.1, jnp.float32)
+    got = dequant_neighbor_avg(enc["q"], enc["scale"], w)
+    want = neighbor_avg(dq, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("b,w,kk,g,hd", [(1, 16, 1, 1, 16), (2, 600, 2, 2, 64),
                                          (4, 1024, 8, 1, 128), (3, 512, 4, 8, 64)])
 @pytest.mark.parametrize("cache_dtype", [jnp.float32, jnp.bfloat16])
