@@ -6,11 +6,13 @@ gossip transports and prints the accuracy-vs-bytes tradeoff, e.g.:
     PYTHONPATH=src python examples/compressed_gossip.py --rounds 15
     PYTHONPATH=src python examples/compressed_gossip.py \
         --codec int8 --threshold 1.0 --verbose
+    PYTHONPATH=src python examples/compressed_gossip.py \
+        --codec int8 --adaptive 0.9   # per-edge drift-rate control
 
 With no --codec it sweeps the default frontier (fp32 dense reference, bf16,
-int8 with and without the drift trigger, top-k).  See README "The
-repro.comm layer" for how to read the output; `python -m
-benchmarks.bench_comm` is the full artifact-emitting version.
+int8 with fixed-threshold and adaptive per-edge triggering, top-k).  See
+docs/comm.md for how to read the output; `python -m benchmarks.bench_comm`
+is the full artifact-emitting version.
 """
 import argparse
 import os
@@ -38,36 +40,48 @@ def main():
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--codec", choices=["fp32", "bf16", "int8", "topk"])
     ap.add_argument("--threshold", type=float, default=0.0)
+    ap.add_argument("--adaptive", type=float, metavar="TARGET",
+                    help="per-edge adaptive thresholds converging each "
+                         "link's trigger rate to TARGET (overrides "
+                         "--threshold)")
     ap.add_argument("--topk-ratio", type=float, default=0.05)
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks.bench_comm import smoke_world
+    from benchmarks.bench_comm import smoke_world, trigger_label
 
     world = smoke_world()
     if args.codec:
-        sweep = [CommConfig(codec=args.codec, trigger_threshold=args.threshold,
-                            topk_ratio=args.topk_ratio)]
+        kw = ({"policy": "adaptive", "target_trigger": args.adaptive}
+              if args.adaptive is not None
+              else {"trigger_threshold": args.threshold})
+        sweep = [CommConfig(codec=args.codec, topk_ratio=args.topk_ratio,
+                            **kw)]
     else:
+        target = 0.9 if args.adaptive is None else args.adaptive
         sweep = [
             CommConfig(codec="fp32"),
             CommConfig(codec="bf16"),
             CommConfig(codec="int8"),
             CommConfig(codec="int8", trigger_threshold=1.0),
+            CommConfig(codec="int8", policy="adaptive",
+                       target_trigger=target),
             CommConfig(codec="topk", topk_ratio=args.topk_ratio),
         ]
 
-    print(f"{'codec':>6} {'thr':>5} | {'final acc':>9} | {'wire MB':>8} | "
-          f"{'trig':>5} | reduction")
+    print(f"{'codec':>6} {'trigger':>14} | {'final acc':>9} | {'wire MB':>8} "
+          f"| {'trig':>5} | reduction")
     dense_bytes = None
     for comm in sweep:
         sim, hist = run_one(world, comm, args.rounds, verbose=args.verbose)
         if dense_bytes is None and comm.codec == "fp32" \
-                and comm.trigger_threshold == 0.0:
+                and comm.policy == "fixed" and comm.trigger_threshold == 0.0:
             dense_bytes = sim.comm_bytes_total
         red = ("-" if dense_bytes is None
                else f"{dense_bytes / max(sim.comm_bytes_total, 1):.1f}x")
-        print(f"{comm.codec:>6} {comm.trigger_threshold:>5} | "
+        trig = trigger_label(comm.policy, comm.trigger_threshold,
+                             comm.target_trigger)
+        print(f"{comm.codec:>6} {trig:>14} | "
               f"{hist[-1].acc_mean:>9.4f} | "
               f"{sim.comm_bytes_total / 1e6:>8.2f} | "
               f"{hist[-1].triggered_frac:>5.2f} | {red}")

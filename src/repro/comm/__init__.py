@@ -4,12 +4,18 @@ What the paper models as "ship full fp32 models to every neighbour every
 round" becomes a measured quantity here:
 
   codecs    — per-edge payload compression (fp32 / bf16 / stochastic int8 /
-              top-k with error feedback), each with exact bytes_on_wire,
+              top-k with error feedback and optional momentum-masked
+              selection), each with exact bytes_on_wire,
   trigger   — event-triggered transmission: send only when the model has
-              drifted past a threshold since the last payload,
-  transport — CommConfig + GossipTransport tying both into the simulator
-              (repro.fl.simulator) and the dist rounds (repro.dist.dfl_step),
-              with bytes/round and triggered-fraction accounting.
+              drifted past a threshold since the last payload — per node
+              (one scalar) or per edge (drift-rate-adaptive thresholds that
+              converge each link to a target triggered fraction),
+  transport — CommConfig + GossipTransport (per-node state) +
+              EdgeGossipTransport (per-edge `[N, max_deg, ...]` state that
+              survives link failures independently), tying both into the
+              simulator (repro.fl.simulator) and the dist rounds
+              (repro.dist.dfl_step), with bytes/round and
+              triggered-fraction accounting.
 
 Receivers always dequantize before aggregating, so DecDiff's Eq. 5-6 act on
 reconstructed models and the algorithm's semantics never change — only the
@@ -28,7 +34,14 @@ from repro.comm.codecs import (  # noqa: F401
 from repro.comm.transport import (  # noqa: F401
     CommConfig,
     CommState,
+    EdgeCommState,
+    EdgeGossipTransport,
     GossipTransport,
     codec_roundtrip_stacked,
 )
-from repro.comm.trigger import drift_gate, edge_delivery  # noqa: F401
+from repro.comm.trigger import (  # noqa: F401
+    adaptive_threshold_update,
+    drift_gate,
+    edge_delivery,
+    edge_drift_gate,
+)

@@ -139,24 +139,50 @@ class TopKCodec(Codec):
     everything else stays in the residual and rides along to the next send.
     k = max(1, round(ratio * size)) — static per vector length, so the wire
     size is static too (8k + 4 bytes incl. the length word).
+
+    With `momentum > 0` the selection runs on a *momentum-masked* score
+    (Deep-Gradient-Compression style): score = |x| + momentum * score_prev,
+    so coordinates that keep mattering across rounds accumulate selection
+    pressure and win a slot even when a transient spike would otherwise
+    crowd them out; a selected coordinate resets its score to zero.  The
+    score rides as a second row of the residual state (`[2, D]`: row 0 the
+    EF residual, row 1 the score) — it never touches the wire, and
+    momentum = 0 degenerates bit-for-bit to plain magnitude top-k with the
+    legacy `[D]` residual.
     """
 
     name: str = "topk"
     is_delta: bool = True
     has_residual: bool = True
     ratio: float = 0.01
+    momentum: float = 0.0
 
     def k_for(self, size: int) -> int:
         return max(1, int(round(self.ratio * size)))
 
+    def init_residual(self, vec):
+        if self.momentum > 0:
+            return jnp.zeros((2,) + vec.shape[-1:], jnp.float32)
+        return jnp.zeros_like(vec, jnp.float32)
+
     def encode(self, vec, rng=None, residual=None):
         x = vec.astype(jnp.float32)
+        with_momentum = self.momentum > 0 and residual is not None
         if residual is not None:
-            x = x + residual
+            x = x + (residual[0] if with_momentum else residual)
         k = self.k_for(x.shape[-1])
-        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        score = jnp.abs(x)
+        if with_momentum:
+            score = score + jnp.float32(self.momentum) * residual[1]
+        _, idx = jax.lax.top_k(score, k)
         vals = x[idx]
-        new_res = (x.at[idx].set(0.0) if residual is not None else None)
+        if residual is None:
+            new_res = None
+        elif with_momentum:
+            new_res = jnp.stack([x.at[idx].set(0.0),
+                                 score.at[idx].set(0.0)])
+        else:
+            new_res = x.at[idx].set(0.0)
         payload = {
             "idx": idx.astype(jnp.int32),
             "vals": vals.astype(jnp.float32),

@@ -2,26 +2,49 @@
 
 Sits between local training and aggregation.  Each round every node:
 
-  1. measures its drift ||w_i - w_i^last_sent|| and decides whether to
-     transmit (trigger.drift_gate; threshold 0 = always send),
+  1. measures its drift ||w_i - w^last_sent|| and decides whether to
+     transmit (trigger module; threshold 0 = always send),
   2. if transmitting, encodes its payload — delta codecs (int8, top-k)
-     compress w_i - w_i^last_sent plus the carried error-feedback residual,
+     compress the drift plus the carried error-feedback residual,
      dense codecs (fp32, bf16) the model itself,
   3. receivers dequantize first and aggregate second, so DecDiff's Eq. 5-6
      semantics are untouched: the aggregator simply sees ŵ_j instead of w_j.
 
-The transport is a shared-memory stand-in for N independent radios, so the
-"wire" state is held once: `last_sent[j]` doubles as the sender's trigger
-reference AND the receivers' cached copy of j's reconstruction reference
-(receivers of a delta codec start from the all-zeros reference, so no
-out-of-band full-model bootstrap is assumed — the first payload carries the
-whole model through the codec).
+Two transports share the codecs and that round shape:
+
+`GossipTransport` — per-NODE state (the PR-2 broadcast model): one
+`last_sent[j]` [N, D] doubles as sender j's trigger reference AND every
+receiver's cached copy of j's reconstruction, one shared residual per node.
+A node encodes once and broadcasts the same payload on all its edges.
+
+`EdgeGossipTransport` — per-EDGE state in the padded-neighbour layout
+(`[N, max_deg, ...]`): each directed link (i -> j) keeps its own
+`last_sent[i, d]`, error-feedback `residual[i, d]`, adaptive `threshold
+[i, d]` and drift EMA, where d is j's slot in i's neighbour list.  The
+payload for each edge is encoded against *that edge's* reference, and —
+the point of the exercise — state only advances on links that actually
+delivered: a Bernoulli link failure on (i, j) leaves both (i, j)'s and
+(i, k)'s residuals bit-identical to their no-traffic values instead of
+poisoning a shared top-k error-feedback buffer for every neighbour.  The
+receiver-side cache interpretation is exact: `last_sent[i, d]` IS what the
+receiver on that edge holds (the per-node transport loses this the moment
+one link drops), so "stale" aggregation serves genuinely per-link staleness.
+Cost: encode runs per edge, not per node, and state is max_deg x larger —
+the price of personalized links (the wire bytes are identical when all
+edges of a node fire together).
+
+Thresholds are either `fixed` (the scalar `trigger_threshold` on every
+edge) or `adaptive`: a per-edge Robbins-Monro controller tracks the
+(1 - target_trigger)-quantile of that edge's drift so each link's long-run
+triggered fraction converges to `target_trigger` (see trigger.py).
 
 Accounting is exact and static: `payload_bytes` is the serialized size of
-one payload (codec.payload_bytes_for), so bytes-on-wire per round is
-payload_bytes x Σ_i gate_i x outdeg_i — a transmitting node broadcasts one
-payload per outgoing edge.  Failed links still burn the sender's bytes
-(the sender cannot know), they just deliver nothing.
+one payload (codec.payload_bytes_for).  Bytes-on-wire per round is
+payload_bytes x (number of fired edges) — per-node: Σ_i gate_i x outdeg_i;
+per-edge: Σ_ij gate_ij.  Failed links still burn the sender's bytes (the
+sender cannot know *at send time*), they just deliver nothing; the per-edge
+transport additionally models a link-layer ack, which is how it knows not
+to advance a dropped link's reference.
 """
 from __future__ import annotations
 
@@ -30,10 +53,17 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm.codecs import Codec, make_codec
-from repro.comm.trigger import drift_gate
+from repro.comm.trigger import (
+    adaptive_threshold_update,
+    drift_gate,
+    edge_drift_gate,
+)
 from repro.utils.pytree import tree_flatten_stacked
+
+POLICIES = ("fixed", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,9 +71,23 @@ class CommConfig:
     """Transport knobs, carried on SimulatorConfig.comm.
 
     codec: "fp32" | "bf16" | "int8" | "topk".
-    trigger_threshold: L2 drift below which a node stays silent (0 = the
-      legacy always-send behaviour, bit-for-bit).
+    trigger_threshold: L2 drift below which a sender stays silent (0 = the
+      legacy always-send behaviour, bit-for-bit).  Used by the "fixed"
+      policy; the "adaptive" policy learns per-edge thresholds instead.
+    policy: "fixed" (one scalar threshold everywhere) or "adaptive"
+      (per-edge drift-rate-controlled thresholds; implies per-edge state).
+    per_edge: keep transport state per directed link `[N, max_deg, ...]`
+      instead of per node — independent error-feedback residuals and
+      staleness per link, surviving Bernoulli link failures independently.
+      Forced on by policy="adaptive".
+    target_trigger: adaptive policy's per-edge long-run triggered fraction
+      target, in (0, 1].
+    drift_ema_beta: decay of the per-edge drift EMA that scales the
+      adaptive controller's step.
+    threshold_rate: adaptive controller gain.
     topk_ratio: fraction of coordinates the top-k codec ships.
+    topk_momentum: momentum-masked top-k selection (0 = plain magnitude
+      top-k); see codecs.TopKCodec.
     stochastic: int8 rounding mode (True = unbiased stochastic rounding;
       False = deterministic nearest, needed for vmap/shard_map equality).
     on_silence: what receivers aggregate for a neighbour whose trigger did
@@ -58,7 +102,13 @@ class CommConfig:
 
     codec: str = "fp32"
     trigger_threshold: float = 0.0
+    policy: str = "fixed"
+    per_edge: bool = False
+    target_trigger: float = 0.5
+    drift_ema_beta: float = 0.9
+    threshold_rate: float = 0.5
     topk_ratio: float = 0.01
+    topk_momentum: float = 0.0
     stochastic: bool = True
     on_silence: str = "stale"
 
@@ -66,11 +116,25 @@ class CommConfig:
         if self.on_silence not in ("stale", "drop"):
             raise ValueError(f"on_silence must be 'stale' or 'drop', "
                              f"got {self.on_silence!r}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {self.policy!r}")
+        if self.policy == "adaptive" and not (0.0 < self.target_trigger <= 1.0):
+            raise ValueError(f"target_trigger must be in (0, 1], "
+                             f"got {self.target_trigger}")
+
+    @property
+    def use_per_edge(self) -> bool:
+        """Per-edge state is explicit (`per_edge`) or implied by the
+        adaptive policy (per-edge thresholds need per-edge references)."""
+        return self.per_edge or self.policy == "adaptive"
 
     def make_codec(self) -> Codec:
         kwargs = {}
         if self.codec == "topk":
             kwargs["ratio"] = self.topk_ratio
+            if self.topk_momentum > 0:
+                kwargs["momentum"] = self.topk_momentum
         if self.codec == "int8":
             kwargs["stochastic"] = self.stochastic
         return make_codec(self.codec, **kwargs)
@@ -80,8 +144,22 @@ class CommState(NamedTuple):
     """Per-node transport state, threaded through the jitted round."""
 
     last_sent: jnp.ndarray            # [N, D] last reconstruction on the wire
-    residual: Optional[jnp.ndarray]   # [N, D] EF residual (None if stateless)
+    residual: Optional[jnp.ndarray]   # [N, ...] EF residual (None if stateless)
     ever_sent: jnp.ndarray            # [N] {0,1}: has node i transmitted yet?
+
+
+class EdgeCommState(NamedTuple):
+    """Per-EDGE transport state, `[N, max_deg, ...]` padded-neighbour layout.
+
+    Slot d of node i is the directed link i -> nbr_idx[i, d]; padding slots
+    exist but never fire and never update.
+    """
+
+    last_sent: jnp.ndarray            # [N, E, D] per-link reconstruction ref
+    residual: Optional[jnp.ndarray]   # [N, E, ...] per-link EF residual
+    threshold: jnp.ndarray            # [N, E] per-link trigger thresholds
+    drift_ema: jnp.ndarray            # [N, E] per-link drift EMA (adaptive)
+    ever_delivered: jnp.ndarray       # [N, E] {0,1}: link ever delivered?
 
 
 class GossipTransport:
@@ -100,7 +178,8 @@ class GossipTransport:
 
     def init_state(self, stacked_params) -> CommState:
         mat, _ = tree_flatten_stacked(stacked_params)
-        residual = (jnp.zeros_like(mat) if self.codec.has_residual else None)
+        residual = (jax.vmap(self.codec.init_residual)(mat)
+                    if self.codec.has_residual else None)
         # zero reference: the first transmission carries the full model
         # through the codec, so receivers need no out-of-band bootstrap.
         return CommState(last_sent=jnp.zeros_like(mat), residual=residual,
@@ -146,10 +225,177 @@ class GossipTransport:
         if codec.has_residual:
             # a silent node keeps accumulating: its un-flushed residual
             # stays put until the trigger fires again.
-            new_res = jnp.where(sent, new_res, state.residual)
+            keep = gate.reshape((self.n,) + (1,) * (new_res.ndim - 1)) > 0
+            new_res = jnp.where(keep, new_res, state.residual)
         new_state = CommState(last_sent=new_last, residual=new_res,
                               ever_sent=jnp.maximum(state.ever_sent, gate))
         return self._unflatten(new_last), gate, new_state
+
+
+class EdgeGossipTransport:
+    """Per-edge transport: one (reference, residual, threshold) per link.
+
+    Construction takes the graph's padded-neighbour layout (`nbr_idx`
+    [N, E] int with -1 padding, `nbr_valid` [N, E] {0,1}) because per-edge
+    state is keyed by (sender, slot) and the receiver-side gather needs the
+    *reverse* slot map: receiver r hearing neighbour j at slot e reads
+    sender j's edge state at slot rev[r, e] (the slot of r in j's list).
+    """
+
+    def __init__(self, config: CommConfig, stacked_params,
+                 nbr_idx: np.ndarray, nbr_valid: np.ndarray):
+        self.config = config
+        self.codec = config.make_codec()
+        mat, self._unflatten = tree_flatten_stacked(stacked_params)
+        self.n, self.d = int(mat.shape[0]), int(mat.shape[1])
+        self.e = int(nbr_idx.shape[1])
+        self.payload_bytes = self.codec.payload_bytes_for(self.d)
+        self.dense_bytes = 4 * self.d
+        self.wants_rng = (self.codec.needs_rng
+                          and getattr(self.codec, "stochastic", True))
+
+        idx = np.asarray(nbr_idx, np.int64)
+        valid = np.asarray(nbr_valid, np.float32)
+        # reverse slot map: rev[r, e] = d s.t. nbr_idx[j, d] == r for
+        # j = nbr_idx[r, e] (exists for every valid slot: undirected graph).
+        rev = np.zeros((self.n, self.e), np.int32)
+        for r in range(self.n):
+            for e in range(self.e):
+                j = idx[r, e]
+                if j < 0:
+                    continue
+                (slots,) = np.nonzero(idx[j] == r)
+                if slots.size == 0:
+                    raise ValueError(
+                        f"neighbour layout not symmetric: {r} lists {j} but "
+                        f"{j} does not list {r} — per-edge state needs an "
+                        f"undirected graph")
+                rev[r, e] = int(slots[0])
+        self.nbr_idx = jnp.asarray(np.maximum(idx, 0).astype(np.int32))
+        self.nbr_valid = jnp.asarray(valid)
+        self.rev_slot = jnp.asarray(rev)
+        self.num_edges = float(valid.sum())  # directed edge count
+
+    def init_state(self, stacked_params) -> EdgeCommState:
+        mat, _ = tree_flatten_stacked(stacked_params)
+        zeros_edges = jnp.zeros((self.n, self.e, self.d), jnp.float32)
+        if self.codec.has_residual:
+            res0 = self.codec.init_residual(mat[0])
+            residual = jnp.zeros((self.n, self.e) + res0.shape, jnp.float32)
+        else:
+            residual = None
+        # fixed policy: the scalar threshold on every edge; adaptive: start
+        # at 0 (always-send bootstrap — the first payloads carry the full
+        # model through delta codecs) and let the controller raise it.
+        thr0 = (self.config.trigger_threshold
+                if self.config.policy == "fixed" else 0.0)
+        return EdgeCommState(
+            last_sent=zeros_edges,
+            residual=residual,
+            threshold=jnp.full((self.n, self.e), thr0, jnp.float32),
+            drift_ema=jnp.zeros((self.n, self.e), jnp.float32),
+            ever_delivered=jnp.zeros((self.n, self.e), jnp.float32),
+        )
+
+    def _swap_layout(self, arr):
+        """Swap an [N, E, ...] array between the sender and receiver edge
+        layouts (an involution: entry (i, e) of the result reads the other
+        endpoint's slot for the same directed link, nbr_idx[i, e] at
+        rev_slot[i, e]).  Receiver->sender: link_mask[r, e] becomes the
+        sender-side ack for i -> nbr_idx[i, e].  Sender->receiver: edge
+        state (i, d) lands at the slot where receiver r hears i."""
+        return arr[self.nbr_idx, self.rev_slot]
+
+    def exchange(self, stacked_params, state: EdgeCommState, link_mask,
+                 rng=None):
+        """One per-edge transport round.
+
+        Args:
+          stacked_params: pytree, leaves [N, ...].
+          state: EdgeCommState.
+          link_mask: [N, E] receiver-layout exogenous link mask (1 = the
+            (nbr_idx[r, e] -> r) link is up; includes neighbour validity).
+          rng: PRNG key when the codec wants one.
+
+        Returns (gathered, agg_mask, gate, new_state):
+          gathered — pytree with leaves [N, E, ...]: slot e of node r holds
+            r's CURRENT reconstruction of neighbour nbr_idx[r, e] (fresh if
+            the edge delivered this round, the per-link stale cache
+            otherwise — receivers always have their own cache),
+          agg_mask — [N, E] receiver-layout aggregation mask per the
+            on_silence policy,
+          gate — [N, E] sender-layout {0,1} fired edges (bytes accounting),
+          new_state — the threaded EdgeCommState.
+        """
+        codec, cfg = self.codec, self.config
+        w, _ = tree_flatten_stacked(stacked_params)
+        gate, drift = edge_drift_gate(w, state.last_sent, state.threshold,
+                                      self.nbr_valid)
+        # link-layer ack: a payload advances its edge's state only if the
+        # edge fired AND the link stayed up (sender layout).
+        sender_link = self._swap_layout(link_mask)
+        delivered = gate * sender_link
+
+        x = (w[:, None, :] - state.last_sent if codec.is_delta
+             else jnp.broadcast_to(w[:, None, :], state.last_sent.shape))
+        if self.wants_rng:
+            if rng is None:
+                raise ValueError(f"codec {codec.name!r} needs an rng key")
+            keys = jax.random.split(rng, self.n * self.e).reshape(
+                self.n, self.e, 2)
+        else:
+            keys = jnp.zeros((self.n, self.e, 2), jnp.uint32)
+
+        def enc_dec(xi, key, res):
+            payload, new_res = codec.encode(
+                xi, rng=key if self.wants_rng else None, residual=res)
+            return codec.decode(payload, out_size=self.d), new_res
+
+        vv = lambda f: jax.vmap(jax.vmap(f))
+        if codec.has_residual:
+            dec, enc_res = vv(enc_dec)(x, keys, state.residual)
+        else:
+            dec, _ = vv(lambda xi, key: enc_dec(xi, key, None))(x, keys)
+            enc_res = None
+
+        recon = state.last_sent + dec if codec.is_delta else dec
+        adv = delivered[:, :, None] > 0
+        new_last = jnp.where(adv, recon, state.last_sent)
+        if codec.has_residual:
+            # the EF residual tracks DELIVERED information only: a dropped
+            # or silent link keeps its residual bit-identical (the pending
+            # drift is recomputed from the unchanged reference next round).
+            keep = delivered.reshape(
+                (self.n, self.e) + (1,) * (enc_res.ndim - 2)) > 0
+            new_res = jnp.where(keep, enc_res, state.residual)
+        else:
+            new_res = None
+
+        if cfg.policy == "adaptive":
+            new_thr, new_ema = adaptive_threshold_update(
+                state.threshold, state.drift_ema, drift, gate,
+                self.nbr_valid, target=cfg.target_trigger,
+                ema_beta=cfg.drift_ema_beta, rate=cfg.threshold_rate)
+        else:
+            new_thr, new_ema = state.threshold, state.drift_ema
+        ever = jnp.maximum(state.ever_delivered, delivered)
+        new_state = EdgeCommState(last_sent=new_last, residual=new_res,
+                                  threshold=new_thr, drift_ema=new_ema,
+                                  ever_delivered=ever)
+
+        # receiver view: slot e of node r is sender j's edge state toward r.
+        gathered = self._unflatten(
+            self._swap_layout(new_last).reshape(self.n * self.e, self.d))
+        gathered = jax.tree.map(
+            lambda l: l.reshape((self.n, self.e) + l.shape[1:]), gathered)
+        if cfg.on_silence == "drop":
+            agg_mask = link_mask * self._swap_layout(gate)
+        else:
+            # stale: aggregate the per-link cache at full weight, masking
+            # only links that never delivered (cache = zero bootstrap);
+            # exogenous failures still drop (a loss, not a decision).
+            agg_mask = link_mask * self._swap_layout(ever)
+        return gathered, agg_mask, gate, new_state
 
 
 def codec_roundtrip_stacked(codec: Codec, stacked, rng=None):

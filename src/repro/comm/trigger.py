@@ -2,13 +2,30 @@
 
 The paper imposes no round synchronization, and its communication-efficiency
 claim invites going further: a node only *transmits* when its model has
-drifted since the last payload it put on the wire,
+drifted since the last payload it put on the wire.  Two granularities:
 
-    send_i = 1{ ||w_i - w_i^last_sent||_2 >= threshold },
+  per-NODE (`drift_gate`, the PR-2 policy): one reference per sender,
 
-so stretches of slow local progress cost zero bytes.  threshold = 0
-degenerates to always-send (drift >= 0 holds identically), which is how the
-equivalence tests pin this path against the legacy Bernoulli-mask round.
+      send_i = 1{ ||w_i - w_i^last_sent||_2 >= threshold },
+
+  per-EDGE (`edge_drift_gate`): one reference per directed link (i -> j),
+  laid out `[N, max_deg]` in the padded-neighbour geometry, so a hub in a
+  Barabási–Albert graph throttles each of its links independently and a
+  dropped link's staleness never leaks into its siblings,
+
+      send_ij = 1{ ||w_i - w_ij^last_sent||_2 >= threshold_ij }.
+
+threshold = 0 degenerates to always-send (drift >= 0 holds identically),
+which is how the equivalence tests pin both paths against the legacy
+Bernoulli-mask round.
+
+Per-edge thresholds can be *adaptive* (`adaptive_threshold_update`): each
+edge runs a Robbins-Monro quantile tracker that nudges its threshold toward
+the (1 - target)-quantile of that edge's observed drift, so the long-run
+triggered fraction converges to `target` per link — the personalized
+event-triggering Zehtabi et al. argue for on resource-constrained edges —
+with the step size scaled by the edge's drift EMA so the controller is
+scale-free in the model's units.
 
 The gate is a per-*sender* decision; exogenous per-edge link failures (the
 existing `participation` Bernoulli mask) compose multiplicatively on top:
@@ -22,6 +39,11 @@ feeds the gate into `edge_delivery` so silence looks like a failed link.
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+# Floor for the EMA-scaled adaptation step: keeps the controller live when an
+# edge's drift collapses to ~0 (converged model) without letting the
+# threshold run away in units the drift can never reach again.
+EMA_FLOOR = 1e-8
 
 
 def drift_gate(w, last_sent, threshold: float):
@@ -39,6 +61,69 @@ def drift_gate(w, last_sent, threshold: float):
         w.astype(jnp.float32) - last_sent.astype(jnp.float32)), axis=1))
     gate = (drift >= jnp.float32(threshold)).astype(jnp.float32)
     return gate, drift
+
+
+def edge_drift_gate(w, last_sent, threshold, valid):
+    """Per-edge send gates from per-link drift.
+
+    Args:
+      w: [N, D] current flat models (fp32).
+      last_sent: [N, E, D] per-edge reconstruction references — what the
+        receiver on each outgoing edge actually holds (E = max_deg slots in
+        the padded-neighbour layout).
+      threshold: [N, E] per-edge thresholds (or a scalar broadcast).
+      valid: [N, E] {0,1} edge validity (padding slots never fire).
+
+    Returns:
+      (gate [N, E] {0.,1.} float32, drift [N, E] float32 L2 drift per edge).
+    """
+    diff = (w.astype(jnp.float32)[:, None, :]
+            - last_sent.astype(jnp.float32))
+    drift = jnp.sqrt(jnp.sum(jnp.square(diff), axis=-1))
+    gate = (drift >= threshold).astype(jnp.float32) * valid
+    return gate, drift
+
+
+def adaptive_threshold_update(threshold, drift_ema, drift, gate, valid, *,
+                              target: float, ema_beta: float, rate: float):
+    """One step of the per-edge drift-rate controller.
+
+    A Robbins-Monro quantile tracker per edge: the threshold moves up when
+    the edge fired and down when it stayed silent, with step sizes chosen so
+    the unique fixed point of E[step] = 0 is a triggered fraction of exactly
+    `target`:
+
+        thr' = max(0, thr + rate * max(ema', floor) * (gate - target))
+
+    The drift EMA scales the step so adaptation speed is proportional to the
+    edge's own drift magnitude (scale-free: multiplying the model by c
+    multiplies drift, EMA, threshold, and step all by c).  An all-zero
+    initial threshold makes the first rounds always-send, which doubles as
+    the bootstrap that carries the full model through delta codecs.
+
+    Args:
+      threshold: [N, E] current per-edge thresholds.
+      drift_ema: [N, E] running drift EMA per edge.
+      drift:     [N, E] this round's observed drift per edge.
+      gate:      [N, E] {0,1} whether the edge fired this round.
+      valid:     [N, E] {0,1} edge validity (padding slots stay frozen).
+      target:    desired long-run triggered fraction per edge, in (0, 1].
+      ema_beta:  drift EMA decay (state' = beta * state + (1-beta) * drift).
+      rate:      controller gain.
+
+    Returns (new_threshold [N, E], new_drift_ema [N, E]).
+    """
+    # seed the EMA with the first observed drift (an all-zero EMA would make
+    # the controller's early steps vanishingly small and stretch the
+    # always-send bootstrap for tens of rounds)
+    new_ema = jnp.where(drift_ema > 0,
+                        ema_beta * drift_ema + (1.0 - ema_beta) * drift,
+                        drift)
+    step = rate * jnp.maximum(new_ema, EMA_FLOOR) * (gate - jnp.float32(target))
+    new_thr = jnp.maximum(threshold + step, 0.0)
+    keep = valid > 0
+    return (jnp.where(keep, new_thr, threshold),
+            jnp.where(keep, new_ema, drift_ema))
 
 
 def edge_delivery(gate, link_mask, nbr_idx):

@@ -21,6 +21,10 @@ Both also accept a repro.comm codec: the exchange then carries the encoded
 payload (int8 / top-k wire format — in the shard_map round the all_gather
 itself moves the payload, which is the real inter-pod traffic win) and every
 receiver dequantizes before DecDiff, leaving Eq. 5-6 semantics unchanged.
+For int8 the shard_map round fuses the dequantization into the Eq. 6
+reduction with the `dequant_neighbor_avg_rows` Pallas kernel (the gathered
+payload is reduced directly; the fp32 neighbour models are never
+materialized), with the vmap round as the equivalence oracle.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.codecs import Int8Codec
 from repro.comm.transport import codec_roundtrip_stacked
 from repro.core.decdiff import DEFAULT_S
 from repro.dist.sharding import NODE_AXIS
@@ -43,18 +48,17 @@ def _normalized(adj, mask):
     return adj / jnp.where(row > 0, row, 1.0)[:, None], row
 
 
-def _decdiff_apply(local, full, wn, row, s):
-    """Eq. 6 then Eq. 5 for a block of nodes.
+def _decdiff_step_from_avg(local, avg, row, s):
+    """Eq. 5 for a block of nodes, given the Eq. 6 average.
 
-    `local` has leaves [R, ...] (the nodes being updated), `full` leaves
-    [N, ...] (every candidate neighbour, already cast for the exchange),
-    `wn` [R, N] row-normalized weights, `row` [R] the pre-normalization row
-    sums (0 -> the node heard from nobody and keeps its local model).
-    Shared by the vmap and shard_map rounds so the gating/dtype rules cannot
+    `local` has leaves [R, ...] (the nodes being updated), `avg` the
+    like-structured precomputed neighbourhood averages (fp32), `row` [R]
+    the pre-normalization weight-row sums (0 -> the node heard from nobody
+    and keeps its local model).  The SINGLE implementation of the
+    gating/dtype rules — every execution of the round (vmap, shard_map,
+    fused-payload shard_map) funnels through it so the rules cannot
     diverge.
     """
-    avg = jax.tree.map(
-        lambda x: jnp.einsum("rj,j...->r...", wn, x.astype(jnp.float32)), full)
     diff = jax.tree.map(lambda a, x: a - x.astype(jnp.float32), avg, local)
     sq = jax.tree.reduce(
         jnp.add,
@@ -69,6 +73,15 @@ def _decdiff_apply(local, full, wn, row, s):
         return (x.astype(jnp.float32) + sc * d).astype(x.dtype)
 
     return jax.tree.map(step_leaf, local, diff)
+
+
+def _decdiff_apply(local, full, wn, row, s):
+    """Eq. 6 then Eq. 5 for a block of nodes: `full` has leaves [N, ...]
+    (every candidate neighbour, already cast for the exchange), `wn` [R, N]
+    row-normalized weights."""
+    avg = jax.tree.map(
+        lambda x: jnp.einsum("rj,j...->r...", wn, x.astype(jnp.float32)), full)
+    return _decdiff_step_from_avg(local, avg, row, s)
 
 
 def decdiff_gossip(stacked, adj, s=DEFAULT_S, *, mask=None, gossip_dtype=None,
@@ -180,7 +193,8 @@ def build_dfl_round(lm, opt, adj, *, loss_kind: str = "vt", beta: float = 0.98,
 
 def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
                              beta: float = 0.98, s=DEFAULT_S,
-                             gossip_dtype=None, mask=None, codec=None):
+                             gossip_dtype=None, mask=None, codec=None,
+                             fuse_dequant: bool = True):
     """`build_dfl_round` as an explicit shard_map over the "pod" axis.
 
     Each pod holds `N / n_pods` nodes; the gossip exchange is an all_gather
@@ -195,9 +209,16 @@ def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
 
     With a `codec` (repro.comm) the all_gather moves the *encoded payload*
     (e.g. int8 values + one fp32 scale per node) instead of fp32 models —
-    the actual inter-pod wire reduction — and each pod dequantizes after the
-    gather, before DecDiff.  The codec must be deterministic (stochastic=
-    False for int8) so this round matches `build_dfl_round(codec=...)`.
+    the actual inter-pod wire reduction.  For the int8 codec the post-gather
+    path is KERNELIZED by default (`fuse_dequant=True`): instead of
+    decode-then-average (which materializes N dequantized fp32 models — 4x
+    the payload footprint plus an extra HBM round trip), the Pallas kernel
+    `repro.kernels.dequant_neighbor_avg_rows` folds the per-sender scales
+    into the Eq. 6 weights and reduces the int8 payload directly; Eq. 5 then
+    runs on the flat per-pod block.  `fuse_dequant=False` keeps the
+    decode-then-average formulation (the equivalence oracle, together with
+    `build_dfl_round(codec=...)`).  The codec must be deterministic
+    (stochastic=False for int8) so this round matches the vmap round.
     """
     if NODE_AXIS not in mesh.shape:
         return build_dfl_round(lm, opt, adj, loss_kind=loss_kind, beta=beta,
@@ -214,6 +235,7 @@ def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
     node_step = _make_node_step(lm, opt, loss_kind, beta)
     built_mask = (jnp.asarray(mask, jnp.float32) if mask is not None
                   else jnp.ones_like(adj))
+    fused_int8 = (fuse_dequant and isinstance(codec, Int8Codec))
 
     def gather_full(new_params):
         """The gossip exchange: what actually crosses the pod ring.
@@ -239,15 +261,36 @@ def build_dfl_round_shardmap(lm, opt, adj, mesh, *, loss_kind: str = "vt",
                                          tiled=True),
             new_params)
 
+    def fused_block(new_params, wn_blk, row_blk):
+        """Eq. 6 on the gathered int8 payload with dequantization fused
+        into the reduction (dequant_neighbor_avg_rows) — the reconstructed
+        fp32 neighbour models never exist in HBM — then the shared Eq. 5
+        step on the flat [per_pod, D] view (`unflatten` restores leaf
+        dtypes)."""
+        from repro.kernels import dequant_neighbor_avg_rows
+
+        w_local, unflatten = tree_flatten_stacked(new_params)  # [R, D] fp32
+        payload, _ = jax.vmap(lambda xi: codec.encode(xi))(w_local)
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, NODE_AXIS, axis=0, tiled=True),
+            payload)  # q [N, D] int8, scale [N] fp32
+        avg = dequant_neighbor_avg_rows(gathered["q"], gathered["scale"],
+                                        wn_blk)  # [R, D]
+        out = _decdiff_step_from_avg({"w": w_local}, {"w": avg}, row_blk, s)
+        return unflatten(out["w"])
+
     def block(params, opt_state, step, batch, mask):
         new_params, new_state, losses = jax.vmap(
             node_step, in_axes=(0, 0, None, 0))(params, opt_state, step, batch)
-        full = gather_full(new_params)
         wn, row = _normalized(adj, mask)
         i0 = jax.lax.axis_index(NODE_AXIS) * per_pod
         wn_blk = jax.lax.dynamic_slice_in_dim(wn, i0, per_pod, axis=0)
         row_blk = jax.lax.dynamic_slice_in_dim(row, i0, per_pod, axis=0)
-        out = _decdiff_apply(new_params, full, wn_blk, row_blk, s)
+        if fused_int8:
+            out = fused_block(new_params, wn_blk, row_blk)
+        else:
+            full = gather_full(new_params)
+            out = _decdiff_apply(new_params, full, wn_blk, row_blk, s)
         loss = jax.lax.pmean(jnp.mean(losses), NODE_AXIS)
         return out, new_state, loss
 

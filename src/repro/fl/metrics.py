@@ -24,8 +24,9 @@ class RoundMetrics:
     loss_per_node: np.ndarray  # [N]
     # Comm-transport accounting (None when the simulator runs without a
     # CommConfig): cumulative bytes actually put on the wire up to and
-    # including this round, and the running mean fraction of nodes whose
-    # drift trigger fired per round.
+    # including this round, and the running mean fraction of DIRECTED EDGES
+    # that carried a payload per round (identical definition for the
+    # per-node and per-edge transports, and proportional to bytes in both).
     bytes_on_wire: Optional[float] = None
     triggered_frac: Optional[float] = None
 

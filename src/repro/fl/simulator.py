@@ -20,7 +20,12 @@ Communication is free by default (full fp32 models).  Passing a
 `CommConfig` (repro.comm) routes the exchange through the gossip transport:
 payload codecs (bf16 / stochastic int8 / top-k with error feedback), an
 event-triggered drift rule replacing always-send, and exact bytes-on-wire +
-triggered-fraction accounting on every RoundMetrics.
+triggered-fraction accounting on every RoundMetrics.  With
+`CommConfig(per_edge=True)` or `policy="adaptive"` the transport keeps its
+reference/residual/threshold state per directed link (`[N, max_deg, ...]`),
+link failures are acked so a dropped edge's error feedback never leaks into
+its siblings, and adaptive thresholds steer every link toward
+`target_trigger` (bytes are then counted per fired EDGE, not per sender).
 
 Method registry (paper §V-B.5):
   isol, fedavg, decavg, dechetero, cfa, cfa-ge, decdiff, decdiff+vt
@@ -36,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, GossipTransport
+from repro.comm import CommConfig, EdgeGossipTransport, GossipTransport
 from repro.core.aggregation import (
     cfa_aggregate,
     decavg_aggregate,
@@ -152,13 +157,19 @@ class DFLSimulator:
         self.comm_bytes_total = 0.0
         self._trig_sum = 0.0
         self._comm_rounds = 0
+        self.trig_history: List[float] = []  # per-round triggered fraction
         if config.comm is not None:
             if self.spec["agg"] not in ("decavg", "cfa", "decdiff") or \
                     self.spec.get("grad_exchange", False):
                 raise ValueError(
                     f"comm transport models neighbour model-gossip only; "
                     f"method {config.method!r} is unsupported")
-            self.transport = GossipTransport(config.comm, self.params)
+            if config.comm.use_per_edge:
+                self.transport = EdgeGossipTransport(
+                    config.comm, self.params, topo.neighbor_idx,
+                    topo.neighbor_mask)
+            else:
+                self.transport = GossipTransport(config.comm, self.params)
             self.comm_state = self.transport.init_state(self.params)
 
         donate = (0, 1, 2) if self.transport is not None else (0, 1)
@@ -284,6 +295,7 @@ class DFLSimulator:
 
         transport = self.transport
         degrees = jnp.sum(nbr_valid, axis=1)
+        total_edges = jnp.sum(degrees)  # directed edge count
 
         def comm_round_fn(params, opt, comm_state, round_idx, rng):
             """The legacy round with the transport in the middle: encode ->
@@ -315,9 +327,40 @@ class DFLSimulator:
             # failed links still burn the sender's bytes.  Return the edge
             # COUNT (small, exact in f32) — the byte multiply happens in
             # Python so exact accounting survives past f32's 2^24 integers.
+            # triggered_frac is the fraction of directed edges that carried
+            # a payload (= degree-weighted sender mean), the SAME definition
+            # the per-edge round reports, so frontier rows are comparable
+            # across transports and proportional to bytes in both.
             sent_edges = jnp.sum(gate * degrees)
             return (params, opt, comm_state, rng, train_loss,
-                    sent_edges, jnp.mean(gate))
+                    sent_edges, sent_edges / total_edges)
+
+        def edge_comm_round_fn(params, opt, comm_state, round_idx, rng):
+            """The per-edge transport round: every directed link carries its
+            own reference/residual/threshold, so the link mask feeds the
+            exchange (link-layer ack) and the transport hands back both the
+            receiver-layout gathered models (fresh or per-link stale cache)
+            and the aggregation mask.  Same rng stream as comm_round_fn, so
+            fp32 + threshold 0 + policy "fixed" is bit-for-bit the legacy
+            round (pinned in tests/test_comm_per_edge.py)."""
+            params, opt, rng, train_loss = local_training(params, opt,
+                                                          round_idx, rng)
+            rng, sub = jax.random.split(rng)
+            link = delivery_mask(sub)  # exogenous failures (participation)
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+            else:
+                ck = None
+            gathered, mask, gate, comm_state = transport.exchange(
+                params, comm_state, link, ck)
+            params = gossip_aggregate(params, gathered, mask)
+            # unicast accounting: one payload per FIRED edge (a silent edge
+            # of an otherwise-sending node costs nothing); failed links
+            # still burn the sender's bytes.
+            sent_edges = jnp.sum(gate)
+            trig = sent_edges / jnp.float32(transport.num_edges)
+            return (params, opt, comm_state, rng, train_loss,
+                    sent_edges, trig)
 
         def round_fn(params, opt, round_idx, rng):
             params, opt, rng, train_loss = local_training(params, opt, round_idx, rng)
@@ -341,7 +384,10 @@ class DFLSimulator:
 
             return params, opt, rng, train_loss
 
-        return comm_round_fn if transport is not None else round_fn
+        if transport is None:
+            return round_fn
+        return (edge_comm_round_fn if isinstance(transport, EdgeGossipTransport)
+                else comm_round_fn)
 
     # ------------------------------------------------------------------
     def evaluate(self) -> RoundMetrics:
@@ -366,6 +412,7 @@ class DFLSimulator:
                                           * float(sent_edges))
                 self._trig_sum += float(trig)
                 self._comm_rounds += 1
+                self.trig_history.append(float(trig))
             else:
                 self.params, self.opt_state, self.rng, _ = self._round(
                     self.params, self.opt_state, jnp.int32(r), self.rng

@@ -6,7 +6,10 @@
                    closed form, custom_vjp with fused softmax-p_t backward
   neighbor_avg   — weighted average of stacked neighbour models (Eq. 6)
   dequant_avg    — fused int8-dequantize + weighted average (Eq. 6 applied
-                   directly to the comm layer's quantized gossip payloads)
+                   directly to the comm layer's quantized gossip payloads;
+                   single-receiver and receiver-block variants — the block
+                   form is what the shard_map DFL round runs on the
+                   all_gathered payload)
   decode_attention — fused one-token GQA attention over the ring KV cache
                    (the serving hot spot; online softmax over cache tiles)
 
@@ -18,6 +21,7 @@ from repro.kernels.ops import (  # noqa: F401
     decdiff_update_tree,
     decode_attention_fused,
     dequant_neighbor_avg,
+    dequant_neighbor_avg_rows,
     neighbor_avg,
     vt_kl_loss_fused,
 )

@@ -50,3 +50,40 @@ def dequant_avg_blocks(q: jnp.ndarray, weight_scale: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
         interpret=interpret,
     )(q, weight_scale)
+
+
+def _dequant_avg_rows_kernel(q_ref, ws_ref, out_ref):
+    # ws[r, n] = wn[r, n] * scale[n]: per-receiver weights with the senders'
+    # dequantization scales folded in, so the whole Eq. 6 block reduces to
+    # one int8->fp32 matrix product per tile on the MXU.
+    out_ref[...] = jnp.einsum(
+        "rn,nd->rd", ws_ref[...], q_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+
+def dequant_avg_rows_blocks(q: jnp.ndarray, ws: jnp.ndarray, *,
+                            interpret: bool = False) -> jnp.ndarray:
+    """The multi-receiver variant the shard_map round uses: every receiver
+    in a pod block averages the SAME N gathered int8 payloads under its own
+    weight row.
+
+    q [N, D] int8 (the all_gathered wire payloads), ws [R, N] fp32
+    (= row-normalized gossip weights x per-sender scales) -> [R, D] fp32
+    weighted dequantized averages.  Same (N, COLS) streaming as the
+    single-receiver kernel — each q tile is loaded once and reused for all
+    R receivers, which is the point of fusing across the block.
+    """
+    n, d = q.shape
+    r = ws.shape[0]
+    assert d % COLS == 0, d
+    return pl.pallas_call(
+        _dequant_avg_rows_kernel,
+        grid=(d // COLS,),
+        in_specs=[
+            pl.BlockSpec((n, COLS), lambda i: (0, i)),
+            pl.BlockSpec((r, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, COLS), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(q, ws)

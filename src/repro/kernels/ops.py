@@ -178,3 +178,26 @@ def dequant_neighbor_avg(q, scales, weights, interpret=None):
     qp = jnp.pad(q.astype(jnp.int8), ((0, 0), (0, pad)))
     out = _dqa.dequant_avg_blocks(qp, ws, interpret=interpret)
     return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_neighbor_avg_rows(q, scales, wn, interpret=None):
+    """Eq. 6 for a BLOCK of receivers over int8 comm payloads, fused.
+
+    q [N, D] int8 rows (the all_gathered wire payloads), scales [N] fp32
+    per-sender quantization scales, wn [R, N] per-receiver gossip weights
+    — already row-normalized by the caller (the shard_map round masks and
+    normalizes before slicing its pod block; an all-zero row yields an
+    all-zero average, the "heard from nobody" case).  Equals
+    wn @ (q * scales[:, None]) without materializing the dequantized
+    models: each int8 tile is loaded once and reused for all R receivers.
+    """
+    from repro.kernels import dequant_avg as _dqa
+
+    interpret = _interpret_default() if interpret is None else interpret
+    d = q.shape[1]
+    ws = wn.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
+    pad = (-d) % _dqa.COLS
+    qp = jnp.pad(q.astype(jnp.int8), ((0, 0), (0, pad)))
+    out = _dqa.dequant_avg_rows_blocks(qp, ws, interpret=interpret)
+    return out[:, :d]

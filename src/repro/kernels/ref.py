@@ -67,3 +67,11 @@ def dequant_neighbor_avg_ref(q: jnp.ndarray, scales: jnp.ndarray,
     w = w / jnp.sum(w)
     dq = q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
     return jnp.einsum("n,nd->d", w, dq)
+
+
+def dequant_neighbor_avg_rows_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                                  wn: jnp.ndarray):
+    """Multi-receiver Eq. 6 over int8 payloads: dequantize, then apply each
+    receiver's (pre-normalized) weight row."""
+    dq = q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    return jnp.einsum("rn,nd->rd", wn.astype(jnp.float32), dq)

@@ -132,8 +132,9 @@ def test_compressed_vmap_round_tracks_dense_round():
                     reason="needs >= 4 devices for a (pod, data, model) mesh")
 def test_compressed_shardmap_round_matches_compressed_vmap_round():
     """The int8-compressed shard_map round (payload all_gather over the pod
-    ring, dequantize-then-DecDiff) must reproduce the compressed vmap round
-    on a multi-device CPU mesh (CI forces 4 host devices via XLA_FLAGS)."""
+    ring, fused dequantize+DecDiff by default) must reproduce the compressed
+    vmap round on a multi-device CPU mesh (CI forces 4 host devices via
+    XLA_FLAGS)."""
     from repro.comm import make_codec
     from repro.dist.dfl_step import build_dfl_round_shardmap
 
@@ -148,6 +149,34 @@ def test_compressed_shardmap_round_matches_compressed_vmap_round():
             params, opt_state, jnp.int32(0), batch)
     assert float(tree_l2_dist(ref[0], got[0])) < 1e-4
     assert abs(float(ref[2]) - float(got[2])) < 1e-5
+
+
+@pytest.mark.multihost
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices for a (pod, data, model) mesh")
+def test_fused_dequant_shardmap_matches_unfused_and_vmap():
+    """The kernelized payload path (dequant_neighbor_avg_rows fused into the
+    Eq. 6 reduction, fuse_dequant=True — the default) against BOTH oracles:
+    the decode-then-average shard_map formulation (fuse_dequant=False) and
+    the compressed vmap round."""
+    from repro.comm import make_codec
+    from repro.dist.dfl_step import build_dfl_round_shardmap
+
+    lm, opt, adj, params, opt_state, batch = _tiny_lm_world()
+    codec = make_codec("int8", stochastic=False)
+    ref = jax.jit(build_dfl_round(lm, opt, adj, codec=codec))(
+        params, opt_state, jnp.int32(0), batch)
+    mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"))
+    with mesh:
+        fused = jax.jit(build_dfl_round_shardmap(
+            lm, opt, adj, mesh, codec=codec, fuse_dequant=True))(
+            params, opt_state, jnp.int32(0), batch)
+        unfused = jax.jit(build_dfl_round_shardmap(
+            lm, opt, adj, mesh, codec=codec, fuse_dequant=False))(
+            params, opt_state, jnp.int32(0), batch)
+    assert float(tree_l2_dist(fused[0], ref[0])) < 1e-4
+    assert float(tree_l2_dist(fused[0], unfused[0])) < 1e-5
+    assert abs(float(fused[2]) - float(ref[2])) < 1e-5
 
 
 def test_dfl_round_runs_and_descends():

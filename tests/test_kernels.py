@@ -142,6 +142,46 @@ def test_dequant_neighbor_avg_fuses_codec_payload():
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("r,n,d", [(1, 1, 10), (2, 4, 100), (4, 8, 5000),
+                                   (3, 50, 2048)])
+def test_dequant_neighbor_avg_rows_sweep(r, n, d):
+    """The receiver-block variant (the shard_map round's payload path)
+    against its jnp oracle, including all-zero weight rows (the 'heard from
+    nobody' case must yield a zero average, not NaN)."""
+    from repro.kernels import dequant_neighbor_avg_rows
+    from repro.kernels.ref import dequant_neighbor_avg_rows_ref
+
+    rng = np.random.default_rng(r * 1000 + n * d)
+    q = jnp.asarray(rng.integers(-127, 128, (n, d)), jnp.int8)
+    sc = jnp.asarray(rng.random(n) * 0.02 + 1e-4, jnp.float32)
+    wn = rng.random((r, n)).astype(np.float32)
+    wn[0, :] = 0.0  # a fully-masked receiver row
+    wn = jnp.asarray(wn)
+    got = dequant_neighbor_avg_rows(q, sc, wn)
+    want = dequant_neighbor_avg_rows_ref(q, sc, wn)
+    assert got.shape == (r, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert not np.isnan(np.asarray(got)).any()
+    np.testing.assert_array_equal(np.asarray(got)[0], np.zeros(d))
+
+
+def test_dequant_neighbor_avg_rows_matches_single_receiver_kernel():
+    """One row of the block kernel == the single-receiver kernel (modulo
+    the latter's internal weight normalization)."""
+    from repro.kernels import dequant_neighbor_avg, dequant_neighbor_avg_rows
+
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.integers(-127, 128, (5, 4096)), jnp.int8)
+    sc = jnp.asarray(rng.random(5) * 0.01 + 1e-4, jnp.float32)
+    w = jnp.asarray(rng.random(5) + 0.1, jnp.float32)
+    wn = (w / jnp.sum(w))[None, :]  # pre-normalized single row
+    got = dequant_neighbor_avg_rows(q, sc, wn)[0]
+    want = dequant_neighbor_avg(q, sc, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
 @pytest.mark.parametrize("b,w,kk,g,hd", [(1, 16, 1, 1, 16), (2, 600, 2, 2, 64),
                                          (4, 1024, 8, 1, 128), (3, 512, 4, 8, 64)])
 @pytest.mark.parametrize("cache_dtype", [jnp.float32, jnp.bfloat16])
