@@ -30,7 +30,7 @@ from benchmarks.common import save_results
 from repro.comm import CommConfig, make_codec
 from repro.data import make_dataset, zipf_allocation
 from repro.data.allocation import split_by_allocation
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 from repro.fl.metrics import comm_bytes_per_round
 from repro.graphs import make_topology
 from repro.models.mlp_cnn import make_cnn, make_mlp
@@ -145,11 +145,13 @@ def frontier(rounds=40, seed=0, verbose=True):
         ds, topo, xs, ys, model = smoke_world(seed, graph=world)
         for codec, overrides in points:
             comm = CommConfig(codec=codec, **overrides)
-            cfg = SimulatorConfig(method="decdiff+vt", rounds=rounds,
-                                  steps_per_round=4, batch_size=32, lr=0.1,
-                                  momentum=0.9, eval_every=5, seed=seed,
-                                  comm=comm)
-            sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+            sim = Experiment(
+                World(model=model, topo=topo, xs=xs, ys=ys,
+                      x_test=ds.x_test, y_test=ds.y_test),
+                "decdiff+vt", comm=comm,
+                schedule=Schedule(rounds=rounds, eval_every=5),
+                steps_per_round=4, batch_size=32, lr=0.1, momentum=0.9,
+                seed=seed)
             hist = sim.run()
             rows.append({
                 "world": world, "codec": codec, "policy": comm.policy,

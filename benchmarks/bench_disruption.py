@@ -12,7 +12,7 @@ import numpy as np
 from benchmarks.common import save_results
 from repro.data import make_dataset
 from repro.data.allocation import split_by_allocation
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 from repro.graphs import make_topology
 from repro.models.mlp_cnn import model_for_dataset
 
@@ -29,9 +29,11 @@ def run(num_nodes=24, rounds=8, data_scale=0.06, verbose=True):
 
     out = {}
     for method in ("dechetero", "fedavg", "decdiff+vt"):
-        cfg = SimulatorConfig(method=method, rounds=rounds, steps_per_round=8,
-                              batch_size=32, lr=0.1, momentum=0.9, eval_every=1)
-        sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+        sim = Experiment(
+            World(model=model, topo=topo, xs=xs, ys=ys,
+                  x_test=ds.x_test, y_test=ds.y_test),
+            method, schedule=Schedule(rounds=rounds, eval_every=1),
+            steps_per_round=8, batch_size=32, lr=0.1, momentum=0.9)
         hist = sim.run()
         out[method] = [{"round": m.round, "acc": m.acc_mean} for m in hist]
         if verbose:

@@ -15,7 +15,7 @@ import numpy as np
 from benchmarks.common import save_results
 from repro.data import make_dataset, zipf_allocation
 from repro.data.allocation import split_by_allocation
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 from repro.graphs import make_topology
 from repro.models.mlp_cnn import model_for_dataset
 
@@ -46,10 +46,11 @@ def run(num_nodes=16, rounds=40, data_scale=0.04, methods=("decdiff+vt", "dechet
         xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
         gap = spectral_gap(topo)
         for method in methods:
-            cfg = SimulatorConfig(method=method, rounds=rounds, steps_per_round=4,
-                                  batch_size=32, lr=0.1, momentum=0.9,
-                                  eval_every=rounds)
-            sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+            sim = Experiment(
+                World(model=model, topo=topo, xs=xs, ys=ys,
+                      x_test=ds.x_test, y_test=ds.y_test),
+                method, schedule=Schedule(rounds=rounds, eval_every=rounds),
+                steps_per_round=4, batch_size=32, lr=0.1, momentum=0.9)
             hist = sim.run()
             rows.append({"topology": topo.name, "spectral_gap": gap,
                          "method": method, "acc": hist[-1].acc_mean,

@@ -16,7 +16,7 @@ from typing import Dict, Optional
 
 from repro.data import make_dataset, zipf_allocation
 from repro.data.allocation import allocation_gini, split_by_allocation
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 from repro.fl.metrics import comm_bytes_per_round
 from repro.fl.trainer import centralized_train
 from repro.graphs import make_topology
@@ -57,15 +57,19 @@ def build_world(wc: WorldConfig):
     return ds, topo, xs, ys, model, gini
 
 
-def run_method(wc: WorldConfig, method: str, world=None, verbose=False) -> Dict:
+def run_method(wc: WorldConfig, method: str, world=None, verbose=False,
+               comm=None, mode="fused") -> Dict:
     ds, topo, xs, ys, model, gini = world or build_world(wc)
-    cfg = SimulatorConfig(
-        method=method, rounds=wc.rounds, steps_per_round=wc.steps_per_round,
-        batch_size=wc.batch_size, lr=wc.lr, momentum=wc.momentum,
-        beta=wc.beta, seed=wc.seed, eval_every=wc.eval_every)
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+    exp = Experiment(
+        World(model=model, topo=topo, xs=xs, ys=ys,
+              x_test=ds.x_test, y_test=ds.y_test),
+        method, comm=comm,
+        schedule=Schedule(rounds=wc.rounds, eval_every=wc.eval_every,
+                          mode=mode),
+        steps_per_round=wc.steps_per_round, batch_size=wc.batch_size,
+        lr=wc.lr, momentum=wc.momentum, beta=wc.beta, seed=wc.seed)
     t0 = time.time()
-    hist = sim.run(verbose=verbose)
+    hist = exp.run(verbose=verbose)
     wall = time.time() - t0
     import jax
 

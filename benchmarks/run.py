@@ -31,6 +31,14 @@ def main() -> None:
     rows = bench_kernels.run()
     record("kernels", t0, f"{len(rows)} shapes vs TPU roofline")
 
+    # --- engine runner (scan-fused vs per-round loop) -------------------
+    from benchmarks import bench_engine
+
+    t0 = time.time()
+    eng = bench_engine.run(verbose=False)
+    record("engine_runner", t0,
+           f"scan-fused {eng['fused_speedup_vmap']:.2f}x vs per-round loop")
+
     # --- comm table (paper §VI-A.3) ------------------------------------
     from benchmarks import bench_comm
 

@@ -22,17 +22,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.comm import CommConfig
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 
 
 def run_one(world, comm, rounds, verbose=False):
     ds, topo, xs, ys, model = world
-    cfg = SimulatorConfig(method="decdiff+vt", rounds=rounds,
-                          steps_per_round=4, batch_size=32, lr=0.1,
-                          momentum=0.9, eval_every=5, seed=0, comm=comm)
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-    hist = sim.run(verbose=verbose)
-    return sim, hist
+    exp = Experiment(
+        World(model=model, topo=topo, xs=xs, ys=ys,
+              x_test=ds.x_test, y_test=ds.y_test),
+        "decdiff+vt", comm=comm,
+        schedule=Schedule(rounds=rounds, eval_every=5),
+        steps_per_round=4, batch_size=32, lr=0.1, momentum=0.9, seed=0)
+    hist = exp.run(verbose=verbose)
+    return exp, hist
 
 
 def main():

@@ -2,7 +2,9 @@
 
 Reduced rendition of the paper's §V setup (ER graph, truncated-Zipf non-IID
 split, SGD+momentum, per-node random init), producing a Table II-like summary
-and a Table IV-like characteristic-time summary.
+and a Table IV-like characteristic-time summary.  Each method runs through
+`repro.engine.Experiment` (via benchmarks.common.run_method) with the
+scan-fused schedule — the whole per-method experiment is one XLA program.
 
     PYTHONPATH=src python examples/decentralized_mnist.py [--rounds 60]
 """

@@ -1,12 +1,22 @@
-"""Multi-node DFL training of an LM — the paper's Algorithm 1 at LM scale.
+"""Multi-pod DFL training — the same Experiment spec on the pod mesh.
 
-Each node holds its own (heterogeneously initialized) replica of a reduced
-assigned architecture and its own synthetic token shard; every round the
-nodes take local SGD steps and run DecDiff gossip (Eq. 5-6) over the node
-axis.  On the production mesh the node axis is the `pod` mesh axis (see
-launch/dryrun.py --mesh multi for the 512-chip lowering).
+The `Experiment` that runs vmapped on one host lowers unchanged to the
+shard_map backend: each pod (mesh axis "pod") owns a block of nodes' params,
+optimizer state and data shards, and the DecDiff gossip exchange is an
+all_gather over the pod ring.  The two lowerings are bit-identical
+(tests/test_engine.py), so this script is about EXECUTION, not math: run it
+under a forced multi-device CPU to watch the same seeded world split over a
+real pod axis, scan-fused into one XLA program per schedule.
 
-    PYTHONPATH=src python examples/multipod_dfl_train.py --nodes 4 --steps 60
+    PYTHONPATH=src python examples/multipod_dfl_train.py --nodes 8
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/multipod_dfl_train.py --nodes 8
+
+For the assigned LM architectures the identical round shape lowers through
+`repro.dist.dfl_step.build_dfl_round_shardmap` (launch/dryrun.py --mesh
+multi), where the all_gather carries the encoded int8 payload and the
+dequantize+average is fused into the `dequant_neighbor_avg_rows` Pallas
+kernel — that path is exercised by the dry-run, not this example.
 """
 import argparse
 import os
@@ -15,57 +25,39 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.dist.dfl_step import build_dfl_round
-from repro.models.lm import build_lm
-from repro.optim.sgd import sgd_momentum
+from repro.engine import Experiment, Schedule, World
 from repro.utils.pytree import tree_index, tree_l2_dist
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen1.5-0.5b")
-    ap.add_argument("--nodes", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=60)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--eval-every", type=int, default=5)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced(n_layers=2, d_model=128, vocab=512)
-    lm = build_lm(cfg)
-    opt = sgd_momentum(lr=5e-3, momentum=0.9)
+    world = World.synthetic(dataset="synth-mnist", nodes=args.nodes,
+                            topology="ring", seed=0, scale=0.03)
+    exp = Experiment(world, "decdiff+vt", backend="shard_map",
+                     schedule=Schedule(rounds=args.rounds,
+                                       eval_every=args.eval_every,
+                                       mode="fused"),
+                     steps_per_round=4, batch_size=32, lr=0.1, momentum=0.9)
+    n_pods = int(exp.mesh.shape["pod"])
+    print(f"{len(jax.devices())} device(s) -> {n_pods}-pod mesh, "
+          f"{args.nodes // n_pods} nodes per pod (heterogeneous init, "
+          f"ring gossip)")
 
-    keys = jax.random.split(jax.random.PRNGKey(0), args.nodes)
-    params = jax.vmap(lm.init)(keys)  # different init per node (the hard case)
-    opt_state = jax.vmap(opt.init)(params)
-
-    # ring gossip graph over nodes
-    adj = np.zeros((args.nodes, args.nodes), np.float32)
-    for i in range(args.nodes):
-        adj[i, (i + 1) % args.nodes] = adj[i, (i - 1) % args.nodes] = 0.5
-    round_fn = jax.jit(build_dfl_round(lm, opt, jnp.asarray(adj)))
-
-    from repro.data.tokens import synthetic_token_batch
-
-    d0 = float(tree_l2_dist(tree_index(params, 0), tree_index(params, 1)))
-    for step in range(args.steps):
-        batch = {k: jnp.asarray(np.stack([
-            synthetic_token_batch(args.batch, args.seq, cfg.vocab,
-                                  seed=step * 100 + n)[k]
-            for n in range(args.nodes)]))
-            for k in ("tokens", "labels")}
-        params, opt_state, loss = round_fn(params, opt_state, jnp.int32(step), batch)
-        if step % 10 == 0 or step == args.steps - 1:
-            d = float(tree_l2_dist(tree_index(params, 0), tree_index(params, 1)))
-            print(f"round {step:4d}  loss {float(loss):.4f}  "
-                  f"node0-node1 distance {d:.2f}", flush=True)
-    d1 = float(tree_l2_dist(tree_index(params, 0), tree_index(params, 1)))
-    print(f"\nmodel distance: init {d0:.2f} -> final {d1:.2f} "
+    d0 = float(tree_l2_dist(tree_index(exp.params, 0),
+                            tree_index(exp.params, 1)))
+    hist = exp.run(verbose=True)
+    d1 = float(tree_l2_dist(tree_index(exp.params, 0),
+                            tree_index(exp.params, 1)))
+    print(f"\nnode0-node1 model distance: init {d0:.2f} -> final {d1:.2f} "
           f"({'converging' if d1 < d0 else 'diverging'}) — DecDiff pulls "
-          f"heterogeneously-initialized nodes together without a server.")
+          f"heterogeneously-initialized nodes together without a server, "
+          f"final acc {hist[-1].acc_mean:.3f} ± {hist[-1].acc_std:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,39 +2,55 @@
 
 16 devices on an Erdős–Rényi graph, non-IID synthetic MNIST, heterogeneous
 model initialization — train with the paper's DecDiff+VT and compare the
-final node-average accuracy against isolated training.
+final node-average accuracy against isolated training.  The whole schedule
+(all rounds + evals) runs as ONE scan-fused XLA program per method.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rounds 30 --nodes 16]
+
+(`World.synthetic(...)` collapses step 1 into one call; it is spelled out
+here to show what a World is made of.)
 """
-import sys, os
+import argparse
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.data import make_dataset, zipf_allocation
 from repro.data.allocation import allocation_gini, split_by_allocation
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 from repro.graphs import make_topology
 from repro.models.mlp_cnn import model_for_dataset
 
 
 def main():
-    # 1. world: data, non-IID allocation, communication graph
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument("--eval-every", type=int, default=10)
+    args = ap.parse_args()
+
+    # 1. world: data, non-IID allocation, communication graph, paper model
     ds = make_dataset("synth-mnist", seed=0, scale=0.05)
-    topo = make_topology("erdos_renyi", n=16, p=0.25, seed=0)
-    alloc = zipf_allocation(ds.y_train, topo.num_nodes, seed=0, min_per_class=1)
+    topo = make_topology("erdos_renyi", n=args.nodes, p=0.25, seed=0)
+    alloc = zipf_allocation(ds.y_train, topo.num_nodes, seed=0,
+                            min_per_class=1)
     xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
     print(f"graph: {topo.name}  (connected={topo.connected})  "
           f"label-skew Gini={allocation_gini(alloc, ds.y_train):.2f}")
+    world = World(model=model_for_dataset("synth-mnist", ds.num_classes),
+                  topo=topo, xs=xs, ys=ys,
+                  x_test=ds.x_test, y_test=ds.y_test)
 
-    # 2. the paper's model (Table I MLP) — each node draws its OWN init
-    model = model_for_dataset("synth-mnist", ds.num_classes)
-
-    # 3. run DecDiff+VT (Alg. 1) vs isolation
+    # 2. run DecDiff+VT (Alg. 1) vs isolation — each node draws its OWN init
     for method in ("isol", "decdiff+vt"):
-        cfg = SimulatorConfig(method=method, rounds=30, steps_per_round=4,
-                              batch_size=32, lr=0.1, momentum=0.9,
-                              beta=0.95, eval_every=10)
-        sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-        hist = sim.run(verbose=True)
+        exp = Experiment(world, method,
+                         schedule=Schedule(rounds=args.rounds,
+                                           eval_every=args.eval_every,
+                                           mode="fused"),
+                         steps_per_round=4, batch_size=32, lr=0.1,
+                         momentum=0.9, beta=0.95)
+        hist = exp.run(verbose=True)
         print(f"--> {method}: final node-average accuracy "
               f"{hist[-1].acc_mean:.3f} ± {hist[-1].acc_std:.3f}\n")
 

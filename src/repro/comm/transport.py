@@ -185,28 +185,20 @@ class GossipTransport:
         return CommState(last_sent=jnp.zeros_like(mat), residual=residual,
                          ever_sent=jnp.zeros((self.n,), jnp.float32))
 
-    def exchange(self, stacked_params, state: CommState, rng=None):
-        """One transport round for all nodes at once.
+    def exchange_rows(self, w, state: CommState, keys):
+        """The per-row transport math for an arbitrary block of senders.
 
-        Returns (decoded_models, gate, new_state):
-          decoded_models — pytree with leaves [N, ...]: for each sender the
-            model its neighbours reconstruct this round (rows of silent
-            nodes hold their previous reconstruction; the aggregation mask
-            zeroes them out anyway),
-          gate — [N] {0,1} who transmitted,
-          new_state — the threaded CommState.
+        `w` [R, D] flat models, `state` the block's CommState rows, `keys`
+        [R, 2] codec keys (ignored unless the codec wants rng).  Returns
+        (new_last [R, D], gate [R], new_state).  `exchange` is this over the
+        full node axis; the engine's shard_map backend calls it per pod
+        block (state rows shard with the nodes) and all_gathers `new_last`.
         """
         codec = self.codec
-        w, _ = tree_flatten_stacked(stacked_params)
+        rows = int(w.shape[0])
         gate, _ = drift_gate(w, state.last_sent, self.config.trigger_threshold)
 
         x = w - state.last_sent if codec.is_delta else w
-        if self.wants_rng:
-            if rng is None:
-                raise ValueError(f"codec {codec.name!r} needs an rng key")
-            keys = jax.random.split(rng, self.n)
-        else:
-            keys = jnp.zeros((self.n, 2), jnp.uint32)
 
         def enc_dec(xi, key, res):
             payload, new_res = codec.encode(
@@ -225,10 +217,31 @@ class GossipTransport:
         if codec.has_residual:
             # a silent node keeps accumulating: its un-flushed residual
             # stays put until the trigger fires again.
-            keep = gate.reshape((self.n,) + (1,) * (new_res.ndim - 1)) > 0
+            keep = gate.reshape((rows,) + (1,) * (new_res.ndim - 1)) > 0
             new_res = jnp.where(keep, new_res, state.residual)
         new_state = CommState(last_sent=new_last, residual=new_res,
                               ever_sent=jnp.maximum(state.ever_sent, gate))
+        return new_last, gate, new_state
+
+    def exchange(self, stacked_params, state: CommState, rng=None):
+        """One transport round for all nodes at once.
+
+        Returns (decoded_models, gate, new_state):
+          decoded_models — pytree with leaves [N, ...]: for each sender the
+            model its neighbours reconstruct this round (rows of silent
+            nodes hold their previous reconstruction; the aggregation mask
+            zeroes them out anyway),
+          gate — [N] {0,1} who transmitted,
+          new_state — the threaded CommState.
+        """
+        w, _ = tree_flatten_stacked(stacked_params)
+        if self.wants_rng:
+            if rng is None:
+                raise ValueError(f"codec {self.codec.name!r} needs an rng key")
+            keys = jax.random.split(rng, self.n)
+        else:
+            keys = jnp.zeros((self.n, 2), jnp.uint32)
+        new_last, gate, new_state = self.exchange_rows(w, state, keys)
         return self._unflatten(new_last), gate, new_state
 
 

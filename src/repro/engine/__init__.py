@@ -1,0 +1,35 @@
+"""repro.engine — one Experiment API over pluggable method strategies.
+
+    from repro.engine import Experiment, Schedule, World
+
+    world = World.synthetic(nodes=16, topology="erdos_renyi", p=0.25)
+    exp = Experiment(world, "decdiff+vt",
+                     schedule=Schedule(rounds=30, eval_every=5))
+    history = exp.run()
+
+Methods plug in as :class:`AggregationStrategy` instances through
+:func:`register_method`; execution lowers through `build_round` to the vmap
+or shard_map backend and runs either per-round or as one scan-fused XLA
+program (`Schedule.mode`).  See docs/api.md for the full tour and the
+`DFLSimulator` migration table.
+"""
+from repro.engine.backends import BACKENDS, build_round  # noqa: F401
+from repro.engine.experiment import (  # noqa: F401
+    Experiment,
+    Schedule,
+    TrainConfig,
+    World,
+)
+from repro.engine.strategies import (  # noqa: F401
+    AggregationStrategy,
+    CFAGEStrategy,
+    CFAStrategy,
+    DecAvgStrategy,
+    DecDiffStrategy,
+    FedAvgStrategy,
+    IsolationStrategy,
+    MethodSpec,
+    available_methods,
+    get_method,
+    register_method,
+)

@@ -1,0 +1,433 @@
+"""`build_round(experiment)`: one round spec, two executions.
+
+Lowers an :class:`~repro.engine.Experiment` to a jit-able round function —
+Algorithm 1's (local SGD steps → neighbour exchange → aggregation) as ONE
+XLA program per round — on either backend:
+
+  * ``vmap``      — every per-node quantity vmapped over the node axis (the
+    legacy `DFLSimulator` execution, ported op-for-op: with the fp32 codec,
+    threshold 0 and the fixed policy it is bit-for-bit the pre-engine round);
+  * ``shard_map`` — explicit shard_map over the "pod" mesh axis (the
+    `repro.dist.dfl_step` formulation generalized to the full method/
+    transport roster): each pod owns N/n_pods nodes' params, optimizer
+    state, data shards and transport state; the neighbour exchange is an
+    all_gather over the pod ring; everything per-node — training, trigger,
+    codec, aggregation — runs blockwise on the pod's own rows with the SAME
+    per-node ops as the vmap lowering, so the two backends agree
+    bit-for-bit (pinned in tests/test_engine.py on the 4-device CPU mesh).
+
+The round function's calling convention depends on the transport:
+
+  no comm:  (params, opt, round_idx, rng) -> (params, opt, rng, loss)
+  comm:     (params, opt, comm_state, round_idx, rng)
+            -> (params, opt, comm_state, rng, loss, sent_edges, trig_frac)
+
+Method behaviour enters exclusively through the experiment's
+:class:`~repro.engine.AggregationStrategy` (exchange/aggregate hooks and
+the `kind`/`grad_exchange` capabilities) — there is no method branching
+here beyond those capabilities.
+
+Randomness discipline (the bit-exactness mechanism): every rng consumption
+— per-step dropout keys, hetero step budgets, participation masks, codec
+keys — is computed from the REPLICATED rng stream over the full node axis
+and then row-sliced per block, so the shard_map lowering sees exactly the
+values the vmap lowering sees.  Only data movement (the all_gather) differs.
+
+Scale note: the shard_map exchange moves the decoded fp32 models because
+this is the *simulator* contract (bytes-on-wire are accounted exactly from
+`payload_bytes × fired edges`, not from the gather).  The LM-scale rounds
+in `repro.dist.dfl_step` are the production formulation of the same
+exchange where the all_gather carries the encoded int8 payload and the
+dequantize+Eq.6 reduction is fused into the `dequant_neighbor_avg_rows`
+Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import EdgeGossipTransport
+from repro.comm.trigger import edge_delivery
+from repro.dist.sharding import NODE_AXIS
+from repro.utils.pytree import tree_flatten_stacked
+
+BACKENDS = ("vmap", "shard_map")
+
+
+def build_round(exp):
+    """Lower `exp` to its jit-able round function (see module docstring)."""
+    if exp.backend == "vmap":
+        return _build_vmap_round(exp)
+    if exp.backend == "shard_map":
+        return _build_shardmap_round(exp)
+    raise ValueError(
+        f"unknown backend {exp.backend!r}; available: {BACKENDS}")
+
+
+# ------------------------------------------------------------ shared pieces
+
+def _identity_rows(a):
+    return a
+
+
+def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
+    """B local SGD(momentum) minibatch steps (Alg. 1 l.4-9) for the block of
+    nodes whose data is (x, y, counts); `rows` slices globally-computed
+    [N, ...] randomness to the block (identity on the vmap backend)."""
+    cfg = exp.train
+    n = exp.n
+    batcher = exp.batcher
+
+    def take_batch(xx, yy, c, step):
+        return batcher.take(xx, yy, c, step)
+
+    v_take = jax.vmap(take_batch, in_axes=(0, 0, 0, None))
+    v_step = jax.vmap(exp._train_step, in_axes=(0, 0, 0, 0, None, 0))
+
+    def local_training(params, opt, round_idx, rng):
+        # Heterogeneous E (Alg. 1): per-node step budget for this round;
+        # nodes past their budget keep their params (masked update).
+        if cfg.hetero_steps_min > 0:
+            rng, sub = jax.random.split(rng)
+            budgets = rows(jax.random.randint(
+                sub, (n,), cfg.hetero_steps_min, cfg.steps_per_round + 1))
+        else:
+            budgets = rows(jnp.full((n,), cfg.steps_per_round, jnp.int32))
+
+        def body(carry, b):
+            params, opt, rng = carry
+            step = round_idx * cfg.steps_per_round + b
+            xb, yb = v_take(x, y, counts, step)
+            rng, sub = jax.random.split(rng)
+            drop_keys = rows(jax.random.split(sub, n))
+            new_params, new_opt, loss = v_step(params, opt, xb, yb, step,
+                                               drop_keys)
+            active = (b < budgets).astype(jnp.float32)
+
+            def mix(new, old):
+                a = active.reshape(active.shape + (1,) * (new.ndim - 1))
+                return (a * new.astype(jnp.float32)
+                        + (1 - a) * old.astype(jnp.float32)).astype(old.dtype)
+
+            params = jax.tree.map(mix, new_params, params)
+            opt = jax.tree.map(mix, new_opt, opt)
+            return (params, opt, rng), jnp.mean(loss)
+
+        (params, opt, rng), losses = jax.lax.scan(
+            body, (params, opt, rng), jnp.arange(cfg.steps_per_round))
+        return params, opt, rng, loss_reduce(jnp.mean(losses))
+
+    return local_training
+
+
+def _make_delivery_mask(exp, *, rows):
+    """Exogenous per-edge Bernoulli link failures (the paper's
+    no-synchronization model), drawn over the FULL [N, max_deg] layout and
+    row-sliced so every backend sees the same draws."""
+    cfg = exp.train
+    nbr_valid = exp.nbr_valid
+
+    def delivery_mask(rng):
+        if cfg.participation >= 1.0:
+            return rows(nbr_valid)
+        u = jax.random.uniform(rng, nbr_valid.shape)
+        return rows(nbr_valid * (u < cfg.participation).astype(jnp.float32))
+
+    return delivery_mask
+
+
+def _make_gradient_exchange(exp):
+    """CFA-GE second phase (vmap backend only): neighbours evaluate our
+    aggregated model on their data; we descend along the p_ij-weighted mean
+    of their gradients."""
+    cfg = exp.train
+    batcher = exp.batcher
+    counts = exp.counts
+    nbr_idx, nbr_weight = exp.nbr_idx, exp.nbr_weight
+    x_pad, y_pad = exp.x_pad, exp.y_pad
+    n = exp.n
+    max_deg = int(nbr_idx.shape[1])
+    v_grad = jax.vmap(exp._grad_fn, in_axes=(0, 0, 0, 0))
+
+    def gradient_exchange(params, mask, round_idx, rng):
+        bs = cfg.batch_size
+
+        def body(acc, d):
+            j = nbr_idx[:, d]  # [n] neighbour ids in slot d
+            cj = counts[j]
+            base = (round_idx * max_deg + d) * bs
+            bidx = (base + jnp.arange(bs, dtype=jnp.int32)[None, :]) * batcher.stride
+            bidx = bidx % jnp.maximum(cj[:, None], 1)
+            xj = x_pad[j[:, None], bidx]  # [n, bs, ...]
+            yj = y_pad[j[:, None], bidx]
+            keys = jax.random.split(jax.random.fold_in(rng, d), n)
+            g = v_grad(params, xj, yj, keys)  # grad of F_j at w_i
+            w_d = nbr_weight[:, d] * mask[:, d]
+
+            def add(a, gi):
+                wb = w_d.reshape((n,) + (1,) * (gi.ndim - 1))
+                return a + wb * gi.astype(jnp.float32)
+
+            return jax.tree.map(add, acc, g), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        acc, _ = jax.lax.scan(body, zeros, jnp.arange(max_deg))
+        tot = jnp.sum(nbr_weight * mask, axis=1)  # [n]
+        safe = jnp.maximum(tot, 1e-9)
+        lr_ge = cfg.ge_lr if cfg.ge_lr is not None else cfg.lr
+
+        def apply(p, a):
+            wb = (1.0 / safe).reshape((n,) + (1,) * (a.ndim - 1))
+            gate = (tot > 0).astype(jnp.float32).reshape((n,) + (1,) * (a.ndim - 1))
+            return (p.astype(jnp.float32) - lr_ge * gate * wb * a).astype(p.dtype)
+
+        return jax.tree.map(apply, params, acc)
+
+    return gradient_exchange
+
+
+# ------------------------------------------------------------- vmap backend
+
+def _build_vmap_round(exp):
+    """Op-for-op the legacy simulator round, with the method's behaviour
+    supplied by the strategy hooks instead of an agg-kind dispatch."""
+    cfg, strategy, agg_state = exp.train, exp.strategy, exp.agg_state
+    nbr_idx = exp.nbr_idx
+    transport = exp.transport
+
+    local_training = _make_local_training(
+        exp, x=exp.x_pad, y=exp.y_pad, counts=exp.counts,
+        rows=_identity_rows, loss_reduce=_identity_rows)
+    delivery_mask = _make_delivery_mask(exp, rows=_identity_rows)
+
+    def gossip_aggregate(params, gathered, mask):
+        return strategy.aggregate(exp, agg_state, params, gathered, mask)
+
+    if strategy.grad_exchange:
+        gradient_exchange = _make_gradient_exchange(exp)
+
+    degrees = jnp.sum(exp.nbr_valid, axis=1)
+    total_edges = jnp.sum(degrees)  # directed edge count
+
+    def comm_round_fn(params, opt, comm_state, round_idx, rng):
+        """The round with the per-NODE transport in the middle: encode ->
+        (event-triggered, possibly failing) wire -> decode -> aggregate.
+        With the fp32 codec and threshold 0 this is bit-for-bit the plain
+        round (same rng stream, identical payload values)."""
+        params, opt, rng, train_loss = local_training(params, opt, round_idx,
+                                                      rng)
+        rng, sub = jax.random.split(rng)
+        link = delivery_mask(sub)  # exogenous failures (participation)
+        if transport.wants_rng:
+            rng, ck = jax.random.split(rng)
+        else:
+            ck = None
+        decoded, gate, comm_state = transport.exchange(params, comm_state, ck)
+        # `decoded` rows of silent nodes hold their cached last-sent model,
+        # so "stale" aggregates them at full weight (masking only neighbours
+        # that have NEVER transmitted — their cache is still the zero
+        # bootstrap reference); "drop" masks any silent node like a failed
+        # link.
+        if transport.config.on_silence == "drop":
+            mask = edge_delivery(gate, link, nbr_idx)
+        else:
+            mask = edge_delivery(comm_state.ever_sent, link, nbr_idx)
+        gathered = strategy.exchange(exp, decoded, nbr_idx)
+        params = gossip_aggregate(params, gathered, mask)
+        # a transmitting node broadcasts one payload per outgoing edge;
+        # failed links still burn the sender's bytes.  Return the edge COUNT
+        # (small, exact in f32) — the byte multiply happens in Python so
+        # exact accounting survives past f32's 2^24 integers.
+        sent_edges = jnp.sum(gate * degrees)
+        return (params, opt, comm_state, rng, train_loss,
+                sent_edges, sent_edges / total_edges)
+
+    def edge_comm_round_fn(params, opt, comm_state, round_idx, rng):
+        """The per-EDGE transport round: every directed link carries its own
+        reference/residual/threshold, so the link mask feeds the exchange
+        (link-layer ack) and the transport hands back both the
+        receiver-layout gathered models (fresh or per-link stale cache) and
+        the aggregation mask.  Same rng stream as comm_round_fn, so fp32 +
+        threshold 0 + policy "fixed" is bit-for-bit the legacy round
+        (pinned in tests/test_comm_per_edge.py)."""
+        params, opt, rng, train_loss = local_training(params, opt, round_idx,
+                                                      rng)
+        rng, sub = jax.random.split(rng)
+        link = delivery_mask(sub)  # exogenous failures (participation)
+        if transport.wants_rng:
+            rng, ck = jax.random.split(rng)
+        else:
+            ck = None
+        gathered, mask, gate, comm_state = transport.exchange(
+            params, comm_state, link, ck)
+        params = gossip_aggregate(params, gathered, mask)
+        # unicast accounting: one payload per FIRED edge (a silent edge of
+        # an otherwise-sending node costs nothing); failed links still burn
+        # the sender's bytes.
+        sent_edges = jnp.sum(gate)
+        trig = sent_edges / jnp.float32(transport.num_edges)
+        return (params, opt, comm_state, rng, train_loss,
+                sent_edges, trig)
+
+    def round_fn(params, opt, round_idx, rng):
+        params, opt, rng, train_loss = local_training(params, opt, round_idx,
+                                                      rng)
+        rng, sub = jax.random.split(rng)
+        mask = delivery_mask(sub)
+
+        if strategy.kind == "server":
+            params = strategy.aggregate(exp, agg_state, params, params, mask)
+        elif strategy.kind == "none":
+            pass
+        else:
+            gathered = strategy.exchange(exp, params, nbr_idx)
+            params = gossip_aggregate(params, gathered, mask)
+            if strategy.grad_exchange:
+                rng, sub = jax.random.split(rng)
+                params = gradient_exchange(params, mask, round_idx, sub)
+
+        return params, opt, rng, train_loss
+
+    if transport is None:
+        return round_fn
+    return (edge_comm_round_fn if isinstance(transport, EdgeGossipTransport)
+            else comm_round_fn)
+
+
+# -------------------------------------------------------- shard_map backend
+
+def _build_shardmap_round(exp):
+    """The same round shard_mapped over the pod axis (see module docstring).
+
+    All mesh axes are manual (`check_rep=False`) following
+    `repro.dist.dfl_step.build_dfl_round_shardmap`; each pod holds its
+    nodes' full replicas, so per-node reductions (Eq. 5's global norm, the
+    trigger's drift) are complete blockwise and only the model exchange
+    crosses pods.
+    """
+    mesh = exp.mesh
+    if mesh is None or NODE_AXIS not in mesh.shape:
+        raise ValueError(
+            f"backend 'shard_map' needs a mesh with a {NODE_AXIS!r} axis; "
+            f"pass mesh= or use backend='vmap'")
+    n = exp.n
+    n_pods = int(mesh.shape[NODE_AXIS])
+    if n % n_pods:
+        raise ValueError(f"{n} DFL nodes do not tile the {n_pods}-pod axis")
+    per_pod = n // n_pods
+    strategy = exp.strategy
+    transport = exp.transport
+    if strategy.grad_exchange:
+        raise NotImplementedError(
+            f"method {exp.method.name!r} (gradient exchange) is vmap-only; "
+            f"use backend='vmap'")
+    if isinstance(transport, EdgeGossipTransport):
+        raise NotImplementedError(
+            "the per-edge transport is vmap-only (its reverse-slot gather "
+            "crosses pods); use backend='vmap' or per_edge=False")
+
+    cfg = exp.train
+    nbr_idx, nbr_valid = exp.nbr_idx, exp.nbr_valid
+    counts = exp.counts
+    agg_state = exp.agg_state
+    degrees = jnp.sum(nbr_valid, axis=1)
+    total_edges = jnp.sum(degrees)
+
+    def block_rows(i0):
+        def rows(a):
+            return jax.lax.dynamic_slice_in_dim(a, i0, per_pod, axis=0)
+        return rows
+
+    def gather_rows(a_blk):
+        return jax.lax.all_gather(a_blk, NODE_AXIS, axis=0, tiled=True)
+
+    def pmean(x):
+        return jax.lax.pmean(x, NODE_AXIS)
+
+    def block_prelude(params, opt, round_idx, rng, x_blk, y_blk):
+        """Local training + participation draw for this pod's rows; returns
+        the row slicer so callers share the replicated randomness."""
+        rows = block_rows(jax.lax.axis_index(NODE_AXIS) * per_pod)
+        local_training = _make_local_training(
+            exp, x=x_blk, y=y_blk, counts=rows(counts), rows=rows,
+            loss_reduce=pmean)
+        delivery_mask = _make_delivery_mask(exp, rows=rows)
+        params, opt, rng, train_loss = local_training(params, opt, round_idx,
+                                                      rng)
+        rng, sub = jax.random.split(rng)
+        link = delivery_mask(sub)
+        return rows, params, opt, rng, train_loss, link
+
+    def aggregate_block(rows, params, gathered, mask):
+        state_blk = (jax.tree.map(rows, agg_state)
+                     if strategy.kind == "gossip" else agg_state)
+        return strategy.aggregate(exp, state_blk, params, gathered, mask)
+
+    def plain_block(params, opt, round_idx, rng, x_blk, y_blk):
+        rows, params, opt, rng, train_loss, link = block_prelude(
+            params, opt, round_idx, rng, x_blk, y_blk)
+        if strategy.kind == "server":
+            full = jax.tree.map(gather_rows, params)
+            params = aggregate_block(rows, params, full, link)
+        elif strategy.kind == "gossip":
+            full = jax.tree.map(gather_rows, params)
+            gathered = strategy.exchange(exp, full, rows(nbr_idx))
+            params = aggregate_block(rows, params, gathered, link)
+        return params, opt, rng, train_loss
+
+    def comm_block(params, opt, comm_state, round_idx, rng, x_blk, y_blk):
+        """comm_round_fn blockwise: the trigger/codec run on the pod's own
+        rows (state sharded with them), the all_gather moves the decoded
+        reconstructions + gates, aggregation runs on the block."""
+        rows, params, opt, rng, train_loss, link = block_prelude(
+            params, opt, round_idx, rng, x_blk, y_blk)
+        if transport.wants_rng:
+            rng, ck = jax.random.split(rng)
+            keys = rows(jax.random.split(ck, n))
+        else:
+            keys = jnp.zeros((per_pod, 2), jnp.uint32)
+        w_blk, _ = tree_flatten_stacked(params)
+        new_last, gate, comm_state = transport.exchange_rows(
+            w_blk, comm_state, keys)
+        decoded = transport._unflatten(gather_rows(new_last))  # [N, ...]
+        gate_full = gather_rows(gate)
+        if transport.config.on_silence == "drop":
+            mask = edge_delivery(gate_full, link, rows(nbr_idx))
+        else:
+            ever_full = gather_rows(comm_state.ever_sent)
+            mask = edge_delivery(ever_full, link, rows(nbr_idx))
+        gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
+        params = aggregate_block(rows, params, gathered, mask)
+        sent_edges = jax.lax.psum(jnp.sum(gate * rows(degrees)), NODE_AXIS)
+        return (params, opt, comm_state, rng, train_loss,
+                sent_edges, sent_edges / total_edges)
+
+    shard = P(NODE_AXIS)
+    rep = P()
+    if transport is None:
+        sharded = shard_map(
+            plain_block, mesh,
+            in_specs=(shard, shard, rep, rep, shard, shard),
+            out_specs=(shard, shard, rep, rep),
+            check_rep=False)
+
+        def round_fn(params, opt, round_idx, rng):
+            return sharded(params, opt, round_idx, rng, exp.x_pad, exp.y_pad)
+
+        return round_fn
+
+    sharded = shard_map(
+        comm_block, mesh,
+        in_specs=(shard, shard, shard, rep, rep, shard, shard),
+        out_specs=(shard, shard, shard, rep, rep, rep, rep),
+        check_rep=False)
+
+    def comm_round_fn(params, opt, comm_state, round_idx, rng):
+        return sharded(params, opt, comm_state, round_idx, rng,
+                       exp.x_pad, exp.y_pad)
+
+    return comm_round_fn

@@ -1,0 +1,399 @@
+"""`Experiment`: the single front door for decentralized-learning runs.
+
+    Experiment(world, method, comm=..., backend=..., schedule=...).run()
+
+packages the paper's whole experimental procedure — heterogeneous per-node
+init, B local SGD(momentum) steps, neighbour exchange (optionally through
+the repro.comm gossip transport), method aggregation, periodic evaluation —
+behind one object:
+
+  * `world`    — the physical problem: model, topology, per-node datasets,
+    test set (:class:`World`, or `World.synthetic(...)` for the paper's
+    synthetic setups);
+  * `method`   — a name in the strategy registry (`available_methods()`;
+    plug in your own with `register_method`);
+  * `comm`     — optional `repro.comm.CommConfig`: codecs, event triggers,
+    per-edge state, exact bytes-on-wire accounting.  The per-node or
+    per-edge transport is selected from the config and the strategy's
+    capability — never by caller branching;
+  * `backend`  — "vmap" (one jitted program over the stacked node axis) or
+    "shard_map" (the same program over the "pod" mesh axis, one block of
+    nodes per pod; bit-identical to vmap, see engine.backends);
+  * `schedule` — rounds / eval cadence / execution mode: "fused" compiles
+    the WHOLE schedule (K rounds + gated evals) into one `lax.scan` program
+    dispatched once, "loop" dispatches one XLA call per round (the legacy
+    behaviour; same math bit-for-bit, see BENCH_engine.json for the
+    rounds/sec gap).
+
+Mutable run state (params, optimizer and transport state, rng, byte
+accounting) lives on the instance so `run()` can be called repeatedly and
+metrics continue where the last call stopped, matching the old
+`DFLSimulator` contract that `repro.fl.simulator` now shims onto this
+class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig, EdgeGossipTransport, GossipTransport
+from repro.core.virtual_teacher import make_loss_fn
+from repro.data.allocation import pad_node_datasets
+from repro.data.pipeline import Batcher
+from repro.dist.sharding import NODE_AXIS
+from repro.engine import backends
+from repro.engine.strategies import MethodSpec, get_method
+from repro.fl.metrics import RoundMetrics
+from repro.fl.trainer import make_eval_fn, make_grad_fn, make_train_step
+from repro.graphs.topology import Topology
+from repro.models.api import SmallModel
+from repro.optim.sgd import sgd_momentum
+
+SCHEDULE_MODES = ("fused", "loop")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Local-training and aggregation hyper-parameters (Alg. 1 knobs)."""
+
+    steps_per_round: int = 4   # B in Alg. 1 (minibatch steps between exchanges)
+    batch_size: int = 32
+    lr: float = 1e-3
+    momentum: float = 0.9
+    beta: float = 0.95         # VT confidence (Eq. 7)
+    s: float = 1.0             # DecDiff damping (Eq. 5)
+    participation: float = 1.0  # per-neighbour delivery probability per round
+    seed: int = 0
+    eval_batch: int = 128
+    ge_lr: Optional[float] = None  # CFA-GE gradient-apply LR (default: lr)
+    # Heterogeneous local training (paper Alg. 1: E "is not necessarily the
+    # same at all nodes"): per-node number of local steps per round, sampled
+    # uniformly from [min, steps_per_round].  0 disables (= homogeneous).
+    hetero_steps_min: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """How many rounds, how often to eval, and how the rounds execute."""
+
+    rounds: int = 100
+    eval_every: int = 5
+    mode: str = "fused"  # "fused" (one lax.scan program) | "loop" (per-round)
+
+    def __post_init__(self):
+        if self.mode not in SCHEDULE_MODES:
+            raise ValueError(f"schedule mode must be one of {SCHEDULE_MODES}, "
+                             f"got {self.mode!r}")
+
+    @staticmethod
+    def eval_rounds(rounds: int, eval_every: int):
+        """The eval cadence (the single source both schedule modes use):
+        after round 0, every `eval_every` rounds, and after the last
+        round."""
+        return [r for r in range(rounds)
+                if r % eval_every == 0 or r == rounds - 1]
+
+
+@dataclasses.dataclass
+class World:
+    """The physical problem: who talks to whom, over what data."""
+
+    model: SmallModel
+    topo: Topology
+    xs: List[np.ndarray]       # per-node train inputs
+    ys: List[np.ndarray]       # per-node train labels
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @classmethod
+    def synthetic(cls, dataset: str = "synth-mnist", nodes: int = 16,
+                  topology: str = "erdos_renyi", seed: int = 0,
+                  scale: float = 0.05, min_per_class: int = 1,
+                  model: Optional[SmallModel] = None, **topo_kwargs):
+        """The paper's synthetic worlds in one call: seeded dataset,
+        complex-network topology (extra kwargs go to the graph builder,
+        e.g. p=0.25 for ER, m=2 for BA), truncated-Zipf non-IID split."""
+        import inspect
+
+        from repro.data import make_dataset, zipf_allocation
+        from repro.data.allocation import split_by_allocation
+        from repro.graphs import make_topology
+        from repro.graphs.topology import TOPOLOGY_BUILDERS
+        from repro.models.mlp_cnn import model_for_dataset
+
+        ds = make_dataset(dataset, seed=seed, scale=scale)
+        builder = TOPOLOGY_BUILDERS.get(topology)
+        if builder is not None and \
+                "seed" in inspect.signature(builder).parameters:
+            topo_kwargs.setdefault("seed", seed)
+        topo = make_topology(topology, n=nodes, **topo_kwargs)
+        alloc = zipf_allocation(ds.y_train, nodes, seed=seed,
+                                min_per_class=min_per_class)
+        xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
+        model = model or model_for_dataset(dataset, ds.num_classes)
+        return cls(model=model, topo=topo, xs=xs, ys=ys,
+                   x_test=ds.x_test, y_test=ds.y_test)
+
+
+def _default_mesh(n: int):
+    """A pure pod mesh over the local devices: the largest pod count that
+    tiles the node axis (1 pod on a single-device host — the shard_map
+    lowering then still runs, just without an actual exchange axis split)."""
+    d = len(jax.devices())
+    while n % d:
+        d -= 1
+    return jax.make_mesh((d,), (NODE_AXIS,))
+
+
+class Experiment:
+    """One method over one world — see module docstring."""
+
+    def __init__(self, world: World, method: str = "decdiff+vt", *,
+                 comm: Optional[CommConfig] = None, backend: str = "vmap",
+                 schedule: Optional[Schedule] = None,
+                 train: Optional[TrainConfig] = None, mesh=None,
+                 **train_overrides):
+        if backend not in backends.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"available: {backends.BACKENDS}")
+        self.method: MethodSpec = get_method(method)
+        self.strategy = self.method.strategy
+        self.world = world
+        self.backend = backend
+        self.schedule = schedule or Schedule()
+        train = train or TrainConfig()
+        if train_overrides:
+            train = dataclasses.replace(train, **train_overrides)
+        self.train = train
+
+        model, topo = world.model, world.topo
+        if not (topo.num_nodes == len(world.xs) == len(world.ys)):
+            raise ValueError(
+                f"world has {topo.num_nodes} nodes but "
+                f"{len(world.xs)}/{len(world.ys)} data shards")
+        self.model = model
+        self.topo = topo
+        self.n = topo.num_nodes
+        self.mesh = (mesh if mesh is not None else
+                     _default_mesh(self.n) if backend == "shard_map" else None)
+
+        x_pad, y_pad, counts = pad_node_datasets(world.xs, world.ys)
+        self.x_pad = jnp.asarray(x_pad)
+        self.y_pad = jnp.asarray(y_pad.astype(np.int32))
+        self.counts = jnp.asarray(counts.astype(np.int32))
+        self.x_test = jnp.asarray(world.x_test)
+        self.y_test = jnp.asarray(world.y_test.astype(np.int32))
+
+        # --- graph tensors (padded neighbour layout) ---
+        idx = topo.neighbor_idx.astype(np.int32)
+        self.nbr_idx = jnp.asarray(np.maximum(idx, 0))
+        self.nbr_valid = jnp.asarray(topo.neighbor_mask.astype(np.float32))
+        # combined ω_ij * |D_j| weights (aggregators normalize internally,
+        # which realizes p_ij = |D_j| / Σ_{N_i} |D_j| of Eqs. 4/6/9).
+        omega = topo.neighbor_weights()  # [N, D]
+        dj = counts[np.maximum(idx, 0)].astype(np.float32)
+        self.nbr_weight = jnp.asarray(omega * dj * topo.neighbor_mask)
+
+        self.optimizer = sgd_momentum(lr=train.lr, momentum=train.momentum)
+        self.loss_fn = make_loss_fn(self.method.loss, beta=train.beta)
+        self.batcher = Batcher(batch_size=train.batch_size)
+        self._train_step = make_train_step(self.model, self.optimizer,
+                                           self.loss_fn)
+        self._grad_fn = make_grad_fn(self.model, self.loss_fn)
+        self._eval_raw = jax.vmap(
+            make_eval_fn(self.model,
+                         batch_size=min(train.eval_batch, len(world.x_test))),
+            in_axes=(0, None, None),
+        )
+        self._eval = jax.jit(self._eval_raw)
+
+        # --- init (heterogeneous unless the method coordinates) ---
+        base = jax.random.PRNGKey(train.seed)
+        if self.method.common_init:
+            keys = jnp.broadcast_to(jax.random.PRNGKey(train.seed + 1),
+                                    (self.n, 2))
+        else:
+            keys = jax.random.split(jax.random.fold_in(base, 17), self.n)
+        self.params = jax.vmap(self.model.init)(keys)
+        self.opt_state = jax.vmap(self.optimizer.init)(self.params)
+        self.rng = jax.random.fold_in(base, 23)
+
+        # --- gossip transport (capability-gated; repro.comm) ---
+        self.comm = comm
+        self.transport = None
+        self.comm_state = None
+        self.comm_bytes_total = 0.0
+        self._trig_sum = 0.0
+        self._comm_rounds = 0
+        self.trig_history: List[float] = []  # per-round triggered fraction
+        if comm is not None:
+            if not self.strategy.supports_transport:
+                raise ValueError(
+                    f"comm transport models neighbour model-gossip only; "
+                    f"method {method!r} is unsupported")
+            if comm.use_per_edge:
+                self.transport = EdgeGossipTransport(
+                    comm, self.params, topo.neighbor_idx, topo.neighbor_mask)
+            else:
+                self.transport = GossipTransport(comm, self.params)
+            self.comm_state = self.transport.init_state(self.params)
+
+        # --- method state + the lowered round ---
+        self.agg_state = self.strategy.init_state(self)
+        self._round_raw = backends.build_round(self)
+        donate = (0, 1, 2) if self.transport is not None else (0, 1)
+        self._round = jax.jit(self._round_raw, donate_argnums=donate)
+        self._fused_cache = {}
+
+    # ------------------------------------------------------------------
+    def evaluate(self) -> RoundMetrics:
+        acc, loss = self._eval(self.params, self.x_test, self.y_test)
+        return RoundMetrics(round=-1, acc_per_node=np.asarray(acc),
+                            loss_per_node=np.asarray(loss))
+
+    # ------------------------------------------------------------------
+    def _fused_program(self, rounds: int, eval_every: int):
+        """One jitted program for the whole schedule: `lax.scan` over the
+        rounds with the eval gated per round by a static flag array (the
+        non-eval branch is never executed, only compiled), stacking per-node
+        accuracy/loss — and, with a transport, the per-round fired-edge
+        counts — as scan outputs."""
+        key = (rounds, eval_every)
+        cached = self._fused_cache.get(key)
+        if cached is not None:
+            return cached
+        evals = set(Schedule.eval_rounds(rounds, eval_every))
+        flags = np.asarray([1 if r in evals else 0 for r in range(rounds)],
+                           np.int32)
+        round_fn = self._round_raw
+        eval_fn = self._eval_raw
+        x_test, y_test, n = self.x_test, self.y_test, self.n
+        has_comm = self.transport is not None
+
+        def gated_eval(flag, params):
+            return jax.lax.cond(
+                flag > 0,
+                lambda p: eval_fn(p, x_test, y_test),
+                lambda p: (jnp.zeros((n,), jnp.float32),
+                           jnp.zeros((n,), jnp.float32)),
+                params)
+
+        def body(carry, xs):
+            r, flag = xs
+            if has_comm:
+                params, opt, comm_state, rng = carry
+                (params, opt, comm_state, rng, _, sent, trig) = round_fn(
+                    params, opt, comm_state, r, rng)
+                carry = (params, opt, comm_state, rng)
+                extras = (sent, trig)
+            else:
+                params, opt, rng = carry
+                params, opt, rng, _ = round_fn(params, opt, r, rng)
+                carry = (params, opt, rng)
+                extras = ()
+            acc, loss = gated_eval(flag, carry[0])
+            return carry, (acc, loss) + extras
+
+        def program(carry):
+            return jax.lax.scan(
+                body, carry,
+                (jnp.arange(rounds, dtype=jnp.int32), jnp.asarray(flags)))
+
+        fused = jax.jit(program, donate_argnums=(0,))
+        self._fused_cache[key] = fused
+        return fused
+
+    def _account_comm(self, sent_edges, trig):
+        """Identical (order-preserving) float accounting in both modes —
+        the byte multiply stays in Python so exact accounting survives past
+        f32's 2^24 integers."""
+        self.comm_bytes_total += self.transport.payload_bytes * float(
+            sent_edges)
+        self._trig_sum += float(trig)
+        self._comm_rounds += 1
+        self.trig_history.append(float(trig))
+
+    def _finish_metrics(self, m: RoundMetrics, history, verbose):
+        if self.transport is not None:
+            m.bytes_on_wire = self.comm_bytes_total
+            m.triggered_frac = self._trig_sum / max(self._comm_rounds, 1)
+        history.append(m)
+        if verbose:
+            self._print_round(m)
+
+    def _run_fused(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
+        fused = self._fused_program(rounds, eval_every)
+        if self.transport is not None:
+            carry = (self.params, self.opt_state, self.comm_state, self.rng)
+        else:
+            carry = (self.params, self.opt_state, self.rng)
+        carry, ys = fused(carry)
+        if self.transport is not None:
+            self.params, self.opt_state, self.comm_state, self.rng = carry
+            acc_r, loss_r, sent_r, trig_r = ys
+            sent_r, trig_r = np.asarray(sent_r), np.asarray(trig_r)
+        else:
+            self.params, self.opt_state, self.rng = carry
+            acc_r, loss_r = ys
+        acc_r, loss_r = np.asarray(acc_r), np.asarray(loss_r)
+
+        evals = set(Schedule.eval_rounds(rounds, eval_every))
+        history: List[RoundMetrics] = []
+        for r in range(rounds):
+            if self.transport is not None:
+                self._account_comm(sent_r[r], trig_r[r])
+            if r in evals:
+                m = RoundMetrics(round=r, acc_per_node=acc_r[r],
+                                 loss_per_node=loss_r[r])
+                self._finish_metrics(m, history, verbose)
+        return history
+
+    def _run_loop(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
+        evals = set(Schedule.eval_rounds(rounds, eval_every))
+        history: List[RoundMetrics] = []
+        for r in range(rounds):
+            if self.transport is not None:
+                (self.params, self.opt_state, self.comm_state, self.rng, _,
+                 sent_edges, trig) = self._round(
+                    self.params, self.opt_state, self.comm_state,
+                    jnp.int32(r), self.rng)
+                self._account_comm(sent_edges, trig)
+            else:
+                self.params, self.opt_state, self.rng, _ = self._round(
+                    self.params, self.opt_state, jnp.int32(r), self.rng
+                )
+            if r in evals:
+                m = self.evaluate()
+                m.round = r
+                self._finish_metrics(m, history, verbose)
+        return history
+
+    def _print_round(self, m: RoundMetrics):
+        comm = ("" if m.bytes_on_wire is None else
+                f"  wire {m.bytes_on_wire / 1e6:.2f} MB"
+                f"  trig {m.triggered_frac:.2f}")
+        print(f"[{self.method.name}] round {m.round:4d}  "
+              f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  "
+              f"loss {m.loss_mean:.4f}{comm}")
+
+    def run(self, rounds: Optional[int] = None,
+            eval_every: Optional[int] = None, verbose: bool = False,
+            mode: Optional[str] = None) -> List[RoundMetrics]:
+        """Run the schedule; returns the eval history (includes round 0 =
+        after the initial local training, matching the paper's Fig. 1
+        x-axis).  Repeated calls continue from the current state (round
+        indices restart, so the deterministic batch schedule repeats)."""
+        rounds = self.schedule.rounds if rounds is None else rounds
+        eval_every = (self.schedule.eval_every if eval_every is None
+                      else eval_every)
+        mode = self.schedule.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"schedule mode must be one of {SCHEDULE_MODES}, "
+                             f"got {mode!r}")
+        if mode == "fused":
+            return self._run_fused(rounds, eval_every, verbose)
+        return self._run_loop(rounds, eval_every, verbose)

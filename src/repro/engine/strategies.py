@@ -1,0 +1,264 @@
+"""Method strategies: the paper's aggregation roster behind one protocol.
+
+An :class:`AggregationStrategy` is what a *method* does at the communication
+step of Algorithm 1 — everything else (local SGD, delivery masks, codecs,
+event triggers) is shared machinery owned by the engine.  The protocol is
+three hooks:
+
+  * ``init_state(exp)``   — the static per-experiment tensors the strategy
+    aggregates with (gossip weights, data-size weights, …), sliced per pod
+    block by the shard_map backend;
+  * ``exchange(exp, params, nbr_idx)`` — what a node receives: by default
+    the padded-neighbour gather of the stacked models.  When the experiment
+    carries a `CommConfig` the engine swaps this for the gossip transport
+    (codec + event trigger + per-link state), which is why a strategy that
+    wants transport support only has to declare the capability;
+  * ``aggregate(exp, state, params, gathered, mask)`` — the update itself,
+    consuming :mod:`repro.core.aggregation` / :mod:`repro.core.decdiff`
+    through one interface.
+
+Capabilities replace caller branching: ``kind`` ("gossip" | "server" |
+"none") tells the engine whether neighbours are exchanged at all,
+``grad_exchange`` opts into the CFA-GE second phase, and
+``supports_transport`` is derived — the engine selects the per-node or
+per-edge transport from the `CommConfig`, never from the method name.
+
+A *method* (what users name in ``Experiment(method=...)``) is a
+:class:`MethodSpec`: a strategy plus the loss ("ce" | "vt") and the init
+coordination flag (the paper's novel axis — heterogeneous init is the
+default, `common_init=True` reproduces the coordinated flavours).  The
+module-level registry is open: :func:`register_method` plugs in new methods
+(e.g. DFML-style mutual learning or personalized triggering variants)
+without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import (
+    cfa_aggregate,
+    decavg_aggregate,
+    fedavg_aggregate,
+)
+from repro.core.decdiff import decdiff_aggregate_stacked
+
+
+class AggregationStrategy:
+    """Base strategy: padded-neighbour gather exchange, abstract aggregate.
+
+    Subclass and override :meth:`aggregate` (and optionally
+    :meth:`init_state` / :meth:`exchange`); instances are stateless —
+    everything per-experiment lives in the ``state`` pytree returned by
+    ``init_state`` and in the experiment itself.
+    """
+
+    name: str = "base"
+    #: "gossip" — aggregate over delivered neighbour models (transportable);
+    #: "server" — global aggregation over all nodes (FedAvg star);
+    #: "none"   — no aggregation (isolation).
+    kind: str = "gossip"
+    #: CFA-GE second phase: neighbours evaluate our aggregated model on
+    #: their data and we descend along their weighted gradients.
+    grad_exchange: bool = False
+
+    @property
+    def supports_transport(self) -> bool:
+        """Can the neighbour exchange ride the repro.comm gossip transport?
+        True exactly for plain model-gossip: per-edge payload state models
+        *model* traffic, not CFA-GE's extra gradient legs or FedAvg's star."""
+        return self.kind == "gossip" and not self.grad_exchange
+
+    # ---------------------------------------------------------------- hooks
+    def init_state(self, exp) -> Dict[str, jnp.ndarray]:
+        """Static aggregation tensors, leaves with leading node axis [N, ...]
+        (the shard_map backend slices them per pod block).  Default: the
+        combined ω_ij·|D_j| neighbour weights and the per-node |D_i|."""
+        return {"weights": exp.nbr_weight,
+                "counts": exp.counts.astype(jnp.float32)}
+
+    def exchange(self, exp, params, nbr_idx):
+        """Neighbour exchange: stacked models -> [R, max_deg, ...] per-slot
+        views.  `params` holds every candidate sender ([N, ...]); `nbr_idx`
+        the receiver rows being served (the full [N, max_deg] table on the
+        vmap backend, the pod's block on shard_map)."""
+        return jax.tree.map(lambda p: p[nbr_idx], params)
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        """New local models for the block: `params` [R, ...], `gathered`
+        [R, max_deg, ...] (or [N, ...] full stack for "server" strategies),
+        `mask` [R, max_deg] {0,1} delivered-this-round."""
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}(name={self.name!r}, kind={self.kind!r})"
+
+
+class IsolationStrategy(AggregationStrategy):
+    """ISOL baseline: never communicate, keep the local model."""
+
+    name = "isol"
+    kind = "none"
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        del state, gathered, mask
+        return params
+
+
+class FedAvgStrategy(AggregationStrategy):
+    """Server-side FedAvg over ALL clients (the partially-decentralized FED
+    baseline); `gathered` is the full stacked model set."""
+
+    name = "fedavg"
+    kind = "server"
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        del mask
+        avg = fedavg_aggregate(gathered, state["counts"])
+        return jax.tree.map(
+            lambda a, p: jnp.broadcast_to(
+                a[None], (p.shape[0],) + a.shape).astype(p.dtype),
+            avg, params)
+
+
+class DecAvgStrategy(AggregationStrategy):
+    """Eq. 4 coordinate-wise average of {local} ∪ {delivered neighbours},
+    with the local model weighted ω_ii·|D_i| (DecAvg under common init,
+    DecHetero under per-node init — the init is the experiment's axis)."""
+
+    name = "decavg"
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        def one(local, stacked, w, m, sw):
+            return decavg_aggregate(local, stacked, w, mask=m, self_weight=sw)
+
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(
+            params, gathered, state["weights"], mask, state["counts"])
+
+
+class CFAStrategy(AggregationStrategy):
+    """Eq. 9 consensus step (Savazzi et al.): w_i += ε Σ_j p_ij (w_j - w_i)."""
+
+    name = "cfa"
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        def one(local, stacked, w, m):
+            return cfa_aggregate(local, stacked, w, mask=m)
+
+        return jax.vmap(one, in_axes=(0, 0, 0, 0))(
+            params, gathered, state["weights"], mask)
+
+
+class CFAGEStrategy(CFAStrategy):
+    """CFA + gradient exchange: the engine runs the second phase (neighbour
+    gradients of OUR aggregated model on THEIR data) when this capability is
+    set — doubling communication twice over, the paper's efficiency foil."""
+
+    name = "cfa"  # the aggregation IS Eq. 9; the exchange capability differs
+    grad_exchange = True
+
+
+class DecDiffStrategy(AggregationStrategy):
+    """The paper's proposal: Eq. 6 neighbourhood average (excluding self)
+    then the Eq. 5 distance-attenuated step, with damping s from the
+    experiment's TrainConfig."""
+
+    name = "decdiff"
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        return jax.vmap(
+            functools.partial(decdiff_aggregate_stacked, s=exp.train.s),
+            in_axes=(0, 0, 0, 0),
+        )(params, gathered, state["weights"], mask)
+
+
+# --------------------------------------------------------------- registry
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """A runnable method: strategy + loss + init coordination."""
+
+    name: str
+    strategy: AggregationStrategy
+    loss: str = "ce"            # "ce" | "vt" (virtual teacher, Eq. 7-8)
+    common_init: bool = False   # True = coordinated init (FedAvg/DecAvg)
+
+    def legacy_dict(self) -> Dict:
+        """The pre-engine METHODS-dict rendering (kept for the deprecated
+        `repro.fl.METHODS` view; "server"/"none" were the agg names)."""
+        agg = {"gossip": self.strategy.name, "server": "server",
+               "none": "none"}[self.strategy.kind]
+        d = dict(agg=agg, loss=self.loss, common_init=self.common_init)
+        if self.strategy.grad_exchange:
+            d["grad_exchange"] = True
+        return d
+
+
+_REGISTRY: Dict[str, MethodSpec] = {}
+
+
+def register_method(name: str, strategy: AggregationStrategy, *,
+                    loss: str = "ce", common_init: bool = False,
+                    overwrite: bool = False) -> MethodSpec:
+    """Register a method so `Experiment(method=name)` can run it.
+
+    `strategy` is an :class:`AggregationStrategy` instance; `loss` one of
+    the losses `repro.core.virtual_teacher.make_loss_fn` knows ("ce",
+    "vt"); `common_init` coordinates the per-node initializations.
+    Re-registering an existing name requires `overwrite=True` (typos should
+    fail loudly; deliberate replacement is a capability).
+    """
+    if not isinstance(strategy, AggregationStrategy):
+        raise TypeError(f"strategy must be an AggregationStrategy instance, "
+                        f"got {type(strategy).__name__}")
+    if strategy.kind not in ("gossip", "server", "none"):
+        raise ValueError(f"strategy.kind must be 'gossip', 'server' or "
+                         f"'none', got {strategy.kind!r}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"method {name!r} is already registered "
+                         f"(pass overwrite=True to replace it)")
+    spec = MethodSpec(name=name, strategy=strategy, loss=loss,
+                      common_init=common_init)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_method(name: str) -> MethodSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_methods() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# The paper roster (§V-B.5) + beyond-paper ablation combos.  Strategies are
+# stateless, so flavours share instances.
+_ISOL = IsolationStrategy()
+_FEDAVG = FedAvgStrategy()
+_DECAVG = DecAvgStrategy()
+_CFA = CFAStrategy()
+_CFAGE = CFAGEStrategy()
+_DECDIFF = DecDiffStrategy()
+
+register_method("isol", _ISOL)
+register_method("fedavg", _FEDAVG, common_init=True)
+register_method("decavg", _DECAVG, common_init=True)
+register_method("dechetero", _DECAVG)
+register_method("cfa", _CFA)
+register_method("cfa-ge", _CFAGE)
+register_method("decdiff", _DECDIFF)
+register_method("decdiff+vt", _DECDIFF, loss="vt")
+# beyond-paper ablation combos:
+register_method("dechetero+vt", _DECAVG, loss="vt")
+register_method("cfa+vt", _CFA, loss="vt")
+register_method("fedavg+vt", _FEDAVG, loss="vt", common_init=True)
+register_method("decdiff+vt+coord", _DECDIFF, loss="vt", common_init=True)

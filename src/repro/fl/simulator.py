@@ -1,81 +1,48 @@
-"""Vectorized multi-node DFL simulator (the paper's SAISIM counterpart).
+"""DEPRECATED shim: `DFLSimulator` is now `repro.engine.Experiment`.
 
-Simulates |V| devices on a complex network running Algorithm 1 (or any of the
-baseline methods) with everything vmapped over the node axis, so a whole
-communication round — local SGD steps, neighbour exchange, aggregation — is
-one jitted XLA program:
+The vectorized multi-node simulator (the paper's SAISIM counterpart) moved
+to :mod:`repro.engine`, which runs the same Algorithm-1 round — local
+SGD(momentum) steps, neighbour exchange (optionally through the repro.comm
+gossip transport), method aggregation — behind one `Experiment` API with
+pluggable method strategies, a vmap AND a shard_map backend, and a
+scan-fused multi-round schedule.  Migration table: docs/api.md.
 
-  round:  (1) B local SGD(momentum) minibatch steps per node  (Alg.1 l.4-9)
-          (2) model exchange with graph neighbours             (l.10-11)
-          (3) aggregation (DecAvg / CFA / DecDiff / none)      (l.12-13)
-          (4) [CFA-GE only] neighbour-gradient exchange + descent
+This module keeps the old constructor working, bit-for-bit: the shim lowers
+onto `Experiment(world, method, comm=..., backend="vmap")` with the "loop"
+schedule, which is the op-for-op port of the legacy round (pinned by
+tests/test_engine.py).  Constructing `DFLSimulator` raises a
+`DeprecationWarning`; in-repo code must use `Experiment` (the warning is an
+error under the repo's pytest config).
 
-Heterogeneous initialization (the paper's novel axis) is the default: each
-node draws its own init key.  `common_init=True` reproduces the coordinated
-flavours (DecAvg, FedAvg).  Partial participation — the paper imposes no
-synchronization; a node may hear from a fraction of its neighbours — is
-modelled with a per-round Bernoulli delivery mask.
-
-Communication is free by default (full fp32 models).  Passing a
-`CommConfig` (repro.comm) routes the exchange through the gossip transport:
-payload codecs (bf16 / stochastic int8 / top-k with error feedback), an
-event-triggered drift rule replacing always-send, and exact bytes-on-wire +
-triggered-fraction accounting on every RoundMetrics.  With
-`CommConfig(per_edge=True)` or `policy="adaptive"` the transport keeps its
-reference/residual/threshold state per directed link (`[N, max_deg, ...]`),
-link failures are acked so a dropped edge's error feedback never leaks into
-its siblings, and adaptive thresholds steer every link toward
-`target_trigger` (bytes are then counted per fired EDGE, not per sender).
-
-Method registry (paper §V-B.5):
+Method registry (paper §V-B.5) — now `repro.engine.available_methods()`:
   isol, fedavg, decavg, dechetero, cfa, cfa-ge, decdiff, decdiff+vt
 (plus beyond-paper combos: dechetero+vt, cfa+vt, fedavg+vt for ablations).
+`METHODS` below is a read-only legacy rendering of that registry.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, EdgeGossipTransport, GossipTransport
-from repro.core.aggregation import (
-    cfa_aggregate,
-    decavg_aggregate,
-    fedavg_aggregate,
-)
-from repro.core.decdiff import decdiff_aggregate_stacked
-from repro.core.virtual_teacher import make_loss_fn
-from repro.data.allocation import pad_node_datasets
-from repro.data.pipeline import Batcher
+from repro.comm import CommConfig
+from repro.engine.strategies import available_methods, get_method
 from repro.fl.metrics import RoundMetrics
-from repro.fl.trainer import make_eval_fn, make_grad_fn, make_train_step
 from repro.graphs.topology import Topology
 from repro.models.api import SmallModel
-from repro.optim.sgd import sgd_momentum
 
-METHODS: Dict[str, Dict] = {
-    "isol": dict(agg="none", loss="ce", common_init=False),
-    "fedavg": dict(agg="server", loss="ce", common_init=True),
-    "decavg": dict(agg="decavg", loss="ce", common_init=True),
-    "dechetero": dict(agg="decavg", loss="ce", common_init=False),
-    "cfa": dict(agg="cfa", loss="ce", common_init=False),
-    "cfa-ge": dict(agg="cfa", loss="ce", common_init=False, grad_exchange=True),
-    "decdiff": dict(agg="decdiff", loss="ce", common_init=False),
-    "decdiff+vt": dict(agg="decdiff", loss="vt", common_init=False),
-    # beyond-paper ablation combos:
-    "dechetero+vt": dict(agg="decavg", loss="vt", common_init=False),
-    "cfa+vt": dict(agg="cfa", loss="vt", common_init=False),
-    "fedavg+vt": dict(agg="server", loss="vt", common_init=True),
-    "decdiff+vt+coord": dict(agg="decdiff", loss="vt", common_init=True),
-}
+#: Legacy view of the strategy registry (pre-engine METHODS-dict shape).
+METHODS: Dict[str, Dict] = {name: get_method(name).legacy_dict()
+                            for name in available_methods()}
 
 
 @dataclasses.dataclass(frozen=True)
 class SimulatorConfig:
+    """Legacy all-in-one config; `repro.engine` splits it into
+    (method, TrainConfig, Schedule, CommConfig)."""
+
     method: str = "decdiff+vt"
     rounds: int = 100
     steps_per_round: int = 4  # B in Alg. 1 (minibatch steps between exchanges)
@@ -89,346 +56,69 @@ class SimulatorConfig:
     eval_every: int = 5
     eval_batch: int = 128
     ge_lr: Optional[float] = None  # CFA-GE gradient-apply LR (default: lr)
-    # Heterogeneous local training (paper Alg. 1: E "is not necessarily the
-    # same at all nodes"): per-node number of local steps per round, sampled
-    # uniformly from [min, steps_per_round].  0 disables (= homogeneous).
     hetero_steps_min: int = 0
-    # Gossip transport (repro.comm): payload codec + event-triggered sending
-    # with exact bytes-on-wire accounting.  None = legacy free-communication
-    # model (full fp32 models, always delivered modulo `participation`).
     comm: Optional[CommConfig] = None
 
 
 class DFLSimulator:
-    """Run one method over one (topology, per-node datasets) instance."""
+    """Deprecated façade over :class:`repro.engine.Experiment` (the legacy
+    constructor/run/evaluate surface, including the comm accounting
+    attributes the old benchmarks read)."""
 
     def __init__(self, model: SmallModel, topo: Topology,
                  xs: List[np.ndarray], ys: List[np.ndarray],
                  x_test: np.ndarray, y_test: np.ndarray,
                  config: SimulatorConfig):
+        warnings.warn(
+            "DFLSimulator is deprecated; use repro.engine.Experiment "
+            "(see docs/api.md for the migration table)",
+            DeprecationWarning, stacklevel=2)
+        from repro.engine import Experiment, Schedule, TrainConfig, World
+
+        get_method(config.method)  # unknown-method error, legacy timing
         assert topo.num_nodes == len(xs) == len(ys)
-        if config.method not in METHODS:
-            raise ValueError(f"unknown method {config.method!r}; available: {sorted(METHODS)}")
-        self.model = model
-        self.topo = topo
         self.cfg = config
-        self.spec = METHODS[config.method]
-        self.n = topo.num_nodes
+        self._exp = Experiment(
+            World(model=model, topo=topo, xs=xs, ys=ys,
+                  x_test=x_test, y_test=y_test),
+            config.method,
+            comm=config.comm,
+            backend="vmap",
+            schedule=Schedule(rounds=config.rounds,
+                              eval_every=config.eval_every, mode="loop"),
+            train=TrainConfig(
+                steps_per_round=config.steps_per_round,
+                batch_size=config.batch_size, lr=config.lr,
+                momentum=config.momentum, beta=config.beta, s=config.s,
+                participation=config.participation, seed=config.seed,
+                eval_batch=config.eval_batch, ge_lr=config.ge_lr,
+                hetero_steps_min=config.hetero_steps_min),
+        )
 
-        x_pad, y_pad, counts = pad_node_datasets(xs, ys)
-        self.x_pad = jnp.asarray(x_pad)
-        self.y_pad = jnp.asarray(y_pad.astype(np.int32))
-        self.counts = jnp.asarray(counts.astype(np.int32))
-        self.x_test = jnp.asarray(x_test)
-        self.y_test = jnp.asarray(y_test.astype(np.int32))
+    # ------------------------------------------------------- delegation
+    @property
+    def experiment(self):
+        """The underlying Experiment (escape hatch for migration)."""
+        return self._exp
 
-        # --- graph tensors (padded neighbour layout) ---
-        idx = topo.neighbor_idx.astype(np.int32)
-        self.nbr_idx = jnp.asarray(np.maximum(idx, 0))
-        self.nbr_valid = jnp.asarray(topo.neighbor_mask.astype(np.float32))
-        # combined ω_ij * |D_j| weights (aggregators normalize internally,
-        # which realizes p_ij = |D_j| / Σ_{N_i} |D_j| of Eqs. 4/6/9).
-        omega = topo.neighbor_weights()  # [N, D]
-        dj = counts[np.maximum(idx, 0)].astype(np.float32)
-        self.nbr_weight = jnp.asarray(omega * dj * topo.neighbor_mask)
+    def __getattr__(self, name):
+        # model/topo/params/opt_state/rng/transport/comm_state/
+        # comm_bytes_total/trig_history/n/... — everything the legacy
+        # simulator exposed lives on the Experiment under the same name.
+        if name == "_exp":  # not yet constructed (failed __init__ etc.)
+            raise AttributeError(name)
+        return getattr(self._exp, name)
 
-        self.optimizer = sgd_momentum(lr=config.lr, momentum=config.momentum)
-        self.loss_fn = make_loss_fn(self.spec["loss"], beta=config.beta)
-        self.batcher = Batcher(batch_size=config.batch_size)
-        self._train_step = make_train_step(self.model, self.optimizer, self.loss_fn)
-        self._grad_fn = make_grad_fn(self.model, self.loss_fn)
-        self._eval = jax.jit(jax.vmap(
-            make_eval_fn(self.model, batch_size=min(config.eval_batch, len(x_test))),
-            in_axes=(0, None, None),
-        ))
-        # --- init (heterogeneous unless the method coordinates) ---
-        base = jax.random.PRNGKey(config.seed)
-        if self.spec.get("common_init", False):
-            keys = jnp.broadcast_to(jax.random.PRNGKey(config.seed + 1), (self.n, 2))
-        else:
-            keys = jax.random.split(jax.random.fold_in(base, 17), self.n)
-        self.params = jax.vmap(self.model.init)(keys)
-        self.opt_state = jax.vmap(self.optimizer.init)(self.params)
-        self.rng = jax.random.fold_in(base, 23)
+    @property
+    def spec(self) -> Dict:
+        """Legacy METHODS-dict entry for the configured method."""
+        return METHODS[self.cfg.method]
 
-        # --- gossip transport (optional; neighbour-gossip methods only) ---
-        self.transport = None
-        self.comm_state = None
-        self.comm_bytes_total = 0.0
-        self._trig_sum = 0.0
-        self._comm_rounds = 0
-        self.trig_history: List[float] = []  # per-round triggered fraction
-        if config.comm is not None:
-            if self.spec["agg"] not in ("decavg", "cfa", "decdiff") or \
-                    self.spec.get("grad_exchange", False):
-                raise ValueError(
-                    f"comm transport models neighbour model-gossip only; "
-                    f"method {config.method!r} is unsupported")
-            if config.comm.use_per_edge:
-                self.transport = EdgeGossipTransport(
-                    config.comm, self.params, topo.neighbor_idx,
-                    topo.neighbor_mask)
-            else:
-                self.transport = GossipTransport(config.comm, self.params)
-            self.comm_state = self.transport.init_state(self.params)
-
-        donate = (0, 1, 2) if self.transport is not None else (0, 1)
-        self._round = jax.jit(self._make_round_fn(), donate_argnums=donate)
-
-    # ------------------------------------------------------------------
-    def _make_round_fn(self):
-        cfg, spec = self.cfg, self.spec
-        nbr_idx, nbr_valid, nbr_weight = self.nbr_idx, self.nbr_valid, self.nbr_weight
-        counts, batcher = self.counts, self.batcher
-        n = self.n
-
-        def take_batch(x, y, c, step):
-            return batcher.take(x, y, c, step)
-
-        v_take = jax.vmap(take_batch, in_axes=(0, 0, 0, None))
-        v_step = jax.vmap(self._train_step, in_axes=(0, 0, 0, 0, None, 0))
-
-        def local_training(params, opt, round_idx, rng):
-            # Heterogeneous E (Alg. 1): per-node step budget for this round;
-            # nodes past their budget keep their params (masked update).
-            if cfg.hetero_steps_min > 0:
-                rng, sub = jax.random.split(rng)
-                budgets = jax.random.randint(
-                    sub, (n,), cfg.hetero_steps_min, cfg.steps_per_round + 1)
-            else:
-                budgets = jnp.full((n,), cfg.steps_per_round, jnp.int32)
-
-            def body(carry, b):
-                params, opt, rng = carry
-                step = round_idx * cfg.steps_per_round + b
-                x, y = v_take(self.x_pad, self.y_pad, counts, step)
-                rng, sub = jax.random.split(rng)
-                drop_keys = jax.random.split(sub, n)
-                new_params, new_opt, loss = v_step(params, opt, x, y, step,
-                                                   drop_keys)
-                active = (b < budgets).astype(jnp.float32)
-
-                def mix(new, old):
-                    a = active.reshape((n,) + (1,) * (new.ndim - 1))
-                    return (a * new.astype(jnp.float32)
-                            + (1 - a) * old.astype(jnp.float32)).astype(old.dtype)
-
-                params = jax.tree.map(mix, new_params, params)
-                opt = jax.tree.map(mix, new_opt, opt)
-                return (params, opt, rng), jnp.mean(loss)
-
-            (params, opt, rng), losses = jax.lax.scan(
-                body, (params, opt, rng), jnp.arange(cfg.steps_per_round)
-            )
-            return params, opt, rng, jnp.mean(losses)
-
-        def delivery_mask(rng):
-            if cfg.participation >= 1.0:
-                return nbr_valid
-            u = jax.random.uniform(rng, nbr_valid.shape)
-            return nbr_valid * (u < cfg.participation).astype(jnp.float32)
-
-        # --- aggregation dispatch (static on method) ---
-        agg_kind = spec["agg"]
-        if agg_kind == "decdiff":
-            agg_fn = jax.vmap(
-                functools.partial(decdiff_aggregate_stacked, s=cfg.s),
-                in_axes=(0, 0, 0, 0),
-            )
-        elif agg_kind == "decavg":
-            def _decavg(local, stacked, w, m, sw):
-                return decavg_aggregate(local, stacked, w, mask=m, self_weight=sw)
-            agg_fn = jax.vmap(_decavg, in_axes=(0, 0, 0, 0, 0))
-        elif agg_kind == "cfa":
-            def _cfa(local, stacked, w, m):
-                return cfa_aggregate(local, stacked, w, mask=m)
-            agg_fn = jax.vmap(_cfa, in_axes=(0, 0, 0, 0))
-        else:
-            agg_fn = None
-
-        v_grad = jax.vmap(self._grad_fn, in_axes=(0, 0, 0, 0))
-        max_deg = int(nbr_idx.shape[1])
-
-        def gradient_exchange(params, mask, round_idx, rng):
-            """CFA-GE: neighbours evaluate our aggregated model on their data;
-            we descend along the p_ij-weighted mean of their gradients."""
-            bs = cfg.batch_size
-
-            def body(acc, d):
-                j = nbr_idx[:, d]  # [n] neighbour ids in slot d
-                cj = counts[j]
-                base = (round_idx * max_deg + d) * bs
-                bidx = (base + jnp.arange(bs, dtype=jnp.int32)[None, :]) * batcher.stride
-                bidx = bidx % jnp.maximum(cj[:, None], 1)
-                xj = self.x_pad[j[:, None], bidx]  # [n, bs, ...]
-                yj = self.y_pad[j[:, None], bidx]
-                keys = jax.random.split(jax.random.fold_in(rng, d), n)
-                g = v_grad(params, xj, yj, keys)  # grad of F_j at w_i
-                w_d = nbr_weight[:, d] * mask[:, d]
-
-                def add(a, gi):
-                    wb = w_d.reshape((n,) + (1,) * (gi.ndim - 1))
-                    return a + wb * gi.astype(jnp.float32)
-
-                return jax.tree.map(add, acc, g), None
-
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
-            )
-            acc, _ = jax.lax.scan(body, zeros, jnp.arange(max_deg))
-            tot = jnp.sum(nbr_weight * mask, axis=1)  # [n]
-            safe = jnp.maximum(tot, 1e-9)
-            lr_ge = cfg.ge_lr if cfg.ge_lr is not None else cfg.lr
-
-            def apply(p, a):
-                wb = (1.0 / safe).reshape((n,) + (1,) * (a.ndim - 1))
-                gate = (tot > 0).astype(jnp.float32).reshape((n,) + (1,) * (a.ndim - 1))
-                return (p.astype(jnp.float32) - lr_ge * gate * wb * a).astype(p.dtype)
-
-            return jax.tree.map(apply, params, acc)
-
-        def gossip_aggregate(params, gathered, mask):
-            if agg_kind == "decavg":
-                self_w = counts.astype(jnp.float32)  # ω_ii=1, weight |D_i|
-                return agg_fn(params, gathered, nbr_weight, mask, self_w)
-            return agg_fn(params, gathered, nbr_weight, mask)
-
-        transport = self.transport
-        degrees = jnp.sum(nbr_valid, axis=1)
-        total_edges = jnp.sum(degrees)  # directed edge count
-
-        def comm_round_fn(params, opt, comm_state, round_idx, rng):
-            """The legacy round with the transport in the middle: encode ->
-            (event-triggered, possibly failing) wire -> decode -> aggregate.
-            With the fp32 codec and threshold 0 this is bit-for-bit the
-            plain round (same rng stream, identical payload values)."""
-            from repro.comm.trigger import edge_delivery
-
-            params, opt, rng, train_loss = local_training(params, opt, round_idx, rng)
-            rng, sub = jax.random.split(rng)
-            link = delivery_mask(sub)  # exogenous failures (participation)
-            if transport.wants_rng:
-                rng, ck = jax.random.split(rng)
-            else:
-                ck = None
-            decoded, gate, comm_state = transport.exchange(params, comm_state, ck)
-            # `decoded` rows of silent nodes hold their cached last-sent
-            # model, so "stale" aggregates them at full weight (masking only
-            # neighbours that have NEVER transmitted — their cache is still
-            # the zero bootstrap reference); "drop" masks any silent node
-            # like a failed link.
-            if transport.config.on_silence == "drop":
-                mask = edge_delivery(gate, link, nbr_idx)
-            else:
-                mask = edge_delivery(comm_state.ever_sent, link, nbr_idx)
-            gathered = jax.tree.map(lambda p: p[nbr_idx], decoded)
-            params = gossip_aggregate(params, gathered, mask)
-            # a transmitting node broadcasts one payload per outgoing edge;
-            # failed links still burn the sender's bytes.  Return the edge
-            # COUNT (small, exact in f32) — the byte multiply happens in
-            # Python so exact accounting survives past f32's 2^24 integers.
-            # triggered_frac is the fraction of directed edges that carried
-            # a payload (= degree-weighted sender mean), the SAME definition
-            # the per-edge round reports, so frontier rows are comparable
-            # across transports and proportional to bytes in both.
-            sent_edges = jnp.sum(gate * degrees)
-            return (params, opt, comm_state, rng, train_loss,
-                    sent_edges, sent_edges / total_edges)
-
-        def edge_comm_round_fn(params, opt, comm_state, round_idx, rng):
-            """The per-edge transport round: every directed link carries its
-            own reference/residual/threshold, so the link mask feeds the
-            exchange (link-layer ack) and the transport hands back both the
-            receiver-layout gathered models (fresh or per-link stale cache)
-            and the aggregation mask.  Same rng stream as comm_round_fn, so
-            fp32 + threshold 0 + policy "fixed" is bit-for-bit the legacy
-            round (pinned in tests/test_comm_per_edge.py)."""
-            params, opt, rng, train_loss = local_training(params, opt,
-                                                          round_idx, rng)
-            rng, sub = jax.random.split(rng)
-            link = delivery_mask(sub)  # exogenous failures (participation)
-            if transport.wants_rng:
-                rng, ck = jax.random.split(rng)
-            else:
-                ck = None
-            gathered, mask, gate, comm_state = transport.exchange(
-                params, comm_state, link, ck)
-            params = gossip_aggregate(params, gathered, mask)
-            # unicast accounting: one payload per FIRED edge (a silent edge
-            # of an otherwise-sending node costs nothing); failed links
-            # still burn the sender's bytes.
-            sent_edges = jnp.sum(gate)
-            trig = sent_edges / jnp.float32(transport.num_edges)
-            return (params, opt, comm_state, rng, train_loss,
-                    sent_edges, trig)
-
-        def round_fn(params, opt, round_idx, rng):
-            params, opt, rng, train_loss = local_training(params, opt, round_idx, rng)
-            rng, sub = jax.random.split(rng)
-            mask = delivery_mask(sub)
-
-            if agg_kind == "server":
-                p_i = counts.astype(jnp.float32)
-                avg = fedavg_aggregate(params, p_i)
-                params = jax.tree.map(
-                    lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).astype(a.dtype), avg
-                )
-            elif agg_kind == "none":
-                pass
-            else:
-                gathered = jax.tree.map(lambda p: p[nbr_idx], params)  # [n, D, ...]
-                params = gossip_aggregate(params, gathered, mask)
-                if spec.get("grad_exchange", False):
-                    rng, sub = jax.random.split(rng)
-                    params = gradient_exchange(params, mask, round_idx, sub)
-
-            return params, opt, rng, train_loss
-
-        if transport is None:
-            return round_fn
-        return (edge_comm_round_fn if isinstance(transport, EdgeGossipTransport)
-                else comm_round_fn)
-
-    # ------------------------------------------------------------------
     def evaluate(self) -> RoundMetrics:
-        acc, loss = self._eval(self.params, self.x_test, self.y_test)
-        return RoundMetrics(round=-1, acc_per_node=np.asarray(acc),
-                            loss_per_node=np.asarray(loss))
+        return self._exp.evaluate()
 
-    def run(self, rounds: Optional[int] = None, eval_every: Optional[int] = None,
+    def run(self, rounds: Optional[int] = None,
+            eval_every: Optional[int] = None,
             verbose: bool = False) -> List[RoundMetrics]:
-        """Run the simulation; returns the eval history (includes round 0 =
-        after the initial local training, matching the paper's Fig. 1 x-axis)."""
-        rounds = self.cfg.rounds if rounds is None else rounds
-        eval_every = self.cfg.eval_every if eval_every is None else eval_every
-        history: List[RoundMetrics] = []
-        for r in range(rounds):
-            if self.transport is not None:
-                (self.params, self.opt_state, self.comm_state, self.rng, _,
-                 sent_edges, trig) = self._round(
-                    self.params, self.opt_state, self.comm_state,
-                    jnp.int32(r), self.rng)
-                self.comm_bytes_total += (self.transport.payload_bytes
-                                          * float(sent_edges))
-                self._trig_sum += float(trig)
-                self._comm_rounds += 1
-                self.trig_history.append(float(trig))
-            else:
-                self.params, self.opt_state, self.rng, _ = self._round(
-                    self.params, self.opt_state, jnp.int32(r), self.rng
-                )
-            if r % eval_every == 0 or r == rounds - 1:
-                m = self.evaluate()
-                m.round = r
-                if self.transport is not None:
-                    m.bytes_on_wire = self.comm_bytes_total
-                    m.triggered_frac = self._trig_sum / max(self._comm_rounds, 1)
-                history.append(m)
-                if verbose:
-                    comm = ("" if m.bytes_on_wire is None else
-                            f"  wire {m.bytes_on_wire / 1e6:.2f} MB"
-                            f"  trig {m.triggered_frac:.2f}")
-                    print(f"[{self.cfg.method}] round {r:4d}  "
-                          f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  "
-                          f"loss {m.loss_mean:.4f}{comm}")
-        return history
+        return self._exp.run(rounds=rounds, eval_every=eval_every,
+                             verbose=verbose)

@@ -233,24 +233,21 @@ def test_adaptive_update_moves_thresholds_toward_target_rate():
 def test_adaptive_threshold_converges_to_target_triggered_fraction():
     """The satellite convergence contract: on a seeded world the per-edge
     controller steers the long-run triggered fraction to target_trigger."""
-    from repro.data import make_dataset, zipf_allocation
-    from repro.data.allocation import split_by_allocation
-    from repro.fl import DFLSimulator, SimulatorConfig
+    from repro.engine import Experiment, Schedule, World
     from repro.graphs import make_topology
     from repro.models.mlp_cnn import make_mlp
 
-    ds = make_dataset("synth-mnist", seed=3, scale=0.02)
     topo = make_topology("ring", n=4)
-    alloc = zipf_allocation(ds.y_train, 4, seed=3, min_per_class=1)
-    xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
-    model = make_mlp(num_classes=10, hidden=(32,))
+    world = World.synthetic(dataset="synth-mnist", nodes=4, topology="ring",
+                            seed=3, scale=0.02,
+                            model=make_mlp(num_classes=10, hidden=(32,)))
     target = 0.5
-    cfg = SimulatorConfig(
-        method="decdiff+vt", rounds=30, steps_per_round=2, batch_size=16,
-        lr=0.1, momentum=0.9, eval_every=50, seed=3,
+    sim = Experiment(
+        world, "decdiff+vt",
         comm=CommConfig(codec="int8", policy="adaptive",
-                        target_trigger=target))
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
+                        target_trigger=target),
+        schedule=Schedule(rounds=30, eval_every=50),
+        steps_per_round=2, batch_size=16, lr=0.1, momentum=0.9, seed=3)
     sim.run()
     trig = np.asarray(sim.trig_history)
     assert trig[0] == 1.0                      # always-send bootstrap

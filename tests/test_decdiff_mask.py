@@ -96,24 +96,20 @@ def test_dfl_round_runtime_mask_without_retrace():
 
 
 def _tiny_sim(comm, rounds=3):
-    """Minimal 4-node world for transport-equivalence checks."""
-    from repro.data import make_dataset, zipf_allocation
-    from repro.data.allocation import split_by_allocation
-    from repro.fl import DFLSimulator, SimulatorConfig
-    from repro.graphs import make_topology
+    """Minimal 4-node world for transport-equivalence checks (returns the
+    post-run `repro.engine.Experiment`)."""
+    from repro.engine import Experiment, Schedule, World
     from repro.models.mlp_cnn import make_mlp
 
-    ds = make_dataset("synth-mnist", seed=3, scale=0.02)
-    topo = make_topology("ring", n=4)
-    alloc = zipf_allocation(ds.y_train, 4, seed=3, min_per_class=1)
-    xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
-    model = make_mlp(num_classes=10, hidden=(32,))
-    cfg = SimulatorConfig(method="decdiff+vt", rounds=rounds, steps_per_round=2,
-                          batch_size=16, lr=0.1, momentum=0.9, eval_every=10,
-                          participation=0.7, seed=3, comm=comm)
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-    sim.run()
-    return sim
+    world = World.synthetic(dataset="synth-mnist", nodes=4, topology="ring",
+                            seed=3, scale=0.02,
+                            model=make_mlp(num_classes=10, hidden=(32,)))
+    exp = Experiment(world, "decdiff+vt", comm=comm,
+                     schedule=Schedule(rounds=rounds, eval_every=10),
+                     steps_per_round=2, batch_size=16, lr=0.1, momentum=0.9,
+                     participation=0.7, seed=3)
+    exp.run()
+    return exp
 
 
 def test_threshold_zero_fp32_transport_is_bitexact_vs_legacy():

@@ -1,0 +1,339 @@
+"""repro.engine contracts: the strategy registry, backend/schedule
+equivalence, and the deprecated DFLSimulator shim.
+
+The load-bearing pins:
+
+  1. registry — unknown methods fail with the available roster in the
+     message; custom strategies registered through `register_method` run
+     end-to-end through the same engine as the built-ins;
+  2. schedule — the scan-fused runner produces bit-identical params and
+     metrics to the per-round Python loop (same rng stream, same ops,
+     compiled once under `lax.scan`);
+  3. backends — the shard_map lowering on the forced 4-device CPU mesh is
+     bit-identical to the vmap lowering, plain AND through the fp32/
+     threshold-0/fixed transport (the ISSUE-4 acceptance spec), AND
+     scan-fused on top;
+  4. shim — `DFLSimulator` warns DeprecationWarning and delegates to an
+     `Experiment` that reproduces it bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.engine import (
+    AggregationStrategy,
+    Experiment,
+    Schedule,
+    TrainConfig,
+    World,
+    available_methods,
+    build_round,
+    get_method,
+    register_method,
+)
+from repro.engine.strategies import _REGISTRY
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    """4-node ring over a reduced synth-mnist; small MLP."""
+    from repro.models.mlp_cnn import make_mlp
+
+    return World.synthetic(dataset="synth-mnist", nodes=4, topology="ring",
+                           seed=3, scale=0.02,
+                           model=make_mlp(num_classes=10, hidden=(32,)))
+
+
+TINY = dict(steps_per_round=2, batch_size=16, lr=0.1, momentum=0.9, seed=3)
+
+
+def _exp(world, method="decdiff+vt", rounds=3, mode="loop", **kw):
+    kw = {**TINY, **kw}
+    return Experiment(world, method,
+                      schedule=Schedule(rounds=rounds, eval_every=2,
+                                        mode=mode), **kw)
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ----------------------------------------------------------------- registry
+
+
+def test_unknown_method_error_lists_available():
+    with pytest.raises(ValueError) as ei:
+        get_method("decdfif+vt")  # typo'd
+    msg = str(ei.value)
+    assert "unknown method 'decdfif+vt'" in msg
+    for name in available_methods():
+        assert name in msg  # the full roster is in the message
+
+
+def test_paper_roster_is_registered():
+    roster = available_methods()
+    for m in ("isol", "fedavg", "decavg", "dechetero", "cfa", "cfa-ge",
+              "decdiff", "decdiff+vt"):
+        assert m in roster
+    spec = get_method("decdiff+vt")
+    assert spec.loss == "vt" and not spec.common_init
+    assert spec.strategy.supports_transport
+    assert not get_method("cfa-ge").strategy.supports_transport
+    assert get_method("fedavg").common_init
+
+
+def test_register_method_guards():
+    with pytest.raises(ValueError, match="already registered"):
+        register_method("decdiff", get_method("decdiff").strategy)
+    with pytest.raises(TypeError, match="AggregationStrategy"):
+        register_method("not-a-strategy", lambda: None)
+
+
+class _HeadroomStrategy(AggregationStrategy):
+    """A deliberately-custom gossip rule: move each node a fixed fraction
+    toward the plain delivered-neighbour mean (no data-size weighting).
+    Exists to prove third-party strategies run the whole engine unchanged —
+    including the transport, which it supports by capability."""
+
+    name = "headroom"
+
+    def __init__(self, alpha=0.5):
+        self.alpha = alpha
+
+    def init_state(self, exp):
+        return {"valid": exp.nbr_valid}
+
+    def aggregate(self, exp, state, params, gathered, mask):
+        a = self.alpha
+
+        def one(local, stacked, m):
+            tot = jnp.maximum(jnp.sum(m), 1.0)
+            gate = (jnp.sum(m) > 0).astype(jnp.float32)
+
+            def leaf(li, st):
+                mb = m.reshape(m.shape + (1,) * (st.ndim - 1))
+                avg = jnp.sum(mb * st.astype(jnp.float32), axis=0) / tot
+                lf = li.astype(jnp.float32)
+                return (lf + gate * a * (avg - lf)).astype(li.dtype)
+
+            return jax.tree.map(leaf, local, stacked)
+
+        return jax.vmap(one, in_axes=(0, 0, 0))(
+            params, gathered, state["valid"] * mask)
+
+
+def test_custom_strategy_end_to_end(tiny_world):
+    """The satellite contract: a registered custom strategy runs the full
+    engine (local SGD, exchange, aggregation, eval, and the gossip
+    transport selected purely off its capability)."""
+    name = "headroom-test"
+    register_method(name, _HeadroomStrategy(alpha=0.5), loss="vt")
+    try:
+        exp = _exp(tiny_world, name, rounds=3, mode="fused")
+        hist = exp.run()
+        assert np.isfinite(hist[-1].acc_mean)
+        iso = _exp(tiny_world, "isol", rounds=3, mode="fused")
+        iso.run()
+        # gossip genuinely ran: differs from no-communication training
+        assert not _params_equal(exp.params, iso.params)
+        # capability-selected transport: same custom method, now with the
+        # fp32/thr0/fixed transport in the middle — bit-for-bit equal
+        comm = Experiment(tiny_world, name,
+                          comm=CommConfig(codec="fp32"),
+                          schedule=Schedule(rounds=3, eval_every=2,
+                                            mode="fused"), **TINY)
+        comm.run()
+        assert comm.transport is not None
+        assert _params_equal(exp.params, comm.params)
+    finally:
+        _REGISTRY.pop(name, None)
+
+
+# ------------------------------------------------------ config / validation
+
+
+def test_schedule_and_backend_validation(tiny_world):
+    with pytest.raises(ValueError, match="schedule mode"):
+        Schedule(rounds=3, mode="warp")
+    with pytest.raises(ValueError, match="unknown backend"):
+        Experiment(tiny_world, "decdiff+vt", backend="pmap")
+    with pytest.raises(ValueError, match="unknown method"):
+        Experiment(tiny_world, "decdiffff")
+    with pytest.raises(ValueError, match="model-gossip only"):
+        Experiment(tiny_world, "isol", comm=CommConfig(codec="fp32"))
+    with pytest.raises(TypeError):
+        Experiment(tiny_world, "decdiff+vt", warp_factor=9)
+
+
+def test_shardmap_backend_capability_gates(tiny_world):
+    """Per-edge transport state and CFA-GE are vmap-only; the shard_map
+    lowering must say so at build time, not fail inside jit."""
+    with pytest.raises(NotImplementedError, match="per-edge"):
+        Experiment(tiny_world, "decdiff+vt", backend="shard_map",
+                   comm=CommConfig(codec="int8", per_edge=True), **TINY)
+    with pytest.raises(NotImplementedError, match="vmap-only"):
+        Experiment(tiny_world, "cfa-ge", backend="shard_map", **TINY)
+
+
+def test_train_config_immutable_and_overridable(tiny_world):
+    exp = _exp(tiny_world, rounds=2, lr=0.05)
+    assert exp.train.lr == 0.05
+    assert TrainConfig().lr == 1e-3  # defaults untouched
+    with pytest.raises(Exception):
+        exp.train.lr = 0.1  # frozen
+
+
+# --------------------------------------------------- schedule equivalence
+
+
+def test_fused_schedule_bitexact_vs_loop(tiny_world):
+    """The scan-fused runner (one jitted program for K rounds + gated
+    evals) must reproduce the per-round loop bit-for-bit: params, eval
+    cadence, metrics, and — through the transport — the byte accounting."""
+    comm = CommConfig(codec="fp32", trigger_threshold=0.0)
+    loop = Experiment(tiny_world, "decdiff+vt", comm=comm,
+                      schedule=Schedule(rounds=5, eval_every=2, mode="loop"),
+                      participation=0.7, **TINY)
+    hl = loop.run()
+    fused = Experiment(tiny_world, "decdiff+vt", comm=comm,
+                       schedule=Schedule(rounds=5, eval_every=2,
+                                         mode="fused"),
+                       participation=0.7, **TINY)
+    hf = fused.run()
+    assert _params_equal(loop.params, fused.params)
+    assert [m.round for m in hl] == [m.round for m in hf] == [0, 2, 4]
+    for a, b in zip(hl, hf):
+        assert np.array_equal(a.acc_per_node, b.acc_per_node)
+        assert np.array_equal(a.loss_per_node, b.loss_per_node)
+        assert a.bytes_on_wire == b.bytes_on_wire
+        assert a.triggered_frac == b.triggered_frac
+    assert loop.comm_bytes_total == fused.comm_bytes_total > 0
+    assert loop.trig_history == fused.trig_history
+
+
+def test_fused_schedule_continues_across_runs(tiny_world):
+    """Repeated run() calls continue from the evolved state in both modes
+    (the legacy contract benchmarks rely on for warmup-then-measure)."""
+    a = _exp(tiny_world, rounds=2, mode="loop")
+    a.run()
+    a.run()
+    b = _exp(tiny_world, rounds=2, mode="fused")
+    b.run()
+    b.run()
+    assert _params_equal(a.params, b.params)
+
+
+# -------------------------------------------------- backend equivalence
+
+
+@pytest.mark.multihost
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices for a real pod axis")
+def test_vmap_shardmap_scanfused_bit_identical(tiny_world):
+    """The ISSUE-4 acceptance pin: the same decdiff+vt spec (with the
+    fp32/threshold-0/fixed comm) lowered to vmap, to shard_map over the
+    4-pod CPU mesh, and scan-fused on top, yields bit-identical params."""
+    comm = CommConfig(codec="fp32", trigger_threshold=0.0)
+    runs = {}
+    for backend in ("vmap", "shard_map"):
+        for mode in ("loop", "fused"):
+            exp = Experiment(tiny_world, "decdiff+vt", comm=comm,
+                             backend=backend,
+                             schedule=Schedule(rounds=3, eval_every=2,
+                                               mode=mode), **TINY)
+            hist = exp.run()
+            runs[(backend, mode)] = (exp, hist)
+    ref, ref_hist = runs[("vmap", "loop")]
+    assert ref.mesh is None  # the vmap lowering is mesh-free
+    for key, (exp, hist) in runs.items():
+        assert _params_equal(ref.params, exp.params), key
+        assert ref.comm_bytes_total == exp.comm_bytes_total, key
+        assert ref.trig_history == exp.trig_history, key
+        for a, b in zip(ref_hist, hist):
+            assert np.array_equal(a.acc_per_node, b.acc_per_node), key
+    smap = runs[("shard_map", "loop")][0]
+    assert int(smap.mesh.shape["pod"]) == 4  # a real 4-pod axis was used
+
+
+@pytest.mark.multihost
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices for a real pod axis")
+def test_shardmap_event_triggered_int8_matches_vmap(tiny_world):
+    """Beyond the acceptance floor: the per-NODE transport with a real
+    codec + trigger also lowers to shard_map bit-identically (state rows
+    shard with their nodes; gates/caches cross pods via all_gather)."""
+    comm = CommConfig(codec="int8", trigger_threshold=1.0, stochastic=True)
+    exps = []
+    for backend in ("vmap", "shard_map"):
+        exp = Experiment(tiny_world, "decdiff+vt", comm=comm,
+                         backend=backend,
+                         schedule=Schedule(rounds=4, eval_every=10,
+                                           mode="fused"),
+                         participation=0.7, **TINY)
+        exp.run()
+        exps.append(exp)
+    assert _params_equal(exps[0].params, exps[1].params)
+    assert exps[0].trig_history == exps[1].trig_history
+    assert np.array_equal(np.asarray(exps[0].comm_state.last_sent),
+                          np.asarray(exps[1].comm_state.last_sent))
+
+
+def test_shardmap_single_pod_matches_vmap(tiny_world):
+    """On a single-device host the shard_map lowering degenerates to one
+    pod and must still match vmap exactly (so the backend is exercised
+    everywhere, not only in the multihost CI lane)."""
+    ref = _exp(tiny_world, rounds=2, mode="loop")
+    ref.run()
+    smap = Experiment(tiny_world, "decdiff+vt", backend="shard_map",
+                      schedule=Schedule(rounds=2, eval_every=2, mode="loop"),
+                      **TINY)
+    smap.run()
+    assert _params_equal(ref.params, smap.params)
+
+
+def test_build_round_signature_matches_transport(tiny_world):
+    """build_round is the public lowering hook: its calling convention is
+    (params, opt, [comm_state,] round_idx, rng)."""
+    exp = _exp(tiny_world, rounds=1)
+    fn = build_round(exp)
+    out = fn(exp.params, exp.opt_state, jnp.int32(0), exp.rng)
+    assert len(out) == 4  # params, opt, rng, loss
+    cexp = Experiment(tiny_world, "decdiff+vt",
+                      comm=CommConfig(codec="fp32"),
+                      schedule=Schedule(rounds=1, eval_every=1), **TINY)
+    cfn = build_round(cexp)
+    out = cfn(cexp.params, cexp.opt_state, cexp.comm_state, jnp.int32(0),
+              cexp.rng)
+    assert len(out) == 7  # + comm_state, sent_edges, trig_frac
+
+
+# --------------------------------------------------------------- the shim
+
+
+def test_dflsimulator_shim_warns_and_matches_experiment(tiny_world):
+    """The legacy front door must (a) raise DeprecationWarning, (b) be
+    bit-for-bit the Experiment it wraps, (c) keep the old attribute
+    surface (METHODS view, comm accounting)."""
+    from repro.fl import DFLSimulator, METHODS, SimulatorConfig
+
+    cfg = SimulatorConfig(method="decdiff+vt", rounds=3, eval_every=2,
+                          comm=CommConfig(codec="fp32"), **TINY)
+    with pytest.deprecated_call(match="DFLSimulator is deprecated"):
+        sim = DFLSimulator(tiny_world.model, tiny_world.topo, tiny_world.xs,
+                           tiny_world.ys, tiny_world.x_test,
+                           tiny_world.y_test, cfg)
+    hist = sim.run()
+    exp = Experiment(tiny_world, "decdiff+vt", comm=CommConfig(codec="fp32"),
+                     schedule=Schedule(rounds=3, eval_every=2, mode="loop"),
+                     **TINY)
+    eh = exp.run()
+    assert _params_equal(sim.params, exp.params)
+    assert sim.comm_bytes_total == exp.comm_bytes_total
+    assert [m.round for m in hist] == [m.round for m in eh]
+    # legacy surface intact
+    assert sim.spec == {"agg": "decdiff", "loss": "vt", "common_init": False}
+    assert METHODS["cfa-ge"]["grad_exchange"] is True
+    assert METHODS["fedavg"]["agg"] == "server"

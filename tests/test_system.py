@@ -1,11 +1,15 @@
 """End-to-end behaviour tests: the decentralized learning system reproduces
-the paper's qualitative claims at miniature scale (fast CPU settings)."""
+the paper's qualitative claims at miniature scale (fast CPU settings).
+
+Runs go through the `repro.engine.Experiment` front door (the scan-fused
+default schedule), which tests/test_engine.py pins as bit-identical to the
+legacy per-round loop."""
 import numpy as np
 import pytest
 
 from repro.data import make_dataset, zipf_allocation
 from repro.data.allocation import split_by_allocation
-from repro.fl import DFLSimulator, SimulatorConfig
+from repro.engine import Experiment, Schedule, World
 from repro.fl.metrics import characteristic_time, comm_bytes_per_round
 from repro.graphs import make_topology
 from repro.models.mlp_cnn import make_mlp, model_for_dataset
@@ -22,13 +26,18 @@ def tiny_world():
     return ds, topo, xs, ys, model
 
 
-def _run(tiny_world, method, rounds=12, **kw):
+def _world(tiny_world) -> World:
     ds, topo, xs, ys, model = tiny_world
-    cfg = SimulatorConfig(method=method, rounds=rounds, steps_per_round=4,
-                          batch_size=32, lr=0.1, momentum=0.9, eval_every=3,
-                          seed=0, **kw)
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-    return sim.run()
+    return World(model=model, topo=topo, xs=xs, ys=ys,
+                 x_test=ds.x_test, y_test=ds.y_test)
+
+
+def _run(tiny_world, method, rounds=12, **kw):
+    exp = Experiment(_world(tiny_world), method,
+                     schedule=Schedule(rounds=rounds, eval_every=3),
+                     steps_per_round=4, batch_size=32, lr=0.1, momentum=0.9,
+                     seed=0, **kw)
+    return exp.run()
 
 
 def test_decdiff_vt_learns(tiny_world):
@@ -40,14 +49,13 @@ def test_decdiff_vt_learns(tiny_world):
 def test_dechetero_disruption_at_first_aggregation(tiny_world):
     """Paper Fig. 1: with heterogeneous inits, plain averaging destroys the
     models right after the first exchange, unlike DecDiff."""
-    ds, topo, xs, ys, model = tiny_world
     results = {}
     for method in ("dechetero", "decdiff+vt"):
-        cfg = SimulatorConfig(method=method, rounds=2, steps_per_round=8,
-                              batch_size=32, lr=0.1, momentum=0.9,
-                              eval_every=1, seed=0)
-        sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-        hist = sim.run()
+        exp = Experiment(_world(tiny_world), method,
+                         schedule=Schedule(rounds=2, eval_every=1),
+                         steps_per_round=8, batch_size=32, lr=0.1,
+                         momentum=0.9, seed=0)
+        hist = exp.run()
         results[method] = [m.acc_mean for m in hist]
     drop_hetero = results["dechetero"][0] - results["dechetero"][1]
     drop_decdiff = results["decdiff+vt"][0] - results["decdiff+vt"][1]
@@ -76,14 +84,13 @@ def test_comm_cost_ordering(tiny_world):
 
 
 def test_fedavg_keeps_models_identical(tiny_world):
-    ds, topo, xs, ys, model = tiny_world
-    cfg = SimulatorConfig(method="fedavg", rounds=2, steps_per_round=2,
-                          batch_size=16, lr=0.05, momentum=0.5, eval_every=1)
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-    sim.run()
+    exp = Experiment(_world(tiny_world), "fedavg",
+                     schedule=Schedule(rounds=2, eval_every=1),
+                     steps_per_round=2, batch_size=16, lr=0.05, momentum=0.5)
+    exp.run()
     import jax
 
-    leaves = jax.tree.leaves(sim.params)
+    leaves = jax.tree.leaves(exp.params)
     for leaf in leaves:
         arr = np.asarray(leaf, np.float32)
         assert np.allclose(arr, arr[:1], atol=1e-6)  # all nodes share params
@@ -152,13 +159,12 @@ def ba_world():
 def _run_comm(ba_world, comm, rounds=15):
     from repro.fl import CommConfig  # noqa: F401 (re-export sanity)
 
-    ds, topo, xs, ys, model = ba_world
-    cfg = SimulatorConfig(method="decdiff+vt", rounds=rounds, steps_per_round=4,
-                          batch_size=32, lr=0.1, momentum=0.9, eval_every=5,
-                          seed=0, comm=comm)
-    sim = DFLSimulator(model, topo, xs, ys, ds.x_test, ds.y_test, cfg)
-    hist = sim.run()
-    return sim, hist
+    exp = Experiment(_world(ba_world), "decdiff+vt", comm=comm,
+                     schedule=Schedule(rounds=rounds, eval_every=5),
+                     steps_per_round=4, batch_size=32, lr=0.1, momentum=0.9,
+                     seed=0)
+    hist = exp.run()
+    return exp, hist
 
 
 def test_int8_event_triggered_matches_dense_at_2x_fewer_bytes(ba_world):
