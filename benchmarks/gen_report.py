@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import json
 import os
+from typing import Optional
 
 from benchmarks import roofline as rl
 from benchmarks.common import load_results
@@ -221,6 +222,79 @@ def write_bench_engine() -> str:
     return path
 
 
+def write_bench_dynamics() -> Optional[str]:
+    """Fold the dynamics suite into BENCH_dynamics.json: accuracy/bytes for
+    dense fp32 and int8+adaptive DecDiff+VT under every catalog
+    GraphProcess vs the static baseline (BA and ER 16-node smoke worlds),
+    plus the acceptance verdict — int8+adaptive under i.i.d. edge dropout
+    (p=0.2) must stay within 3% (relative) of its OWN static-graph final
+    accuracy on the BA world (see benchmarks/bench_dynamics.py)."""
+    rows = load_results("dynamics_suite") or []
+    if not rows:
+        # never clobber a committed BENCH_dynamics.json just because
+        # artifacts/ was cleaned; the full (non --smoke) sweep refreshes it.
+        print("dynamics_suite artifact missing; BENCH_dynamics.json not "
+              "rewritten (run python -m benchmarks.bench_dynamics)")
+        return None
+    statics = {(r["world"], r["comm"]): r for r in rows
+               if r["process"] == "static"}
+    accept_row = next(
+        (r for r in rows
+         if r["world"] == "ba" and r["comm"] == "int8+adaptive"
+         and r["process"].startswith("dropout")), None)
+    passed = False
+    if accept_row is not None:
+        base = statics.get(("ba", "int8+adaptive"))
+        passed = (base is not None and
+                  accept_row["acc_delta_vs_static"]
+                  >= -0.03 * max(base["acc_mean"], 1e-9))
+    payload = {
+        "static_baselines": {f"{w}/{c}": r for (w, c), r in statics.items()},
+        "rows": rows,
+        "acceptance": {
+            "criterion": "int8+adaptive under i.i.d. edge dropout (p=0.2) "
+                         "within 3% (relative) of its static-graph final "
+                         "accuracy (16-node BA smoke world, DecDiff+VT)",
+            "passed": bool(passed),
+            "point": accept_row,
+            "note": "bytes are accounted on live edges only, so every "
+                    "dynamic point also ships FEWER bytes than its static "
+                    "baseline (see bytes_ratio_vs_static); the gate is "
+                    "about accuracy surviving the missing edges.",
+        },
+    }
+    path = os.path.join(ROOT, "BENCH_dynamics.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def dynamics_section() -> str:
+    rows = load_results("dynamics_suite") or []
+    if not rows:
+        return ""
+    out = ["### Dynamics tentpole — time-varying topologies "
+           "(16-node BA + ER smoke, DecDiff+VT)\n",
+           "Every `repro.dynamics.GraphProcess` vs the static baseline, "
+           "dense fp32 and the production int8+adaptive transport.  Bytes "
+           "are exact live-edge accounting (a non-existent link costs "
+           "nothing); `Δacc` is against the SAME transport on the static "
+           "graph.  BENCH_dynamics.json carries the within-3% dropout "
+           "acceptance gate.\n",
+           "| world | process | comm | final acc | Δacc vs static | "
+           "wire MB | bytes vs static | live frac | trig frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['world']} | {r['process']} | {r['comm']} | "
+            f"{r['acc_mean']:.4f} | {r['acc_delta_vs_static']:+.4f} | "
+            f"{r['bytes_on_wire'] / 1e6:.2f} | "
+            f"{r['bytes_ratio_vs_static']:.2f}x | "
+            f"{r['live_edge_frac']:.2f} | {r['triggered_frac']:.2f} |")
+    out.append("")
+    return "\n".join(out)
+
+
 def engine_section() -> str:
     res = load_results("engine_runner") or {}
     if not res:
@@ -369,6 +443,9 @@ the ORDERING among methods.
     eng = engine_section()
     if eng:
         sections.append(eng)
+    dyn = dynamics_section()
+    if dyn:
+        sections.append(dyn)
     sections.append("""
 ## §Dry-run — (10 archs × 4 shapes) × (single-pod 16x16, multi-pod 2x16x16)
 
@@ -404,7 +481,8 @@ the sub-quadratic path per DESIGN.md §4).
     with open(path, "w") as f:
         f.write("\n".join(sections))
     print("wrote", path)
-    for p in (write_bench_comm(), write_bench_engine()):
+    for p in (write_bench_comm(), write_bench_engine(),
+              write_bench_dynamics()):
         if p:
             print("wrote", p)
 

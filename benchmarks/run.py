@@ -39,6 +39,24 @@ def main() -> None:
     record("engine_runner", t0,
            f"scan-fused {eng['fused_speedup_vmap']:.2f}x vs per-round loop")
 
+    # --- dynamics suite (time-varying topologies) -----------------------
+    from benchmarks import bench_dynamics
+
+    t0 = time.time()
+    # the reduced lane runs as a smoke sweep (dynamics_smoke artifact) so a
+    # down-scaled pass never clobbers the committed BENCH_dynamics.json;
+    # --full refreshes the real artifact + BENCH verdict.
+    dyn_rows = bench_dynamics.run(
+        rounds=40 if args.full else 15,
+        nodes=16 if args.full else 12,
+        verbose=False, smoke=not args.full)
+    drop = next(r for r in dyn_rows
+                if r["world"] == "ba" and r["comm"] == "int8+adaptive"
+                and r["process"].startswith("dropout"))
+    record("dynamics_suite", t0,
+           f"int8+adaptive dropout(0.2) dAcc={drop['acc_delta_vs_static']:+.3f} "
+           f"bytes={drop['bytes_ratio_vs_static']:.2f}x vs static")
+
     # --- comm table (paper §VI-A.3) ------------------------------------
     from benchmarks import bench_comm
 

@@ -185,18 +185,43 @@ class GossipTransport:
         return CommState(last_sent=jnp.zeros_like(mat), residual=residual,
                          ever_sent=jnp.zeros((self.n,), jnp.float32))
 
-    def exchange_rows(self, w, state: CommState, keys):
+    def reset_rows(self, state: CommState, reset) -> CommState:
+        """Rows where `reset` > 0 return to the zero bootstrap (reference,
+        residual, ever_sent all cleared) — the defined semantics for a
+        device that churned out and rejoined: it is a FRESH device, so its
+        receivers' cached reconstruction of it is gone and its next
+        transmission carries the full model through delta codecs again.
+        (The per-node state conflates the sender reference with every
+        receiver's cache, so a reset clears both; the per-edge transport
+        resolves them per link — see EdgeGossipTransport.reset_edges.)
+        A zero `reset` row is left bit-identical."""
+        r = reset > 0
+        residual = state.residual
+        if residual is not None:
+            rb = r.reshape(r.shape + (1,) * (residual.ndim - 1))
+            residual = jnp.where(rb, 0.0, residual)
+        return CommState(
+            last_sent=jnp.where(r[:, None], 0.0, state.last_sent),
+            residual=residual,
+            ever_sent=jnp.where(r, 0.0, state.ever_sent))
+
+    def exchange_rows(self, w, state: CommState, keys, send_mask=None):
         """The per-row transport math for an arbitrary block of senders.
 
         `w` [R, D] flat models, `state` the block's CommState rows, `keys`
-        [R, 2] codec keys (ignored unless the codec wants rng).  Returns
-        (new_last [R, D], gate [R], new_state).  `exchange` is this over the
-        full node axis; the engine's shard_map backend calls it per pod
-        block (state rows shard with the nodes) and all_gathers `new_last`.
+        [R, 2] codec keys (ignored unless the codec wants rng).
+        `send_mask` [R] {0,1} optionally vetoes senders regardless of drift
+        (a churned-out device transmits nothing and its state freezes).
+        Returns (new_last [R, D], gate [R], new_state).  `exchange` is this
+        over the full node axis; the engine's shard_map backend calls it per
+        pod block (state rows shard with the nodes) and all_gathers
+        `new_last`.
         """
         codec = self.codec
         rows = int(w.shape[0])
         gate, _ = drift_gate(w, state.last_sent, self.config.trigger_threshold)
+        if send_mask is not None:
+            gate = gate * send_mask
 
         x = w - state.last_sent if codec.is_delta else w
 
@@ -223,7 +248,8 @@ class GossipTransport:
                               ever_sent=jnp.maximum(state.ever_sent, gate))
         return new_last, gate, new_state
 
-    def exchange(self, stacked_params, state: CommState, rng=None):
+    def exchange(self, stacked_params, state: CommState, rng=None,
+                 send_mask=None):
         """One transport round for all nodes at once.
 
         Returns (decoded_models, gate, new_state):
@@ -233,6 +259,7 @@ class GossipTransport:
             zeroes them out anyway),
           gate — [N] {0,1} who transmitted,
           new_state — the threaded CommState.
+        `send_mask` [N] optionally vetoes senders (see exchange_rows).
         """
         w, _ = tree_flatten_stacked(stacked_params)
         if self.wants_rng:
@@ -241,7 +268,8 @@ class GossipTransport:
             keys = jax.random.split(rng, self.n)
         else:
             keys = jnp.zeros((self.n, 2), jnp.uint32)
-        new_last, gate, new_state = self.exchange_rows(w, state, keys)
+        new_last, gate, new_state = self.exchange_rows(w, state, keys,
+                                                       send_mask=send_mask)
         return self._unflatten(new_last), gate, new_state
 
 
@@ -288,6 +316,12 @@ class EdgeGossipTransport:
         self.nbr_valid = jnp.asarray(valid)
         self.rev_slot = jnp.asarray(rev)
         self.num_edges = float(valid.sum())  # directed edge count
+        # the threshold an edge (re)starts from: the scalar for the fixed
+        # policy, the always-send bootstrap for the adaptive one (shared by
+        # init_state and reset_edges so a rejoined device re-bootstraps
+        # exactly like a fresh one)
+        self.thr0 = (config.trigger_threshold if config.policy == "fixed"
+                     else 0.0)
 
     def init_state(self, stacked_params) -> EdgeCommState:
         mat, _ = tree_flatten_stacked(stacked_params)
@@ -300,14 +334,39 @@ class EdgeGossipTransport:
         # fixed policy: the scalar threshold on every edge; adaptive: start
         # at 0 (always-send bootstrap — the first payloads carry the full
         # model through delta codecs) and let the controller raise it.
-        thr0 = (self.config.trigger_threshold
-                if self.config.policy == "fixed" else 0.0)
         return EdgeCommState(
             last_sent=zeros_edges,
             residual=residual,
-            threshold=jnp.full((self.n, self.e), thr0, jnp.float32),
+            threshold=jnp.full((self.n, self.e), self.thr0, jnp.float32),
             drift_ema=jnp.zeros((self.n, self.e), jnp.float32),
             ever_delivered=jnp.zeros((self.n, self.e), jnp.float32),
+        )
+
+    def reset_edges(self, state: EdgeCommState, reset) -> EdgeCommState:
+        """Per-link state on edges where `reset` [N, E] > 0 returns to its
+        init_state values — the defined carry/reset semantics for edges
+        whose endpoint churned out and REJOINED: the rejoined device is a
+        fresh device, so the link's reconstruction reference, error-feedback
+        residual, adaptive threshold/EMA and delivery history all restart
+        (the first payload after a reset carries the full model through
+        delta codecs again, and `on_silence="stale"` masks the link until
+        that redelivery because `ever_delivered` is cleared).  An edge that
+        merely DISAPPEARS (dropout / a Gilbert–Elliott burst / a rewiring
+        phase) is NOT reset: its state freezes bit-identically — the
+        existing failed-link semantics — and transmission resumes against
+        the frozen reference when the edge returns.  Zero-`reset` edges are
+        left bit-identical."""
+        r = reset > 0
+        residual = state.residual
+        if residual is not None:
+            rb = r.reshape(r.shape + (1,) * (residual.ndim - 2))
+            residual = jnp.where(rb, 0.0, residual)
+        return EdgeCommState(
+            last_sent=jnp.where(r[:, :, None], 0.0, state.last_sent),
+            residual=residual,
+            threshold=jnp.where(r, self.thr0, state.threshold),
+            drift_ema=jnp.where(r, 0.0, state.drift_ema),
+            ever_delivered=jnp.where(r, 0.0, state.ever_delivered),
         )
 
     def _swap_layout(self, arr):
@@ -320,15 +379,26 @@ class EdgeGossipTransport:
         return arr[self.nbr_idx, self.rev_slot]
 
     def exchange(self, stacked_params, state: EdgeCommState, link_mask,
-                 rng=None):
+                 rng=None, live=None, reset=None):
         """One per-edge transport round.
 
         Args:
           stacked_params: pytree, leaves [N, ...].
           state: EdgeCommState.
           link_mask: [N, E] receiver-layout exogenous link mask (1 = the
-            (nbr_idx[r, e] -> r) link is up; includes neighbour validity).
+            (nbr_idx[r, e] -> r) link is up; includes neighbour validity
+            and, under a dynamics process, the round's live-edge mask).
           rng: PRNG key when the codec wants one.
+          live: optional [N, E] {0,1} SYMMETRIC live-edge mask from a
+            `repro.dynamics.GraphProcess` (symmetry makes the sender and
+            receiver layouts coincide).  A dead edge does not exist this
+            round: its sender cannot fire on it (no drift gate, no bytes)
+            and its adaptive threshold/EMA freeze — unlike a `link_mask`
+            failure, which is a LOSS the sender pays for.
+          reset: optional [N, E] {0,1} edges whose per-link state returns to
+            bootstrap BEFORE this round's drift is measured (see
+            reset_edges; the engine raises it on every edge incident to a
+            node that rejoined after churn).
 
         Returns (gathered, agg_mask, gate, new_state):
           gathered — pytree with leaves [N, E, ...]: slot e of node r holds
@@ -342,8 +412,13 @@ class EdgeGossipTransport:
         """
         codec, cfg = self.codec, self.config
         w, _ = tree_flatten_stacked(stacked_params)
+        if reset is not None:
+            state = self.reset_edges(state, reset)
+        # a dynamics-dead edge is excluded from validity for the round:
+        # no gate, no bytes, frozen controller state.
+        valid = (self.nbr_valid if live is None else self.nbr_valid * live)
         gate, drift = edge_drift_gate(w, state.last_sent, state.threshold,
-                                      self.nbr_valid)
+                                      valid)
         # link-layer ack: a payload advances its edge's state only if the
         # edge fired AND the link stayed up (sender layout).
         sender_link = self._swap_layout(link_mask)
@@ -387,7 +462,7 @@ class EdgeGossipTransport:
         if cfg.policy == "adaptive":
             new_thr, new_ema = adaptive_threshold_update(
                 state.threshold, state.drift_ema, drift, gate,
-                self.nbr_valid, target=cfg.target_trigger,
+                valid, target=cfg.target_trigger,
                 ema_beta=cfg.drift_ema_beta, rate=cfg.threshold_rate)
         else:
             new_thr, new_ema = state.threshold, state.drift_ema

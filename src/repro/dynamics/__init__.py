@@ -1,0 +1,26 @@
+"""repro.dynamics — time-varying topologies as a first-class subsystem.
+
+    from repro.dynamics import EdgeDropout
+    world = World.synthetic(nodes=16, topology="barabasi_albert", m=2,
+                            dynamics=EdgeDropout(p=0.2))
+    Experiment(world, "decdiff+vt").run()
+
+A :class:`GraphProcess` turns the world's static topology into a per-round
+sequence of edge masks — i.i.d. edge dropout, Gilbert–Elliott bursty links,
+node churn (with explicit per-edge comm-state reset on rejoin), periodic
+rewiring — each a pure on-device state transition that compiles inside the
+engine's fused ``lax.scan`` schedule.  See docs/dynamics.md for the catalog
+and semantics.
+"""
+from repro.dynamics.processes import (  # noqa: F401
+    PROCESSES,
+    BoundProcess,
+    EdgeDropout,
+    GilbertElliott,
+    GraphEvent,
+    GraphProcess,
+    NodeChurn,
+    PeriodicRewiring,
+    StaticGraph,
+    make_process,
+)

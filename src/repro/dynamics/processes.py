@@ -1,0 +1,435 @@
+"""Time-varying communication graphs as pure on-device state transitions.
+
+The paper's premise is that in pervasive edge scenarios "the interactions
+(i.e., the connectivity graph) between devices might not be predetermined" —
+yet a frozen :class:`~repro.graphs.topology.Topology` is exactly that.  A
+:class:`GraphProcess` opens the axis: it turns a static topology into a
+per-round *sequence* of edge masks, with the realized graph evolving as a
+Markov chain whose state is a small pytree of device arrays.  Every process
+is a pure ``(state, round_idx, key) -> (state, GraphEvent)`` transition, so
+the whole sequence compiles inside the engine's fused ``lax.scan`` schedule
+(and the per-round loop, bit-identically — pinned in tests/test_dynamics.py).
+
+A :class:`GraphEvent` is what one round of the process realizes:
+
+  * ``live``      — ``[N, max_deg]`` {0,1} in the padded-neighbour layout:
+    which edges of the static layout exist THIS round.  Always a subset of
+    ``neighbor_mask`` and always symmetric (an undirected edge is up or down
+    for both endpoints — ``live[i, e] == live[j, rev]`` for ``j =
+    nbr_idx[i, e]``);
+  * ``alive``     — ``[N]`` {0,1}: devices present this round.  A dead node
+    runs no local steps, transmits nothing, receives nothing, and its
+    params/optimizer state freeze bit-exactly;
+  * ``rejoined``  — ``[N]`` {0,1}: devices that were dead last round and are
+    back this round.  The transports use this to RESET per-link comm state
+    (references, residuals, adaptive thresholds) on every edge incident to a
+    rejoining device — a rejoined device is a fresh device, its peers'
+    caches of it (and its caches of them) are gone.  See
+    :meth:`repro.comm.EdgeGossipTransport.reset_edges`.
+
+The shipped catalog (`make_process` names):
+
+  ``static``            — the identity: the frozen topology, every round.
+    ``World(dynamics=StaticGraph())`` is bit-identical to ``dynamics=None``.
+  ``edge_dropout``      — i.i.d. per-round edge failures: each undirected
+    edge is independently down with probability ``p`` each round.
+  ``gilbert_elliott``   — bursty links: each undirected edge runs its own
+    2-state (good/bad) Markov chain with P(good->bad) = ``p_gb`` and
+    P(bad->good) = ``p_bg``; the stationary up-probability is
+    ``p_bg / (p_gb + p_bg)`` and the mean burst (outage) length is
+    ``1 / p_bg`` rounds.
+  ``node_churn``        — device churn: each node runs a 2-state Markov
+    chain, leaving w.p. ``p_leave`` and rejoining w.p. ``p_rejoin``; an
+    edge is live iff both endpoints are.  Stationary aliveness is
+    ``p_rejoin / (p_leave + p_rejoin)``.
+  ``periodic_rewiring`` — deterministic re-draws: a family of ``num_graphs``
+    topologies (default Watts–Strogatz) is materialized up front, the
+    engine compiles against their UNION layout, and round r runs graph
+    ``(r // period) % num_graphs`` as a mask over the union.  This is how a
+    rewiring process — which changes the neighbour *sets* — stays a pure
+    on-device transition: the padded layout is static, only the mask moves.
+
+Randomness discipline matches the engine's: per-edge draws happen over the
+FULL ``[N, N]`` upper triangle from the replicated rng stream and are
+symmetrized before slotting, so both endpoints of an edge (and every pod of
+the shard_map backend) see the same coin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.topology import Topology, _from_adjacency, make_topology
+
+
+class GraphEvent(NamedTuple):
+    """One round's realized graph (see module docstring)."""
+
+    live: jnp.ndarray      # [N, max_deg] {0,1} f32, symmetric, subset of valid
+    alive: jnp.ndarray     # [N] {0,1} f32
+    rejoined: jnp.ndarray  # [N] {0,1} f32 (dead last round, alive now)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundProcess:
+    """A process bound to a topology: the static layout the engine compiles
+    against, the initial device state, and the jittable transition.
+    `stationary_live_frac` is the binding's long-run edge-live fraction
+    when known (the process's closed form, or — for rewiring — the realized
+    family mean over the union layout; None otherwise)."""
+
+    process: "GraphProcess"
+    topo: Topology           # the (possibly augmented) static layout
+    state0: Any              # pytree of jnp arrays, scan-carried
+    step: Callable           # (state, round_idx, key) -> (state, GraphEvent)
+    stationary_live_frac: Optional[float] = None
+
+    @property
+    def name(self) -> str:
+        return self.process.name
+
+    @property
+    def needs_rng(self) -> bool:
+        return self.process.needs_rng
+
+
+def _layout(topo: Topology):
+    """The jnp padded-neighbour tensors a step closes over."""
+    idx = jnp.asarray(np.maximum(topo.neighbor_idx, 0).astype(np.int32))
+    valid = jnp.asarray(topo.neighbor_mask.astype(np.float32))
+    return topo.num_nodes, idx, valid
+
+
+def _symmetric_uniform(key, n: int):
+    """[N, N] uniforms with u[i, j] == u[j, i] and zero diagonal: one coin
+    per undirected pair, drawn from ONE key so every observer agrees."""
+    u = jnp.triu(jax.random.uniform(key, (n, n), jnp.float32), 1)
+    return u + u.T
+
+def _edge_slots(mat, idx, valid):
+    """Gather a symmetric [N, N] edge field into the [N, max_deg] layout."""
+    n = valid.shape[0]
+    return mat[jnp.arange(n)[:, None], idx] * valid
+
+
+class GraphProcess:
+    """Protocol: a topology-to-sequence-of-graphs generator.
+
+    Subclasses override :meth:`prepare` (static layout augmentation — only
+    rewiring needs it), :meth:`init_state` and :meth:`make_step`; users call
+    :meth:`bind` once and the engine owns the returned transition.  Set
+    ``needs_rng = False`` when the transition is deterministic — the engine
+    then consumes NO extra rng, which is what makes ``StaticGraph``
+    bit-identical to running without dynamics at all.
+    """
+
+    name: str = "graph-process"
+    needs_rng: bool = True
+
+    def bind(self, topo: Topology) -> BoundProcess:
+        prepared = self.prepare(topo)
+        return BoundProcess(process=self, topo=prepared,
+                            state0=self.init_state(prepared),
+                            step=self.make_step(prepared),
+                            stationary_live_frac=self.stationary_live_frac())
+
+    # ---------------------------------------------------------------- hooks
+    def prepare(self, topo: Topology) -> Topology:
+        """The static layout the engine compiles against (default: the
+        world's own topology; rewiring returns the family's union graph)."""
+        return topo
+
+    def init_state(self, topo: Topology):
+        """Initial device state (a pytree of jnp arrays; () if stateless)."""
+        return ()
+
+    def make_step(self, topo: Topology) -> Callable:
+        raise NotImplementedError
+
+    def stationary_live_frac(self) -> Optional[float]:
+        """Closed-form long-run fraction of EDGES live per round, when one
+        exists (None otherwise).  Feed it to
+        :func:`repro.fl.metrics.comm_bytes_per_round` as ``live_frac`` for
+        static accounting of the edge-borne (decentralized) methods.
+        Careful with `fedavg`: its volume scales with the NODE count, so
+        under churn it wants the stationary aliveness
+        (:meth:`NodeChurn.stationary_alive_frac`), not this edge
+        fraction."""
+        return None
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticGraph(GraphProcess):
+    """The frozen graph, every round — the identity process.
+
+    Exists so "no dynamics" is a point IN the process space: an experiment
+    with ``dynamics=StaticGraph()`` is bit-identical to ``dynamics=None``
+    (no extra rng is consumed; the live mask is the neighbour mask itself).
+    """
+
+    name = "static"
+    needs_rng = False
+
+    def make_step(self, topo: Topology):
+        n, _, valid = _layout(topo)
+        ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+
+        def step(state, round_idx, key):
+            del round_idx, key
+            return state, GraphEvent(live=valid, alive=ones, rejoined=zeros)
+
+        return step
+
+    def stationary_live_frac(self) -> float:
+        return 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDropout(GraphProcess):
+    """i.i.d. edge dropout: every undirected edge is down with probability
+    ``p`` each round, independently across edges and rounds — the
+    memoryless baseline every bursty model degenerates to."""
+
+    p: float = 0.2
+
+    name = "edge_dropout"
+
+    def __post_init__(self):
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"drop probability must be in [0, 1), got {self.p}")
+
+    def make_step(self, topo: Topology):
+        n, idx, valid = _layout(topo)
+        ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+        p = jnp.float32(self.p)
+
+        def step(state, round_idx, key):
+            del round_idx
+            up = (_symmetric_uniform(key, n) >= p).astype(jnp.float32)
+            return state, GraphEvent(live=_edge_slots(up, idx, valid),
+                                     alive=ones, rejoined=zeros)
+
+        return step
+
+    def stationary_live_frac(self) -> float:
+        return 1.0 - self.p
+
+
+@dataclasses.dataclass(frozen=True)
+class GilbertElliott(GraphProcess):
+    """Bursty links: a 2-state (good/bad) Markov chain PER undirected edge.
+
+    Classic Gilbert–Elliott: from good the link fails with probability
+    ``p_gb``; from bad it recovers with probability ``p_bg``.  Small
+    probabilities mean LONG bursts — e.g. (0.1, 0.3) gives mean outages of
+    ~3.3 rounds at a stationary up-rate of 0.75, a much harsher regime than
+    i.i.d. dropout at the same average loss because a down edge stays down
+    while its endpoints keep drifting apart.  All links start good; the
+    chain mixes toward ``p_bg / (p_gb + p_bg)`` at rate ``1 - p_gb - p_bg``.
+    """
+
+    p_gb: float = 0.1   # P(good -> bad): burst onset
+    p_bg: float = 0.3   # P(bad -> good): burst recovery
+
+    name = "gilbert_elliott"
+
+    def __post_init__(self):
+        for nm, v in (("p_gb", self.p_gb), ("p_bg", self.p_bg)):
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{nm} must be in [0, 1], got {v}")
+        if self.p_bg == 0.0:
+            raise ValueError("p_bg = 0 makes every outage permanent; use "
+                             "edge removal in the topology instead")
+
+    def init_state(self, topo: Topology):
+        # all links start in the good state (the model-free choice; the
+        # chain forgets it at rate 1 - p_gb - p_bg)
+        return jnp.asarray(topo.adjacency.astype(np.float32))
+
+    def make_step(self, topo: Topology):
+        n, idx, valid = _layout(topo)
+        adj = jnp.asarray(topo.adjacency.astype(np.float32))
+        ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+        p_gb, p_bg = jnp.float32(self.p_gb), jnp.float32(self.p_bg)
+
+        def step(up, round_idx, key):
+            del round_idx
+            u = _symmetric_uniform(key, n)
+            new_up = jnp.where(up > 0, u >= p_gb, u < p_bg)
+            new_up = new_up.astype(jnp.float32) * adj
+            return new_up, GraphEvent(live=_edge_slots(new_up, idx, valid),
+                                      alive=ones, rejoined=zeros)
+
+        return step
+
+    def stationary_live_frac(self) -> float:
+        return self.p_bg / (self.p_gb + self.p_bg)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeChurn(GraphProcess):
+    """Device churn: each node leaves w.p. ``p_leave`` and rejoins w.p.
+    ``p_rejoin`` per round (independent 2-state chains).  An edge is live
+    iff both endpoints are alive, so a churned node's rows/columns are
+    fully masked; the round it rejoins it is flagged in
+    ``GraphEvent.rejoined`` and the transports reset every edge incident to
+    it (a rejoined device is a FRESH device — its per-link references,
+    residuals and adaptive thresholds restart from the zero bootstrap, and
+    its first transmissions carry the full model through delta codecs
+    again).  Stationary aliveness ``p_rejoin / (p_leave + p_rejoin)``;
+    stationary edge-live fraction is its square (endpoint chains are
+    independent)."""
+
+    p_leave: float = 0.05
+    p_rejoin: float = 0.5
+
+    name = "node_churn"
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_leave < 1.0:
+            raise ValueError(f"p_leave must be in [0, 1), got {self.p_leave}")
+        if not 0.0 < self.p_rejoin <= 1.0:
+            raise ValueError(f"p_rejoin must be in (0, 1] (a device that "
+                             f"never rejoins is a smaller world), got "
+                             f"{self.p_rejoin}")
+
+    def init_state(self, topo: Topology):
+        return jnp.ones((topo.num_nodes,), jnp.float32)  # everyone present
+
+    def make_step(self, topo: Topology):
+        n, idx, valid = _layout(topo)
+        p_leave, p_rejoin = jnp.float32(self.p_leave), jnp.float32(self.p_rejoin)
+
+        def step(alive, round_idx, key):
+            del round_idx
+            u = jax.random.uniform(key, (n,), jnp.float32)
+            new_alive = jnp.where(alive > 0, u >= p_leave,
+                                  u < p_rejoin).astype(jnp.float32)
+            rejoined = (1.0 - alive) * new_alive
+            live = valid * new_alive[:, None] * new_alive[idx]
+            return new_alive, GraphEvent(live=live, alive=new_alive,
+                                         rejoined=rejoined)
+
+        return step
+
+    def stationary_alive_frac(self) -> float:
+        """Long-run fraction of devices present (the `live_frac` a
+        node-count-priced method like fedavg wants)."""
+        return self.p_rejoin / (self.p_leave + self.p_rejoin)
+
+    def stationary_live_frac(self) -> float:
+        a = self.stationary_alive_frac()
+        return a * a  # endpoint chains are independent
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicRewiring(GraphProcess):
+    """Deterministic periodic re-draws from a topology family.
+
+    ``num_graphs`` graphs are materialized at bind time (default: connected
+    Watts–Strogatz re-draws with per-graph seeds), the engine compiles
+    against their UNION layout, and round r masks the union down to graph
+    ``(r // period) % num_graphs``.  The union is what makes rewiring —
+    which changes neighbour SETS, not just edge liveness — expressible as a
+    pure on-device transition: the padded ``[N, max_deg]`` geometry (and
+    with it every compiled program and every ``[N, max_deg, ...]`` comm
+    state tensor) stays fixed, only the precomputed mask row changes.
+
+    The base topology contributes its node count only; the family is drawn
+    fresh (``topo_kwargs`` go to the builder, e.g. ``dict(k=4, p=0.1)``).
+    Deterministic (``needs_rng = False``): the realized schedule is a pure
+    function of the round index, so two backends/schedule modes cannot
+    diverge by construction.
+    """
+
+    period: int = 5
+    num_graphs: int = 4
+    topology: str = "watts_strogatz"
+    seed: int = 0
+    topo_kwargs: Mapping = dataclasses.field(default_factory=dict)
+
+    name = "periodic_rewiring"
+    needs_rng = False
+
+    def __post_init__(self):
+        if self.period < 1:
+            raise ValueError(f"period must be >= 1, got {self.period}")
+        if self.num_graphs < 1:
+            raise ValueError(f"num_graphs must be >= 1, got {self.num_graphs}")
+
+    def _family(self, n: int):
+        kw = dict(self.topo_kwargs)
+        if self.topology == "watts_strogatz":
+            kw.setdefault("k", 4)
+            kw.setdefault("p", 0.1)
+        return [make_topology(self.topology, n=n, seed=self.seed + 9176 * g,
+                              **kw)
+                for g in range(self.num_graphs)]
+
+    def bind(self, topo: Topology) -> BoundProcess:
+        n = topo.num_nodes
+        family = self._family(n)
+        union_adj = np.zeros((n, n), np.int8)
+        for t in family:
+            union_adj = np.maximum(union_adj, t.adjacency)
+        union = _from_adjacency(
+            f"rewire_union({self.topology},K={self.num_graphs},n={n})",
+            union_adj)
+        idx = np.maximum(union.neighbor_idx, 0)
+        rows = np.arange(n)[:, None]
+        masks = np.stack([
+            t.adjacency[rows, idx].astype(np.float32) * union.neighbor_mask
+            for t in family
+        ])  # [K, N, max_deg] — graph g's edges in the union layout
+        masks_j = jnp.asarray(masks)
+        ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+        period, k = self.period, self.num_graphs
+
+        def step(state, round_idx, key):
+            del key
+            g = (round_idx.astype(jnp.int32) // period) % k
+            return state, GraphEvent(live=masks_j[g], alive=ones,
+                                     rejoined=zeros)
+
+        return BoundProcess(
+            process=self, topo=union, state0=(), step=step,
+            stationary_live_frac=float(masks.mean(axis=0).sum()
+                                       / max(union.neighbor_mask.sum(), 1)))
+
+    def make_step(self, topo: Topology):  # pragma: no cover - bind() owns it
+        raise RuntimeError("PeriodicRewiring builds its step in bind()")
+
+    def stationary_live_frac(self) -> Optional[float]:
+        """None: the live fraction is a property of the BINDING (the union
+        layout defines the denominator) — read it off
+        `BoundProcess.stationary_live_frac` after `bind(topo)`."""
+        return None
+
+
+# ---------------------------------------------------------------- registry
+
+PROCESSES: Dict[str, Callable[..., GraphProcess]] = {
+    "static": StaticGraph,
+    "edge_dropout": EdgeDropout,
+    "gilbert_elliott": GilbertElliott,
+    "node_churn": NodeChurn,
+    "periodic_rewiring": PeriodicRewiring,
+}
+
+
+def make_process(name: str, **kwargs) -> GraphProcess:
+    """Build a catalog process by name (kwargs go to its constructor)."""
+    try:
+        cls = PROCESSES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown graph process {name!r}; available: {sorted(PROCESSES)}"
+        ) from None
+    return cls(**kwargs)

@@ -16,11 +16,26 @@ XLA program per round — on either backend:
     per-node ops as the vmap lowering, so the two backends agree
     bit-for-bit (pinned in tests/test_engine.py on the 4-device CPU mesh).
 
-The round function's calling convention depends on the transport:
+The round function's calling convention depends on the transport and on
+whether the experiment carries a `repro.dynamics.GraphProcess` (whose
+state is threaded through the round exactly like the transport's):
 
   no comm:  (params, opt, round_idx, rng) -> (params, opt, rng, loss)
   comm:     (params, opt, comm_state, round_idx, rng)
             -> (params, opt, comm_state, rng, loss, sent_edges, trig_frac)
+  dynamics: (params, opt, dyn_state, round_idx, rng)
+            -> (params, opt, dyn_state, rng, loss, live_edges)
+  both:     (params, opt, comm_state, dyn_state, round_idx, rng)
+            -> (params, opt, comm_state, dyn_state, rng, loss,
+                sent_edges, trig_frac, live_edges)
+
+With dynamics, the round starts by realizing this round's graph (one pure
+state transition -> a GraphEvent): a dead node runs zero local steps and
+its params/opt state freeze bit-exactly, the delivery mask is intersected
+with the live-edge mask, transports only fire (and only account bytes) on
+live edges, and a node that rejoins after churn has its per-link transport
+state reset before the exchange.  `trig_frac` is the fired fraction of
+LIVE directed edges; `live_edges` their count.
 
 Method behaviour enters exclusively through the experiment's
 :class:`~repro.engine.AggregationStrategy` (exchange/aggregate hooks and
@@ -29,9 +44,12 @@ here beyond those capabilities.
 
 Randomness discipline (the bit-exactness mechanism): every rng consumption
 — per-step dropout keys, hetero step budgets, participation masks, codec
-keys — is computed from the REPLICATED rng stream over the full node axis
-and then row-sliced per block, so the shard_map lowering sees exactly the
-values the vmap lowering sees.  Only data movement (the all_gather) differs.
+keys, and the dynamics process's edge coins — is computed from the
+REPLICATED rng stream over the full node axis and then row-sliced per
+block, so the shard_map lowering sees exactly the values the vmap lowering
+sees.  Only data movement (the all_gather) differs.  A process that needs
+no rng (StaticGraph, PeriodicRewiring) consumes none, which is what makes
+`dynamics=StaticGraph()` bit-identical to `dynamics=None`.
 
 Scale note: the shard_map exchange moves the decoded fp32 models because
 this is the *simulator* contract (bytes-on-wire are accounted exactly from
@@ -72,10 +90,40 @@ def _identity_rows(a):
     return a
 
 
+def _freeze_dead(new_params, old_params, alive):
+    """Per-node select: rows with alive == 0 keep their old value bit-exactly
+    (gossip masks already guarantee it for aggregation; this also covers
+    server-style strategies that would overwrite an offline device)."""
+    def sel(nw, od):
+        a = alive.reshape(alive.shape + (1,) * (nw.ndim - 1)) > 0
+        return jnp.where(a, nw, od)
+
+    return jax.tree.map(sel, new_params, old_params)
+
+
+def _make_realize(exp):
+    """The dynamics prelude: consume (at most) one rng split and run the
+    process transition, yielding this round's GraphEvent."""
+    bound = exp.bound_dyn
+    step, needs_rng = bound.step, bound.needs_rng
+
+    def realize(dyn_state, round_idx, rng):
+        if needs_rng:
+            rng, dk = jax.random.split(rng)
+        else:
+            dk = None
+        dyn_state, ev = step(dyn_state, round_idx, dk)
+        return dyn_state, ev, rng
+
+    return realize
+
+
 def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
     """B local SGD(momentum) minibatch steps (Alg. 1 l.4-9) for the block of
     nodes whose data is (x, y, counts); `rows` slices globally-computed
-    [N, ...] randomness to the block (identity on the vmap backend)."""
+    [N, ...] randomness to the block (identity on the vmap backend).
+    `alive` ([N], optional) zeroes the step budget of churned-out devices —
+    an offline node trains nothing and its params/opt state freeze."""
     cfg = exp.train
     n = exp.n
     batcher = exp.batcher
@@ -86,7 +134,7 @@ def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
     v_take = jax.vmap(take_batch, in_axes=(0, 0, 0, None))
     v_step = jax.vmap(exp._train_step, in_axes=(0, 0, 0, 0, None, 0))
 
-    def local_training(params, opt, round_idx, rng):
+    def local_training(params, opt, round_idx, rng, alive=None):
         # Heterogeneous E (Alg. 1): per-node step budget for this round;
         # nodes past their budget keep their params (masked update).
         if cfg.hetero_steps_min > 0:
@@ -95,6 +143,8 @@ def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
                 sub, (n,), cfg.hetero_steps_min, cfg.steps_per_round + 1))
         else:
             budgets = rows(jnp.full((n,), cfg.steps_per_round, jnp.int32))
+        if alive is not None:
+            budgets = budgets * rows(alive).astype(budgets.dtype)
 
         def body(carry, b):
             params, opt, rng = carry
@@ -292,6 +342,101 @@ def _build_vmap_round(exp):
 
         return params, opt, rng, train_loss
 
+    # ---- dynamics variants: same rounds with the realized graph threaded
+    # through (see module docstring).  Written as separate bodies so the
+    # static path stays op-for-op untouched; under `StaticGraph` these are
+    # bit-identical to the plain bodies (pinned in tests/test_dynamics.py).
+    if exp.bound_dyn is not None:
+        realize = _make_realize(exp)
+        nbr_valid = exp.nbr_valid
+
+        def dyn_round_fn(params, opt, dyn_state, round_idx, rng):
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            params, opt, rng, train_loss = local_training(
+                params, opt, round_idx, rng, alive=ev.alive)
+            rng, sub = jax.random.split(rng)
+            mask = delivery_mask(sub) * ev.live
+            old = params
+            if strategy.kind == "server":
+                params = strategy.aggregate(exp, agg_state, params, params,
+                                            mask)
+            elif strategy.kind == "none":
+                pass
+            else:
+                gathered = strategy.exchange(exp, params, nbr_idx)
+                params = gossip_aggregate(params, gathered, mask)
+                if strategy.grad_exchange:
+                    rng, sub = jax.random.split(rng)
+                    params = gradient_exchange(params, mask, round_idx, sub)
+            params = _freeze_dead(params, old, ev.alive)
+            return (params, opt, dyn_state, rng, train_loss,
+                    jnp.sum(ev.live))
+
+        def dyn_comm_round_fn(params, opt, comm_state, dyn_state, round_idx,
+                              rng):
+            """comm_round_fn on the realized graph: dead senders are vetoed
+            (send_mask), a rejoined node's row returns to bootstrap before
+            the exchange, and a transmitting node pays for its LIVE
+            outgoing edges only (a non-existent link carries nothing)."""
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            params, opt, rng, train_loss = local_training(
+                params, opt, round_idx, rng, alive=ev.alive)
+            rng, sub = jax.random.split(rng)
+            link = delivery_mask(sub) * ev.live
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+            else:
+                ck = None
+            comm_state = transport.reset_rows(comm_state, ev.rejoined)
+            decoded, gate, comm_state = transport.exchange(
+                params, comm_state, ck, send_mask=ev.alive)
+            if transport.config.on_silence == "drop":
+                mask = edge_delivery(gate, link, nbr_idx)
+            else:
+                mask = edge_delivery(comm_state.ever_sent, link, nbr_idx)
+            gathered = strategy.exchange(exp, decoded, nbr_idx)
+            new_params = gossip_aggregate(params, gathered, mask)
+            params = _freeze_dead(new_params, params, ev.alive)
+            live_deg = jnp.sum(ev.live, axis=1)
+            live_total = jnp.sum(ev.live)
+            sent_edges = jnp.sum(gate * live_deg)
+            trig = sent_edges / jnp.maximum(live_total, 1.0)
+            return (params, opt, comm_state, dyn_state, rng, train_loss,
+                    sent_edges, trig, live_total)
+
+        def dyn_edge_comm_round_fn(params, opt, comm_state, dyn_state,
+                                   round_idx, rng):
+            """edge_comm_round_fn on the realized graph: the transport gets
+            the live mask (dead edges cannot fire, their controller state
+            freezes) and the reset mask (every edge incident to a rejoined
+            node returns to bootstrap)."""
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            params, opt, rng, train_loss = local_training(
+                params, opt, round_idx, rng, alive=ev.alive)
+            rng, sub = jax.random.split(rng)
+            link = delivery_mask(sub) * ev.live
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+            else:
+                ck = None
+            rj = ev.rejoined
+            reset = jnp.maximum(rj[:, None], rj[nbr_idx]) * nbr_valid
+            gathered, mask, gate, comm_state = transport.exchange(
+                params, comm_state, link, ck, live=ev.live, reset=reset)
+            new_params = gossip_aggregate(params, gathered, mask)
+            params = _freeze_dead(new_params, params, ev.alive)
+            sent_edges = jnp.sum(gate)
+            live_total = jnp.sum(ev.live)
+            trig = sent_edges / jnp.maximum(live_total, 1.0)
+            return (params, opt, comm_state, dyn_state, rng, train_loss,
+                    sent_edges, trig, live_total)
+
+        if transport is None:
+            return dyn_round_fn
+        return (dyn_edge_comm_round_fn
+                if isinstance(transport, EdgeGossipTransport)
+                else dyn_comm_round_fn)
+
     if transport is None:
         return round_fn
     return (edge_comm_round_fn if isinstance(transport, EdgeGossipTransport)
@@ -348,7 +493,7 @@ def _build_shardmap_round(exp):
     def pmean(x):
         return jax.lax.pmean(x, NODE_AXIS)
 
-    def block_prelude(params, opt, round_idx, rng, x_blk, y_blk):
+    def block_prelude(params, opt, round_idx, rng, x_blk, y_blk, alive=None):
         """Local training + participation draw for this pod's rows; returns
         the row slicer so callers share the replicated randomness."""
         rows = block_rows(jax.lax.axis_index(NODE_AXIS) * per_pod)
@@ -357,7 +502,7 @@ def _build_shardmap_round(exp):
             loss_reduce=pmean)
         delivery_mask = _make_delivery_mask(exp, rows=rows)
         params, opt, rng, train_loss = local_training(params, opt, round_idx,
-                                                      rng)
+                                                      rng, alive=alive)
         rng, sub = jax.random.split(rng)
         link = delivery_mask(sub)
         return rows, params, opt, rng, train_loss, link
@@ -406,9 +551,86 @@ def _build_shardmap_round(exp):
         return (params, opt, comm_state, rng, train_loss,
                 sent_edges, sent_edges / total_edges)
 
+    # ---- dynamics variants: the process transition runs REPLICATED inside
+    # the block (its state is a global graph quantity and its coins come
+    # from the replicated rng stream), then every per-node consumer slices
+    # the realized event to its rows — the same discipline as every other
+    # randomness, so the lowering stays bit-identical to vmap.
+    if exp.bound_dyn is not None:
+        realize = _make_realize(exp)
+
+        def dyn_plain_block(params, opt, dyn_state, round_idx, rng, x_blk,
+                            y_blk):
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            rows, params, opt, rng, train_loss, link = block_prelude(
+                params, opt, round_idx, rng, x_blk, y_blk, alive=ev.alive)
+            link = link * rows(ev.live)
+            old = params
+            if strategy.kind == "server":
+                full = jax.tree.map(gather_rows, params)
+                params = aggregate_block(rows, params, full, link)
+            elif strategy.kind == "gossip":
+                full = jax.tree.map(gather_rows, params)
+                gathered = strategy.exchange(exp, full, rows(nbr_idx))
+                params = aggregate_block(rows, params, gathered, link)
+            params = _freeze_dead(params, old, rows(ev.alive))
+            return (params, opt, dyn_state, rng, train_loss,
+                    jnp.sum(ev.live))
+
+        def dyn_comm_block(params, opt, comm_state, dyn_state, round_idx,
+                           rng, x_blk, y_blk):
+            """comm_block on the realized graph: transport state rows are
+            reset/vetoed with their pod's slice of the event; bytes count
+            live outgoing edges only."""
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            rows, params, opt, rng, train_loss, link = block_prelude(
+                params, opt, round_idx, rng, x_blk, y_blk, alive=ev.alive)
+            link = link * rows(ev.live)
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+                keys = rows(jax.random.split(ck, n))
+            else:
+                keys = jnp.zeros((per_pod, 2), jnp.uint32)
+            comm_state = transport.reset_rows(comm_state, rows(ev.rejoined))
+            w_blk, _ = tree_flatten_stacked(params)
+            new_last, gate, comm_state = transport.exchange_rows(
+                w_blk, comm_state, keys, send_mask=rows(ev.alive))
+            decoded = transport._unflatten(gather_rows(new_last))  # [N, ...]
+            gate_full = gather_rows(gate)
+            if transport.config.on_silence == "drop":
+                mask = edge_delivery(gate_full, link, rows(nbr_idx))
+            else:
+                ever_full = gather_rows(comm_state.ever_sent)
+                mask = edge_delivery(ever_full, link, rows(nbr_idx))
+            gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
+            new_params = aggregate_block(rows, params, gathered, mask)
+            params = _freeze_dead(new_params, params, rows(ev.alive))
+            live_deg = jnp.sum(ev.live, axis=1)  # [N], replicated
+            live_total = jnp.sum(ev.live)
+            sent_edges = jax.lax.psum(jnp.sum(gate * rows(live_deg)),
+                                      NODE_AXIS)
+            trig = sent_edges / jnp.maximum(live_total, 1.0)
+            return (params, opt, comm_state, dyn_state, rng, train_loss,
+                    sent_edges, trig, live_total)
+    else:
+        dyn_plain_block = dyn_comm_block = None
+
     shard = P(NODE_AXIS)
     rep = P()
     if transport is None:
+        if exp.bound_dyn is not None:
+            sharded = shard_map(
+                dyn_plain_block, mesh,
+                in_specs=(shard, shard, rep, rep, rep, shard, shard),
+                out_specs=(shard, shard, rep, rep, rep, rep),
+                check_rep=False)
+
+            def dyn_round_fn(params, opt, dyn_state, round_idx, rng):
+                return sharded(params, opt, dyn_state, round_idx, rng,
+                               exp.x_pad, exp.y_pad)
+
+            return dyn_round_fn
+
         sharded = shard_map(
             plain_block, mesh,
             in_specs=(shard, shard, rep, rep, shard, shard),
@@ -419,6 +641,20 @@ def _build_shardmap_round(exp):
             return sharded(params, opt, round_idx, rng, exp.x_pad, exp.y_pad)
 
         return round_fn
+
+    if exp.bound_dyn is not None:
+        sharded = shard_map(
+            dyn_comm_block, mesh,
+            in_specs=(shard, shard, shard, rep, rep, rep, shard, shard),
+            out_specs=(shard, shard, shard, rep, rep, rep, rep, rep, rep),
+            check_rep=False)
+
+        def dyn_comm_round_fn(params, opt, comm_state, dyn_state, round_idx,
+                              rng):
+            return sharded(params, opt, comm_state, dyn_state, round_idx,
+                           rng, exp.x_pad, exp.y_pad)
+
+        return dyn_comm_round_fn
 
     sharded = shard_map(
         comm_block, mesh,

@@ -9,7 +9,9 @@ behind one object:
 
   * `world`    — the physical problem: model, topology, per-node datasets,
     test set (:class:`World`, or `World.synthetic(...)` for the paper's
-    synthetic setups);
+    synthetic setups), optionally with a `repro.dynamics.GraphProcess`
+    making the topology time-varying (edge dropout, bursty links, churn,
+    rewiring — see docs/dynamics.md);
   * `method`   — a name in the strategy registry (`available_methods()`;
     plug in your own with `register_method`);
   * `comm`     — optional `repro.comm.CommConfig`: codecs, event triggers,
@@ -45,6 +47,7 @@ from repro.core.virtual_teacher import make_loss_fn
 from repro.data.allocation import pad_node_datasets
 from repro.data.pipeline import Batcher
 from repro.dist.sharding import NODE_AXIS
+from repro.dynamics import GraphProcess
 from repro.engine import backends
 from repro.engine.strategies import MethodSpec, get_method
 from repro.fl.metrics import RoundMetrics
@@ -100,7 +103,14 @@ class Schedule:
 
 @dataclasses.dataclass
 class World:
-    """The physical problem: who talks to whom, over what data."""
+    """The physical problem: who talks to whom, over what data.
+
+    `dynamics` optionally makes "who talks to whom" time-varying: a
+    :class:`repro.dynamics.GraphProcess` (edge dropout, Gilbert–Elliott
+    bursty links, node churn, periodic rewiring, …) that realizes a
+    per-round live-edge mask over the topology — `topo` then describes the
+    POSSIBLE links and the process decides which exist each round.  See
+    docs/dynamics.md."""
 
     model: SmallModel
     topo: Topology
@@ -108,12 +118,14 @@ class World:
     ys: List[np.ndarray]       # per-node train labels
     x_test: np.ndarray
     y_test: np.ndarray
+    dynamics: Optional[GraphProcess] = None
 
     @classmethod
     def synthetic(cls, dataset: str = "synth-mnist", nodes: int = 16,
                   topology: str = "erdos_renyi", seed: int = 0,
                   scale: float = 0.05, min_per_class: int = 1,
-                  model: Optional[SmallModel] = None, **topo_kwargs):
+                  model: Optional[SmallModel] = None,
+                  dynamics: Optional[GraphProcess] = None, **topo_kwargs):
         """The paper's synthetic worlds in one call: seeded dataset,
         complex-network topology (extra kwargs go to the graph builder,
         e.g. p=0.25 for ER, m=2 for BA), truncated-Zipf non-IID split."""
@@ -136,7 +148,7 @@ class World:
         xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
         model = model or model_for_dataset(dataset, ds.num_classes)
         return cls(model=model, topo=topo, xs=xs, ys=ys,
-                   x_test=ds.x_test, y_test=ds.y_test)
+                   x_test=ds.x_test, y_test=ds.y_test, dynamics=dynamics)
 
 
 def _default_mesh(n: int):
@@ -175,6 +187,18 @@ class Experiment:
             raise ValueError(
                 f"world has {topo.num_nodes} nodes but "
                 f"{len(world.xs)}/{len(world.ys)} data shards")
+        # --- dynamics (repro.dynamics): bind the graph process once; it may
+        # augment the static layout (rewiring compiles against the family's
+        # union graph), so everything below derives from the bound topo.
+        self.dynamics = world.dynamics
+        self.bound_dyn = None
+        if world.dynamics is not None:
+            if not isinstance(world.dynamics, GraphProcess):
+                raise TypeError(
+                    f"World.dynamics must be a repro.dynamics.GraphProcess, "
+                    f"got {type(world.dynamics).__name__}")
+            self.bound_dyn = world.dynamics.bind(topo)
+            topo = self.bound_dyn.topo
         self.model = model
         self.topo = topo
         self.n = topo.num_nodes
@@ -242,10 +266,20 @@ class Experiment:
                 self.transport = GossipTransport(comm, self.params)
             self.comm_state = self.transport.init_state(self.params)
 
+        # --- dynamics state + live-edge accounting ---
+        self.dyn_state = (self.bound_dyn.state0
+                          if self.bound_dyn is not None else None)
+        self._total_directed = float(topo.neighbor_mask.sum())
+        self._live_sum = 0.0
+        self._live_rounds = 0
+        self.live_history: List[float] = []  # per-round live-edge fraction
+
         # --- method state + the lowered round ---
         self.agg_state = self.strategy.init_state(self)
         self._round_raw = backends.build_round(self)
-        donate = (0, 1, 2) if self.transport is not None else (0, 1)
+        # donate the round-carried state: params, opt, then comm/dyn state
+        donate = tuple(range(2 + (self.transport is not None)
+                             + (self.bound_dyn is not None)))
         self._round = jax.jit(self._round_raw, donate_argnums=donate)
         self._fused_cache = {}
 
@@ -273,6 +307,7 @@ class Experiment:
         eval_fn = self._eval_raw
         x_test, y_test, n = self.x_test, self.y_test, self.n
         has_comm = self.transport is not None
+        has_dyn = self.bound_dyn is not None
 
         def gated_eval(flag, params):
             return jax.lax.cond(
@@ -284,12 +319,24 @@ class Experiment:
 
         def body(carry, xs):
             r, flag = xs
-            if has_comm:
+            if has_comm and has_dyn:
+                params, opt, comm_state, dyn_state, rng = carry
+                (params, opt, comm_state, dyn_state, rng, _, sent, trig,
+                 live) = round_fn(params, opt, comm_state, dyn_state, r, rng)
+                carry = (params, opt, comm_state, dyn_state, rng)
+                extras = (sent, trig, live)
+            elif has_comm:
                 params, opt, comm_state, rng = carry
                 (params, opt, comm_state, rng, _, sent, trig) = round_fn(
                     params, opt, comm_state, r, rng)
                 carry = (params, opt, comm_state, rng)
                 extras = (sent, trig)
+            elif has_dyn:
+                params, opt, dyn_state, rng = carry
+                params, opt, dyn_state, rng, _, live = round_fn(
+                    params, opt, dyn_state, r, rng)
+                carry = (params, opt, dyn_state, rng)
+                extras = (live,)
             else:
                 params, opt, rng = carry
                 params, opt, rng, _ = round_fn(params, opt, r, rng)
@@ -317,35 +364,54 @@ class Experiment:
         self._comm_rounds += 1
         self.trig_history.append(float(trig))
 
+    def _account_live(self, live_edges):
+        """Dynamics accounting: the round's realized fraction of the static
+        layout's directed edges (same Python-side discipline as comm)."""
+        frac = float(live_edges) / max(self._total_directed, 1.0)
+        self._live_sum += frac
+        self._live_rounds += 1
+        self.live_history.append(frac)
+
     def _finish_metrics(self, m: RoundMetrics, history, verbose):
         if self.transport is not None:
             m.bytes_on_wire = self.comm_bytes_total
             m.triggered_frac = self._trig_sum / max(self._comm_rounds, 1)
+        if self.bound_dyn is not None:
+            m.live_edge_frac = self._live_sum / max(self._live_rounds, 1)
         history.append(m)
         if verbose:
             self._print_round(m)
 
     def _run_fused(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
         fused = self._fused_program(rounds, eval_every)
-        if self.transport is not None:
-            carry = (self.params, self.opt_state, self.comm_state, self.rng)
-        else:
-            carry = (self.params, self.opt_state, self.rng)
+        has_comm = self.transport is not None
+        has_dyn = self.bound_dyn is not None
+        carry = (self.params, self.opt_state)
+        carry += (self.comm_state,) if has_comm else ()
+        carry += (self.dyn_state,) if has_dyn else ()
+        carry += (self.rng,)
         carry, ys = fused(carry)
-        if self.transport is not None:
-            self.params, self.opt_state, self.comm_state, self.rng = carry
-            acc_r, loss_r, sent_r, trig_r = ys
-            sent_r, trig_r = np.asarray(sent_r), np.asarray(trig_r)
-        else:
-            self.params, self.opt_state, self.rng = carry
-            acc_r, loss_r = ys
+        (self.params, self.opt_state), rest = carry[:2], list(carry[2:])
+        if has_comm:
+            self.comm_state = rest.pop(0)
+        if has_dyn:
+            self.dyn_state = rest.pop(0)
+        (self.rng,) = rest
+        acc_r, loss_r, rest = ys[0], ys[1], list(ys[2:])
+        sent_r = trig_r = live_r = None
+        if has_comm:
+            sent_r, trig_r = np.asarray(rest.pop(0)), np.asarray(rest.pop(0))
+        if has_dyn:
+            live_r = np.asarray(rest.pop(0))
         acc_r, loss_r = np.asarray(acc_r), np.asarray(loss_r)
 
         evals = set(Schedule.eval_rounds(rounds, eval_every))
         history: List[RoundMetrics] = []
         for r in range(rounds):
-            if self.transport is not None:
+            if has_comm:
                 self._account_comm(sent_r[r], trig_r[r])
+            if has_dyn:
+                self._account_live(live_r[r])
             if r in evals:
                 m = RoundMetrics(round=r, acc_per_node=acc_r[r],
                                  loss_per_node=loss_r[r])
@@ -354,14 +420,30 @@ class Experiment:
 
     def _run_loop(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
         evals = set(Schedule.eval_rounds(rounds, eval_every))
+        has_comm = self.transport is not None
+        has_dyn = self.bound_dyn is not None
         history: List[RoundMetrics] = []
         for r in range(rounds):
-            if self.transport is not None:
+            if has_comm and has_dyn:
+                (self.params, self.opt_state, self.comm_state,
+                 self.dyn_state, self.rng, _, sent_edges, trig,
+                 live) = self._round(
+                    self.params, self.opt_state, self.comm_state,
+                    self.dyn_state, jnp.int32(r), self.rng)
+                self._account_comm(sent_edges, trig)
+                self._account_live(live)
+            elif has_comm:
                 (self.params, self.opt_state, self.comm_state, self.rng, _,
                  sent_edges, trig) = self._round(
                     self.params, self.opt_state, self.comm_state,
                     jnp.int32(r), self.rng)
                 self._account_comm(sent_edges, trig)
+            elif has_dyn:
+                (self.params, self.opt_state, self.dyn_state, self.rng, _,
+                 live) = self._round(
+                    self.params, self.opt_state, self.dyn_state,
+                    jnp.int32(r), self.rng)
+                self._account_live(live)
             else:
                 self.params, self.opt_state, self.rng, _ = self._round(
                     self.params, self.opt_state, jnp.int32(r), self.rng
@@ -376,9 +458,11 @@ class Experiment:
         comm = ("" if m.bytes_on_wire is None else
                 f"  wire {m.bytes_on_wire / 1e6:.2f} MB"
                 f"  trig {m.triggered_frac:.2f}")
+        live = ("" if m.live_edge_frac is None else
+                f"  live {m.live_edge_frac:.2f}")
         print(f"[{self.method.name}] round {m.round:4d}  "
               f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  "
-              f"loss {m.loss_mean:.4f}{comm}")
+              f"loss {m.loss_mean:.4f}{comm}{live}")
 
     def run(self, rounds: Optional[int] = None,
             eval_every: Optional[int] = None, verbose: bool = False,

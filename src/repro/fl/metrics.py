@@ -24,11 +24,18 @@ class RoundMetrics:
     loss_per_node: np.ndarray  # [N]
     # Comm-transport accounting (None when the simulator runs without a
     # CommConfig): cumulative bytes actually put on the wire up to and
-    # including this round, and the running mean fraction of DIRECTED EDGES
-    # that carried a payload per round (identical definition for the
-    # per-node and per-edge transports, and proportional to bytes in both).
+    # including this round, and the running mean fraction of LIVE directed
+    # edges that carried a payload per round (identical definition for the
+    # per-node and per-edge transports, and proportional to bytes in both;
+    # without a dynamics process every edge of the static layout is live).
     bytes_on_wire: Optional[float] = None
     triggered_frac: Optional[float] = None
+    # Dynamics accounting (None without a repro.dynamics GraphProcess): the
+    # running mean fraction of the static layout's directed edges that were
+    # LIVE per round.  Bytes are only ever accounted on live edges — a
+    # non-existent link carries nothing and costs nothing (unlike a
+    # `participation` Bernoulli failure, which the sender pays for).
+    live_edge_frac: Optional[float] = None
 
     @property
     def acc_mean(self) -> float:
@@ -59,7 +66,8 @@ def characteristic_time(history: Sequence[RoundMetrics], centralized_acc: float,
     return out
 
 
-def comm_bytes_per_round(method: str, topo: Topology, model_bytes: int) -> int:
+def comm_bytes_per_round(method: str, topo: Topology, model_bytes: int,
+                         live_frac: float = 1.0) -> int:
     """Total bytes moved in the system per always-send communication round.
 
     `model_bytes` is the serialized per-edge payload size; with a comm codec
@@ -68,24 +76,35 @@ def comm_bytes_per_round(method: str, topo: Topology, model_bytes: int) -> int:
     runs are accounted dynamically by the simulator instead
     (RoundMetrics.bytes_on_wire).
 
+    `live_frac` prices a time-varying topology: the EXPECTED fraction of
+    links live per round under a `repro.dynamics.GraphProcess` (its
+    `stationary_live_frac()`, when the closed form exists) — bytes are only
+    accounted on live edges, so the per-round volume scales linearly.
+    Dynamic runs are accounted exactly by the simulator
+    (RoundMetrics.live_edge_frac / bytes_on_wire); this static formula is
+    the expectation.
+
     Model-exchange methods ship one model per directed edge.  CFA-GE
     additionally ships (a) the freshly aggregated model back out and (b) the
     gradients computed by each neighbour — doubling the volume twice over
     plain model exchange (paper: "doubling the information transmitted" per
-    direction).  FedAvg ships one model up + one down per client.  ISOL and
-    Centralized move nothing (Centralized's one-off dataset upload is not a
-    per-round cost)."""
+    direction).  FedAvg ships one model up + one down per client (under
+    churn, `live_frac` is the stationary aliveness of the client
+    population).  ISOL and Centralized move nothing (Centralized's one-off
+    dataset upload is not a per-round cost)."""
+    if not 0.0 <= live_frac <= 1.0:
+        raise ValueError(f"live_frac must be in [0, 1], got {live_frac}")
     directed_edges = 2 * topo.num_edges
     m = method.lower()
     if m in ("isol", "centralized", "none"):
         return 0
     if m in ("fed", "fedavg"):
-        return 2 * topo.num_nodes * model_bytes
+        return int(round(2 * topo.num_nodes * model_bytes * live_frac))
     if m in ("cfa-ge", "cfage"):
         # models out + aggregated model out for gradient eval + gradients back
-        return directed_edges * model_bytes * 2 * 2
+        return int(round(directed_edges * model_bytes * 2 * 2 * live_frac))
     # decavg / dechetero / cfa / decdiff / decdiff+vt: parameters only.
-    return directed_edges * model_bytes
+    return int(round(directed_edges * model_bytes * live_frac))
 
 
 def accuracy_table(histories: Dict[str, List[RoundMetrics]]) -> Dict[str, Dict[str, float]]:

@@ -51,15 +51,16 @@ class Topology:
         return int(self.adjacency.sum()) // 2
 
     def neighbor_weights(self) -> np.ndarray:
-        """[N, max_deg] ω_ij aligned with neighbor_idx (0 at padding)."""
-        n, d = self.neighbor_idx.shape
-        out = np.zeros((n, d), np.float32)
-        for i in range(n):
-            for k in range(d):
-                j = self.neighbor_idx[i, k]
-                if j >= 0:
-                    out[i, k] = self.weights[i, j]
-        return out
+        """[N, max_deg] ω_ij aligned with neighbor_idx (0 at padding).
+
+        One fancy-indexed gather over the padded layout (padding slots are
+        clamped to column 0 and zeroed by the mask) — the O(N·max_deg)
+        Python loop this replaces is pinned equivalent in
+        tests/test_graphs_data.py."""
+        n = self.num_nodes
+        idx = np.maximum(self.neighbor_idx, 0)
+        gathered = self.weights[np.arange(n)[:, None], idx]
+        return (gathered * self.neighbor_mask).astype(np.float32)
 
 
 def _is_connected(adj: np.ndarray) -> bool:

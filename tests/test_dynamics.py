@@ -1,0 +1,651 @@
+"""repro.dynamics contracts: process invariants, engine threading, and the
+comm-state carry/reset semantics on time-varying graphs.
+
+The load-bearing pins:
+
+  1. invariants — every catalog process realizes a live mask that is a
+     symmetric, self-loop-free subset of the static layout; churned nodes
+     have fully-masked rows; Gilbert–Elliott's long-run edge-up frequency
+     matches the closed form p_bg / (p_gb + p_bg);
+  2. identity — `dynamics=StaticGraph()` is bit-identical to
+     `dynamics=None` (the process consumes no rng, the masks are the
+     neighbour masks);
+  3. schedule — loop and scan-fused execution are bit-identical under a
+     dynamic process INCLUDING the byte/trigger/live accounting (the
+     ISSUE-5 satellite);
+  4. backends — vmap and shard_map are bit-identical under every shipped
+     process (plain and through the per-node transport), degenerate 1-pod
+     everywhere + the real 4-pod mesh in the multihost lane;
+  5. churn semantics — a dead device trains nothing and its params freeze;
+     bytes are accounted on live edges only; a rejoining device's transport
+     state (per-node row / every incident per-edge link) returns to the
+     zero bootstrap while all other state stays bit-identical.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, EdgeGossipTransport, GossipTransport
+from repro.dynamics import (
+    BoundProcess,
+    EdgeDropout,
+    GilbertElliott,
+    GraphEvent,
+    GraphProcess,
+    NodeChurn,
+    PeriodicRewiring,
+    StaticGraph,
+    make_process,
+)
+from repro.dynamics.processes import _layout
+from repro.engine import Experiment, Schedule, World, build_round
+from repro.graphs import make_topology
+
+CATALOG = [
+    StaticGraph(),
+    EdgeDropout(p=0.3),
+    GilbertElliott(p_gb=0.2, p_bg=0.4),
+    NodeChurn(p_leave=0.3, p_rejoin=0.6),
+    PeriodicRewiring(period=2, num_graphs=3, topo_kwargs={"k": 2, "p": 0.2}),
+]
+
+TINY = dict(steps_per_round=2, batch_size=16, lr=0.1, momentum=0.9, seed=3)
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    from repro.models.mlp_cnn import make_mlp
+
+    return World.synthetic(dataset="synth-mnist", nodes=4, topology="ring",
+                           seed=3, scale=0.02,
+                           model=make_mlp(num_classes=10, hidden=(32,)))
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _with_dyn(world, dyn):
+    return dataclasses.replace(world, dynamics=dyn)
+
+
+def _materialize(bound: BoundProcess, ev: GraphEvent) -> np.ndarray:
+    """Scatter the [N, max_deg] live mask back to a dense [N, N] matrix."""
+    topo = bound.topo
+    n = topo.num_nodes
+    live = np.asarray(ev.live)
+    mat = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for e in range(topo.max_degree):
+            if topo.neighbor_mask[i, e]:
+                mat[i, topo.neighbor_idx[i, e]] = live[i, e]
+    return mat
+
+
+def _check_event(bound: BoundProcess, ev: GraphEvent):
+    """The GraphEvent invariants every process must satisfy."""
+    topo = bound.topo
+    live = np.asarray(ev.live)
+    alive = np.asarray(ev.alive)
+    rejoined = np.asarray(ev.rejoined)
+    valid = topo.neighbor_mask.astype(np.float32)
+    assert live.shape == valid.shape
+    assert set(np.unique(live)) <= {0.0, 1.0}
+    assert (live <= valid).all()                      # subset of the layout
+    mat = _materialize(bound, ev)
+    assert np.array_equal(mat, mat.T)                 # symmetric
+    assert mat.diagonal().sum() == 0                  # no self-loops
+    assert set(np.unique(alive)) <= {0.0, 1.0}
+    assert (rejoined <= alive).all()                  # rejoined => alive now
+    # a dead node's row (and, by symmetry, column) is fully masked
+    assert (live[alive == 0] == 0).all()
+
+
+def _drive(process, topo, rounds=6, seed=0):
+    """Bind and run a process standalone, yielding its events."""
+    bound = process.bind(topo)
+    state = bound.state0
+    events = []
+    for r in range(rounds):
+        key = (jax.random.fold_in(jax.random.PRNGKey(seed), r)
+               if bound.needs_rng else None)
+        state, ev = bound.step(state, jnp.int32(r), key)
+        events.append(ev)
+    return bound, events
+
+
+# ------------------------------------------------------- process invariants
+
+
+@pytest.mark.parametrize("process", CATALOG, ids=lambda p: p.name)
+def test_catalog_invariants(process):
+    topo = make_topology("barabasi_albert", n=12, m=2, seed=1)
+    bound, events = _drive(process, topo, rounds=6)
+    for ev in events:
+        _check_event(bound, ev)
+
+
+def test_static_is_identity_mask():
+    topo = make_topology("barabasi_albert", n=10, m=2, seed=0)
+    bound, events = _drive(StaticGraph(), topo, rounds=3)
+    for ev in events:
+        assert np.array_equal(np.asarray(ev.live),
+                              topo.neighbor_mask.astype(np.float32))
+        assert np.asarray(ev.alive).all() and not np.asarray(ev.rejoined).any()
+
+
+def test_dropout_rate_and_determinism():
+    topo = make_topology("complete", n=12)
+    process = EdgeDropout(p=0.4)
+    bound, events = _drive(process, topo, rounds=40, seed=7)
+    fracs = [np.asarray(ev.live).sum() / topo.neighbor_mask.sum()
+             for ev in events]
+    assert abs(np.mean(fracs) - process.stationary_live_frac()) < 0.05
+    # same keys -> identical realization (pure function of (state, r, key))
+    _, again = _drive(process, topo, rounds=40, seed=7)
+    for a, b in zip(events, again):
+        assert np.array_equal(np.asarray(a.live), np.asarray(b.live))
+
+
+def test_gilbert_elliott_stationary_matches_closed_form():
+    """The ISSUE-5 satellite pin: long-run edge-up frequency within
+    tolerance of p_bg / (p_gb + p_bg) (chain mixes at 1 - p_gb - p_bg)."""
+    topo = make_topology("barabasi_albert", n=10, m=2, seed=2)
+    process = GilbertElliott(p_gb=0.2, p_bg=0.6)
+    bound = process.bind(topo)
+    keys = jax.random.split(jax.random.PRNGKey(11), 2000)
+
+    def body(state, xs):
+        r, key = xs
+        state, ev = bound.step(state, r, key)
+        return state, jnp.sum(ev.live)
+
+    _, lives = jax.lax.scan(
+        body, bound.state0, (jnp.arange(2000, dtype=jnp.int32), keys))
+    burn = 200
+    freq = float(np.asarray(lives)[burn:].mean()) / float(
+        topo.neighbor_mask.sum())
+    assert abs(freq - process.stationary_live_frac()) < 0.02
+
+
+def test_gilbert_elliott_bursts_freeze_edges():
+    """State is per-edge Markov, not i.i.d.: with p_bg < 1 a downed edge
+    can stay down across consecutive rounds (the burst), which i.i.d.
+    dropout at the same stationary rate almost never does for long."""
+    topo = make_topology("complete", n=8)
+    process = GilbertElliott(p_gb=0.3, p_bg=0.2)  # long bursts (mean 5)
+    _, events = _drive(process, topo, rounds=30, seed=3)
+    lives = np.stack([_materialize(process.bind(topo), ev) for ev in events])
+    down_runs = 0
+    for i in range(8):
+        for j in range(i + 1, 8):
+            seq = lives[:, i, j]
+            down_runs = max(down_runs, max(
+                (len(s) for s in "".join(
+                    "d" if v == 0 else "u" for v in seq).split("u") if s),
+                default=0))
+    assert down_runs >= 3  # at least one multi-round outage realized
+
+
+def test_churn_rejoined_flags_and_full_masking():
+    topo = make_topology("complete", n=10)
+    process = NodeChurn(p_leave=0.4, p_rejoin=0.5)
+    bound, events = _drive(process, topo, rounds=30, seed=5)
+    prev_alive = np.ones(10)
+    saw_rejoin = False
+    for ev in events:
+        _check_event(bound, ev)
+        alive = np.asarray(ev.alive)
+        rejoined = np.asarray(ev.rejoined)
+        assert np.array_equal(rejoined, (1 - prev_alive) * alive)
+        saw_rejoin |= rejoined.any()
+        # live[i, e] == alive_i * alive_j exactly (complete graph: all slots)
+        mat = _materialize(bound, ev)
+        expect = np.outer(alive, alive)
+        np.fill_diagonal(expect, 0)
+        assert np.array_equal(mat, expect)
+        prev_alive = alive
+    assert saw_rejoin  # the regime actually exercised a rejoin
+
+
+def test_rewiring_union_layout_and_phase_schedule():
+    topo = make_topology("ring", n=12)
+    process = PeriodicRewiring(period=3, num_graphs=3, seed=4,
+                               topo_kwargs={"k": 4, "p": 0.2})
+    bound, events = _drive(process, topo, rounds=9)
+    family = process._family(12)
+    # the bound layout is the union: every family edge exists in it
+    for t in family:
+        assert (t.adjacency <= bound.topo.adjacency).all()
+    # round r realizes exactly graph (r // period) % K
+    for r, ev in enumerate(events):
+        g = (r // 3) % 3
+        assert np.array_equal(_materialize(bound, ev),
+                              family[g].adjacency.astype(np.float32)), r
+    # the live fraction is a property of the binding, not the process
+    assert process.stationary_live_frac() is None
+    assert 0.0 < bound.stationary_live_frac <= 1.0
+
+
+def test_registry_and_validation():
+    assert make_process("edge_dropout", p=0.1).p == 0.1
+    with pytest.raises(ValueError) as ei:
+        make_process("wormhole")
+    assert "edge_dropout" in str(ei.value)  # roster in the message
+    with pytest.raises(ValueError):
+        EdgeDropout(p=1.5)
+    with pytest.raises(ValueError):
+        GilbertElliott(p_bg=0.0)
+    with pytest.raises(ValueError):
+        NodeChurn(p_rejoin=0.0)
+    with pytest.raises(ValueError):
+        PeriodicRewiring(period=0)
+
+
+def test_world_rejects_non_process(tiny_world):
+    with pytest.raises(TypeError, match="GraphProcess"):
+        Experiment(_with_dyn(tiny_world, "edge_dropout"), "decdiff+vt",
+                   **TINY)
+
+
+def test_comm_bytes_per_round_scales_with_live_frac():
+    from repro.fl.metrics import comm_bytes_per_round
+
+    topo = make_topology("erdos_renyi", n=20, p=0.3, seed=0)
+    full = comm_bytes_per_round("decdiff+vt", topo, 1000)
+    half = comm_bytes_per_round("decdiff+vt", topo, 1000,
+                                live_frac=EdgeDropout(0.5)
+                                .stationary_live_frac())
+    assert half * 2 == full
+    with pytest.raises(ValueError):
+        comm_bytes_per_round("decdiff+vt", topo, 1000, live_frac=1.5)
+    # fedavg is node-count-priced: under churn it wants ALIVENESS, which
+    # NodeChurn exposes separately from the (squared) edge fraction
+    churn = NodeChurn(p_leave=0.1, p_rejoin=0.9)
+    assert churn.stationary_live_frac() == pytest.approx(
+        churn.stationary_alive_frac() ** 2)
+
+
+def _neighbor_weights_loop(topo):
+    """The original O(N·max_deg) Python-loop rendering of
+    Topology.neighbor_weights (the oracle for the vectorized version)."""
+    n, d = topo.neighbor_idx.shape
+    out = np.zeros((n, d), np.float32)
+    for i in range(n):
+        for k in range(d):
+            j = topo.neighbor_idx[i, k]
+            if j >= 0:
+                out[i, k] = topo.weights[i, j]
+    return out
+
+
+def test_neighbor_weights_vectorized_equals_loop():
+    """Satellite pin: the fancy-indexed neighbor_weights() is bit-equal to
+    the double loop it replaced — including non-unit weights and padding.
+    Lives here (not test_graphs_data.py) so it runs in the tier-1 lane
+    even without hypothesis installed; the fuzzed version rides the
+    hypothesis module."""
+    for topo in (
+        make_topology("erdos_renyi", n=23, p=0.3, seed=5,
+                      weight_fn=lambda i, j, rng: rng.uniform(0.5, 2.0)),
+        make_topology("barabasi_albert", n=17, m=3, seed=2),
+        make_topology("star", n=9),
+    ):
+        got = topo.neighbor_weights()
+        ref = _neighbor_weights_loop(topo)
+        assert got.dtype == np.float32 and got.shape == ref.shape
+        assert np.array_equal(got, ref), topo.name
+
+
+# ------------------------------------------------- engine: identity + modes
+
+
+def test_static_process_bit_identical_to_no_dynamics(tiny_world):
+    """StaticGraph consumes no rng and masks nothing: the dynamics plumbing
+    under it must reproduce the dynamics-free engine bit-for-bit, with the
+    live accounting reporting a fully-live graph."""
+    comm = CommConfig(codec="int8", trigger_threshold=0.5, stochastic=True)
+    base = Experiment(tiny_world, "decdiff+vt", comm=comm,
+                      schedule=Schedule(rounds=4, eval_every=2, mode="fused"),
+                      participation=0.7, **TINY)
+    hb = base.run()
+    stat = Experiment(_with_dyn(tiny_world, StaticGraph()), "decdiff+vt",
+                      comm=comm,
+                      schedule=Schedule(rounds=4, eval_every=2, mode="fused"),
+                      participation=0.7, **TINY)
+    hs = stat.run()
+    assert _params_equal(base.params, stat.params)
+    assert base.comm_bytes_total == stat.comm_bytes_total
+    assert base.trig_history == stat.trig_history
+    assert stat.live_history == [1.0] * 4
+    for a, b in zip(hb, hs):
+        assert np.array_equal(a.acc_per_node, b.acc_per_node)
+        assert b.live_edge_frac == 1.0
+
+
+def test_loop_fused_bit_identical_with_dynamics(tiny_world):
+    """The ISSUE-5 satellite: Schedule(mode="fused") with dynamics keeps
+    byte/trigger/live accounting bit-identical to loop mode."""
+    comm = CommConfig(codec="int8", trigger_threshold=0.5)
+    dyn = GilbertElliott(p_gb=0.3, p_bg=0.4)
+    runs = {}
+    for mode in ("loop", "fused"):
+        exp = Experiment(_with_dyn(tiny_world, dyn), "decdiff+vt", comm=comm,
+                         schedule=Schedule(rounds=5, eval_every=2, mode=mode),
+                         participation=0.7, **TINY)
+        runs[mode] = (exp, exp.run())
+    loop, hl = runs["loop"]
+    fused, hf = runs["fused"]
+    assert _params_equal(loop.params, fused.params)
+    assert loop.comm_bytes_total == fused.comm_bytes_total > 0
+    assert loop.trig_history == fused.trig_history
+    assert loop.live_history == fused.live_history
+    assert 0.0 < min(loop.live_history)  # the process actually realized
+    assert min(loop.live_history) < 1.0  # ... a non-trivial mask sequence
+    for a, b in zip(hl, hf):
+        assert np.array_equal(a.acc_per_node, b.acc_per_node)
+        assert a.bytes_on_wire == b.bytes_on_wire
+        assert a.live_edge_frac == b.live_edge_frac
+
+
+def test_dynamic_round_signatures(tiny_world):
+    """build_round's calling convention with dynamics (module contract):
+    (params, opt, [comm_state,] dyn_state, round_idx, rng)."""
+    exp = Experiment(_with_dyn(tiny_world, EdgeDropout(0.2)), "decdiff+vt",
+                     schedule=Schedule(rounds=1, eval_every=1), **TINY)
+    fn = build_round(exp)
+    out = fn(exp.params, exp.opt_state, exp.dyn_state, jnp.int32(0), exp.rng)
+    assert len(out) == 6  # params, opt, dyn_state, rng, loss, live_edges
+    cexp = Experiment(_with_dyn(tiny_world, EdgeDropout(0.2)), "decdiff+vt",
+                      comm=CommConfig(codec="fp32"),
+                      schedule=Schedule(rounds=1, eval_every=1), **TINY)
+    cfn = build_round(cexp)
+    out = cfn(cexp.params, cexp.opt_state, cexp.comm_state, cexp.dyn_state,
+              jnp.int32(0), cexp.rng)
+    assert len(out) == 9  # + comm_state, sent_edges, trig_frac, live_edges
+
+
+# ------------------------------------------------- engine: backend equality
+
+
+def test_shardmap_single_pod_matches_vmap_with_dynamics(tiny_world):
+    dyn = NodeChurn(p_leave=0.3, p_rejoin=0.6)
+    ref = Experiment(_with_dyn(tiny_world, dyn), "decdiff+vt",
+                     schedule=Schedule(rounds=3, eval_every=2, mode="loop"),
+                     **TINY)
+    ref.run()
+    smap = Experiment(_with_dyn(tiny_world, dyn), "decdiff+vt",
+                      backend="shard_map",
+                      schedule=Schedule(rounds=3, eval_every=2, mode="loop"),
+                      **TINY)
+    smap.run()
+    assert _params_equal(ref.params, smap.params)
+    assert ref.live_history == smap.live_history
+
+
+@pytest.mark.multihost
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices for a real pod axis")
+@pytest.mark.parametrize("process", CATALOG, ids=lambda p: p.name)
+def test_vmap_shardmap_bit_identical_per_process(process):
+    """The ISSUE-5 acceptance pin: vmap and shard_map are bit-identical
+    under EVERY shipped GraphProcess on the forced 4-device CPU mesh —
+    plain and through the per-node int8 transport, scan-fused."""
+    from repro.models.mlp_cnn import make_mlp
+
+    world = World.synthetic(dataset="synth-mnist", nodes=8,
+                            topology="erdos_renyi", p=0.5, seed=3,
+                            scale=0.02,
+                            model=make_mlp(num_classes=10, hidden=(32,)),
+                            dynamics=process)
+    comm = CommConfig(codec="int8", trigger_threshold=0.5)
+    exps = []
+    for backend in ("vmap", "shard_map"):
+        plain = Experiment(world, "decdiff+vt", backend=backend,
+                           schedule=Schedule(rounds=3, eval_every=2,
+                                             mode="loop"), **TINY)
+        plain.run()
+        fused = Experiment(world, "decdiff+vt", backend=backend, comm=comm,
+                           schedule=Schedule(rounds=3, eval_every=2,
+                                             mode="fused"),
+                           participation=0.7, **TINY)
+        fused.run()
+        exps.append((plain, fused))
+    (pv, cv), (ps, cs) = exps
+    assert int(ps.mesh.shape["pod"]) == 4
+    assert _params_equal(pv.params, ps.params)
+    assert pv.live_history == ps.live_history
+    assert _params_equal(cv.params, cs.params)
+    assert cv.comm_bytes_total == cs.comm_bytes_total
+    assert cv.trig_history == cs.trig_history
+    assert cv.live_history == cs.live_history
+
+
+# --------------------------------------------- churn / comm-state semantics
+
+
+@dataclasses.dataclass(frozen=True)
+class ScriptedChurn(GraphProcess):
+    """Test-only: alive follows a fixed [T, N] table (also proves the
+    protocol is open — third-party processes run the whole engine)."""
+
+    table: tuple  # T rows of N {0,1}
+
+    name = "scripted_churn"
+    needs_rng = False
+
+    def init_state(self, topo):
+        return jnp.ones((topo.num_nodes,), jnp.float32)
+
+    def make_step(self, topo):
+        n, idx, valid = _layout(topo)
+        table = jnp.asarray(self.table, jnp.float32)
+
+        def step(prev_alive, round_idx, key):
+            del key
+            alive = table[round_idx % table.shape[0]]
+            rejoined = (1.0 - prev_alive) * alive
+            live = valid * alive[:, None] * alive[idx]
+            return alive, GraphEvent(live=live, alive=alive,
+                                     rejoined=rejoined)
+
+        return step
+
+
+def _scripted_world(tiny_world):
+    # 4-node ring; node 0: alive, dead, alive (rejoins at round 2)
+    table = ((1, 1, 1, 1), (0, 1, 1, 1), (1, 1, 1, 1))
+    return _with_dyn(tiny_world, ScriptedChurn(table=table))
+
+
+def test_dead_node_freezes_and_pays_nothing(tiny_world):
+    """Round 1: node 0 is offline — zero local steps, zero bytes, params
+    and optimizer state bit-frozen; everyone else keeps training."""
+    exp = Experiment(_scripted_world(tiny_world), "decdiff+vt",
+                     comm=CommConfig(codec="fp32"),
+                     schedule=Schedule(rounds=1, eval_every=1), **TINY)
+    fn = build_round(exp)
+    p0, o0, cs, ds, rng = (exp.params, exp.opt_state, exp.comm_state,
+                           exp.dyn_state, exp.rng)
+    p1, o1, cs, ds, rng, _, sent1, _, live1 = fn(p0, o0, cs, ds,
+                                                 jnp.int32(0), rng)
+    p2, o2, cs, ds, rng, _, sent2, _, live2 = fn(p1, o1, cs, ds,
+                                                 jnp.int32(1), rng)
+    row = lambda t, i: [np.asarray(leaf)[i] for leaf in jax.tree.leaves(t)]
+    # round 0 (all alive): node 0 moved; round 1 (dead): node 0 frozen
+    assert not all(np.array_equal(a, b)
+                   for a, b in zip(row(p0, 0), row(p1, 0)))
+    assert all(np.array_equal(a, b) for a, b in zip(row(p1, 0), row(p2, 0)))
+    assert all(np.array_equal(a, b) for a, b in zip(row(o1, 0), row(o2, 0)))
+    # the others kept moving
+    assert not all(np.array_equal(a, b)
+                   for a, b in zip(row(p1, 1), row(p2, 1)))
+    # ring(4): 8 directed edges all-alive; node 0 dead kills (0,1) and (0,3)
+    assert float(live1) == 8.0 and float(sent1) == 8.0
+    assert float(live2) == 4.0 and float(sent2) == 4.0
+
+
+def test_rejoin_resets_per_node_row_in_engine(tiny_world):
+    """With a large fixed threshold, only freshly-reset references can fire
+    after the bootstrap round — so the round-2 fired edges are EXACTLY the
+    rejoined node's live out-edges, proving the engine applied reset_rows."""
+    # threshold 2.6 sits between the per-round drift (~0.94 on this seeded
+    # world) and the full model norm (~3.2): only a zero (bootstrap or
+    # freshly-reset) reference can fire after round 0.
+    exp = Experiment(_scripted_world(tiny_world), "decdiff+vt",
+                     comm=CommConfig(codec="fp32", trigger_threshold=2.6),
+                     schedule=Schedule(rounds=3, eval_every=3, mode="loop"),
+                     **TINY)
+    exp.run()
+    # round 0: zero references, everyone fires (8 edge-payloads);
+    # round 1: drift << threshold, silent (node 0 dead anyway);
+    # round 2: node 0 rejoined with a reset row -> drift(0) = ||w_0|| fires
+    # on its 2 live out-edges; everyone else stays silent.
+    assert exp.trig_history[0] == 1.0
+    assert exp.trig_history[1] == 0.0
+    assert float(exp.live_history[2]) == 1.0
+    assert abs(exp.trig_history[2] - 2.0 / 8.0) < 1e-6, exp.trig_history
+    assert float(np.asarray(exp.comm_state.ever_sent)[0]) == 1.0
+
+
+def test_rejoin_resets_incident_edges_in_engine(tiny_world):
+    """Per-edge transport, same construction: after the rejoin round the
+    fired edges are exactly the 4 directed live edges INCIDENT to node 0
+    (both directions reset — its neighbours' references toward it are gone
+    too), not just its own out-edges."""
+    exp = Experiment(_scripted_world(tiny_world), "decdiff+vt",
+                     comm=CommConfig(codec="fp32", trigger_threshold=2.6,
+                                     per_edge=True),
+                     schedule=Schedule(rounds=3, eval_every=3, mode="loop"),
+                     **TINY)
+    exp.run()
+    assert exp.trig_history[0] == 1.0
+    assert exp.trig_history[1] == 0.0
+    assert abs(exp.trig_history[2] - 4.0 / 8.0) < 1e-6, exp.trig_history
+    st = exp.comm_state
+    # the reset links re-delivered and are live caches again
+    ever = np.asarray(st.ever_delivered)
+    assert ever[0].sum() == 2.0  # node 0's two ring edges
+
+
+def test_reset_rows_touches_only_reset_rows():
+    params = {"w": jnp.asarray(np.random.default_rng(0)
+                               .standard_normal((4, 16)), jnp.float32)}
+    tr = GossipTransport(CommConfig(codec="int8", stochastic=False), params)
+    st = tr.init_state(params)
+    _, _, st = tr.exchange(params, st)  # advance everything
+    reset = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    st2 = tr.reset_rows(st, reset)
+    assert (np.asarray(st2.last_sent)[0] == 0).all()
+    assert (np.asarray(st2.residual)[0] == 0).all()
+    assert np.asarray(st2.ever_sent)[0] == 0
+    for f, f2 in zip(st, st2):  # every other row bit-identical
+        if f is not None:
+            assert np.array_equal(np.asarray(f)[1:], np.asarray(f2)[1:])
+
+
+def test_reset_edges_touches_only_reset_edges():
+    from repro.graphs import make_topology as mt
+
+    topo = mt("ring", n=4)
+    params = {"w": jnp.asarray(np.random.default_rng(0)
+                               .standard_normal((4, 16)), jnp.float32)}
+    cfg = CommConfig(codec="int8", policy="adaptive", target_trigger=0.9,
+                     stochastic=False)
+    tr = EdgeGossipTransport(cfg, params, topo.neighbor_idx,
+                             topo.neighbor_mask)
+    st = tr.init_state(params)
+    link = jnp.asarray(topo.neighbor_mask.astype(np.float32))
+    for _ in range(3):  # advance thresholds/EMA/references
+        _, _, _, st = tr.exchange(params, st, link)
+    reset = np.zeros((4, 2), np.float32)
+    reset[0, :] = 1.0  # node 0's outgoing links
+    st2 = tr.reset_edges(st, jnp.asarray(reset))
+    assert (np.asarray(st2.last_sent)[0] == 0).all()
+    assert (np.asarray(st2.threshold)[0] == tr.thr0).all()
+    assert (np.asarray(st2.drift_ema)[0] == 0).all()
+    assert (np.asarray(st2.ever_delivered)[0] == 0).all()
+    for f, f2 in zip(st, st2):  # untouched links bit-identical
+        if f is not None:
+            assert np.array_equal(np.asarray(f)[1:], np.asarray(f2)[1:])
+    # frozen-when-down is the OTHER semantics: a live=0 edge advances nothing
+    live = jnp.asarray(1.0 - reset) * link
+    _, _, gate, st3 = tr.exchange(params, st2, link * live, live=live)
+    assert (np.asarray(gate)[0] == 0).all()
+    assert np.array_equal(np.asarray(st3.last_sent)[0],
+                          np.asarray(st2.last_sent)[0])
+    assert np.array_equal(np.asarray(st3.threshold)[0],
+                          np.asarray(st2.threshold)[0])
+
+
+# ------------------------------------------------------------ property lane
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYP = True
+except Exception:  # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=20)
+    @given(n=st.integers(4, 20), p=st.floats(0.0, 0.95),
+           seed=st.integers(0, 2 ** 16), rounds=st.integers(1, 5))
+    def test_fuzz_dropout_invariants(n, p, seed, rounds):
+        topo = make_topology("barabasi_albert", n=n, m=2, seed=seed % 97)
+        bound, events = _drive(EdgeDropout(p=p), topo, rounds=rounds,
+                               seed=seed)
+        for ev in events:
+            _check_event(bound, ev)
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=20)
+    @given(n=st.integers(4, 16), p_gb=st.floats(0.0, 1.0),
+           p_bg=st.floats(0.05, 1.0), seed=st.integers(0, 2 ** 16))
+    def test_fuzz_gilbert_elliott_invariants(n, p_gb, p_bg, seed):
+        topo = make_topology("erdos_renyi", n=n, p=0.5, seed=seed % 97)
+        bound, events = _drive(GilbertElliott(p_gb=p_gb, p_bg=p_bg), topo,
+                               rounds=5, seed=seed)
+        for ev in events:
+            _check_event(bound, ev)
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=20)
+    @given(n=st.integers(4, 16), p_leave=st.floats(0.0, 0.95),
+           p_rejoin=st.floats(0.05, 1.0), seed=st.integers(0, 2 ** 16))
+    def test_fuzz_churn_invariants(n, p_leave, p_rejoin, seed):
+        topo = make_topology("complete", n=n)
+        bound, events = _drive(NodeChurn(p_leave=p_leave,
+                                         p_rejoin=p_rejoin), topo,
+                               rounds=6, seed=seed)
+        prev = np.ones(n)
+        for ev in events:
+            _check_event(bound, ev)
+            alive = np.asarray(ev.alive)
+            assert np.array_equal(np.asarray(ev.rejoined),
+                                  (1 - prev) * alive)
+            prev = alive
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=10)
+    @given(n=st.integers(8, 20), period=st.integers(1, 4),
+           k=st.integers(1, 4), seed=st.integers(0, 2 ** 10))
+    def test_fuzz_rewiring_invariants(n, period, k, seed):
+        topo = make_topology("ring", n=n)
+        process = PeriodicRewiring(period=period, num_graphs=k, seed=seed,
+                                   topo_kwargs={"k": 4, "p": 0.2})
+        bound, events = _drive(process, topo, rounds=2 * period * k)
+        family = process._family(n)
+        for r, ev in enumerate(events):
+            _check_event(bound, ev)
+            g = (r // period) % k
+            assert np.array_equal(
+                _materialize(bound, ev),
+                family[g].adjacency.astype(np.float32))

@@ -44,6 +44,24 @@ def test_star_degrees():
     assert topo.degrees[0] == 9 and (topo.degrees[1:] == 1).all()
 
 
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(4, 30), seed=st.integers(0, 2 ** 16))
+def test_neighbor_weights_equivalence_fuzz(n, seed):
+    """Fuzzed arm of the neighbor_weights loop-oracle pin (the seeded
+    deterministic arm lives in tests/test_dynamics.py so it runs in tier-1
+    even without hypothesis installed)."""
+    topo = make_topology(
+        "erdos_renyi", n=n, p=0.4, seed=seed,
+        weight_fn=lambda i, j, rng: rng.uniform(0.1, 3.0))
+    ref = np.zeros_like(topo.neighbor_mask, np.float32)
+    for i in range(topo.num_nodes):
+        for k in range(topo.neighbor_idx.shape[1]):
+            j = topo.neighbor_idx[i, k]
+            if j >= 0:
+                ref[i, k] = topo.weights[i, j]
+    assert np.array_equal(topo.neighbor_weights(), ref)
+
+
 @settings(deadline=None, max_examples=20)
 @given(st.lists(st.floats(0.0, 1e6), min_size=1, max_size=40))
 def test_gini_range(xs):
