@@ -12,10 +12,12 @@ round" becomes a measured quantity here:
               converge each link to a target triggered fraction),
   transport — CommConfig + GossipTransport (per-node state) +
               EdgeGossipTransport (per-edge `[N, max_deg, ...]` state that
-              survives link failures independently), tying both into the
-              simulator (repro.fl.simulator) and the dist rounds
-              (repro.dist.dfl_step), with bytes/round and
-              triggered-fraction accounting.
+              survives link failures independently), each exposing ONE
+              `exchange` written against a PodContext (row-slice +
+              all-gather), so the engine rounds (repro.engine.backends) and
+              the dist rounds (repro.dist.dfl_step) lower the same path on
+              every backend, with bytes/round and triggered-fraction
+              accounting.
 
 Receivers always dequantize before aggregating, so DecDiff's Eq. 5-6 act on
 reconstructed models and the algorithm's semantics never change — only the
@@ -32,11 +34,14 @@ from repro.comm.codecs import (  # noqa: F401
     payload_nbytes,
 )
 from repro.comm.transport import (  # noqa: F401
+    DENSE_CTX,
+    WIRES,
     CommConfig,
     CommState,
     EdgeCommState,
     EdgeGossipTransport,
     GossipTransport,
+    PodContext,
     codec_roundtrip_stacked,
 )
 from repro.comm.trigger import (  # noqa: F401

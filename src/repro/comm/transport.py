@@ -33,6 +33,36 @@ Cost: encode runs per edge, not per node, and state is max_deg x larger —
 the price of personalized links (the wire bytes are identical when all
 edges of a node fire together).
 
+The ONE exchange path (every backend, every transport)
+------------------------------------------------------
+
+`exchange` is written once against a :class:`PodContext` — the pair of
+(row-slice, all-gather) primitives that describe where the caller's block
+of sender rows sits in the full node axis:
+
+  * ``DENSE_CTX`` (the default) is the identity pair: the caller holds all
+    N rows, nothing moves — the vmap backend and every direct caller;
+  * the engine's shard_map backend passes a context whose ``rows`` slices
+    the pod's block out of replicated [N, ...] quantities and whose
+    ``gather`` is the tiled `all_gather` over the pod axis.
+
+Sender-private state (error-feedback residuals, per-edge thresholds and
+drift EMAs) lives in block rows and shards with its pod; receiver-facing
+state (the `last_sent` reconstruction caches, the ever-sent/-delivered
+flags) is REPLICATED: every pod recomputes the full-axis update from the
+gathered wire deterministically, so the replicas cannot diverge and the
+reverse-slot gather (receiver r reads sender j's slot toward r — resolved
+by the `repro.kernels` gather-rows kernel over the flattened per-link
+table) never crosses pods at aggregation time.  `state_specs` hands the
+engine the matching PartitionSpec tree.
+
+What the gather carries is the `wire` choice: ``"encoded"`` (the default)
+moves the codec payload — int8 crosses the interconnect at 1/4 the fp32
+footprint and every pod decodes the same bytes — while ``"decoded"`` moves
+the reconstructed fp32 rows (the small-N oracle).  decode(encode(x)) is
+deterministic, so the two wires are bit-identical by construction (pinned
+in tests/test_engine.py); only bandwidth differs.
+
 Thresholds are either `fixed` (the scalar `trigger_threshold` on every
 edge) or `adaptive`: a per-edge Robbins-Monro controller tracks the
 (1 - target_trigger)-quantile of that edge's drift so each link's long-run
@@ -49,7 +79,7 @@ to advance a dropped link's reference.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,11 +94,34 @@ from repro.comm.trigger import (
 from repro.utils.pytree import tree_flatten_stacked
 
 POLICIES = ("fixed", "adaptive")
+WIRES = ("encoded", "decoded")
+
+
+class PodContext(NamedTuple):
+    """Where the caller's block of sender rows sits in the full node axis.
+
+    ``rows``   maps a replicated [N, ...] quantity to the caller's [R, ...]
+               block (identity when the caller holds all rows);
+    ``gather`` maps the caller's [R, ...] block to the full [N, ...] axis
+               (the engine's tiled all_gather over the pod mesh axis;
+               identity on the dense path).
+    """
+
+    rows: Callable
+    gather: Callable
+
+
+def _identity(a):
+    return a
+
+
+#: The dense (single-block) context: R == N, nothing moves.
+DENSE_CTX = PodContext(rows=_identity, gather=_identity)
 
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
-    """Transport knobs, carried on SimulatorConfig.comm.
+    """Transport knobs, carried on Experiment(comm=...).
 
     codec: "fp32" | "bf16" | "int8" | "topk".
     trigger_threshold: L2 drift below which a sender stays silent (0 = the
@@ -141,29 +194,41 @@ class CommConfig:
 
 
 class CommState(NamedTuple):
-    """Per-node transport state, threaded through the jitted round."""
+    """Per-node transport state, threaded through the jitted round.
+
+    `last_sent` and `ever_sent` are receiver-facing: replicated over pods
+    (every pod recomputes the full-axis update from the gathered wire);
+    `residual` is sender-private and shards with its rows.
+    """
 
     last_sent: jnp.ndarray            # [N, D] last reconstruction on the wire
-    residual: Optional[jnp.ndarray]   # [N, ...] EF residual (None if stateless)
+    residual: Optional[jnp.ndarray]   # [R, ...] EF residual (None if stateless)
     ever_sent: jnp.ndarray            # [N] {0,1}: has node i transmitted yet?
 
 
 class EdgeCommState(NamedTuple):
-    """Per-EDGE transport state, `[N, max_deg, ...]` padded-neighbour layout.
+    """Per-EDGE transport state, `[*, max_deg, ...]` padded-neighbour layout.
 
     Slot d of node i is the directed link i -> nbr_idx[i, d]; padding slots
-    exist but never fire and never update.
+    exist but never fire and never update.  `last_sent` and `ever_delivered`
+    are receiver-facing (replicated over pods); the residual, threshold and
+    drift-EMA rows are sender-private and shard with their pod.
     """
 
     last_sent: jnp.ndarray            # [N, E, D] per-link reconstruction ref
-    residual: Optional[jnp.ndarray]   # [N, E, ...] per-link EF residual
-    threshold: jnp.ndarray            # [N, E] per-link trigger thresholds
-    drift_ema: jnp.ndarray            # [N, E] per-link drift EMA (adaptive)
+    residual: Optional[jnp.ndarray]   # [R, E, ...] per-link EF residual
+    threshold: jnp.ndarray            # [R, E] per-link trigger thresholds
+    drift_ema: jnp.ndarray            # [R, E] per-link drift EMA (adaptive)
     ever_delivered: jnp.ndarray       # [N, E] {0,1}: link ever delivered?
 
 
+def _check_wire(wire: str):
+    if wire not in WIRES:
+        raise ValueError(f"wire must be one of {WIRES}, got {wire!r}")
+
+
 class GossipTransport:
-    """Flatten -> trigger -> encode -> decode -> unflatten, vmapped over N."""
+    """Flatten -> trigger -> encode -> wire -> decode -> unflatten."""
 
     def __init__(self, config: CommConfig, stacked_params):
         self.config = config
@@ -185,11 +250,20 @@ class GossipTransport:
         return CommState(last_sent=jnp.zeros_like(mat), residual=residual,
                          ever_sent=jnp.zeros((self.n,), jnp.float32))
 
-    def reset_rows(self, state: CommState, reset) -> CommState:
-        """Rows where `reset` > 0 return to the zero bootstrap (reference,
-        residual, ever_sent all cleared) — the defined semantics for a
-        device that churned out and rejoined: it is a FRESH device, so its
-        receivers' cached reconstruction of it is gone and its next
+    def state_specs(self, shard, rep) -> CommState:
+        """The PartitionSpec tree matching init_state's layout: replicated
+        receiver-facing caches, sharded sender-private residual rows."""
+        return CommState(
+            last_sent=rep,
+            residual=shard if self.codec.has_residual else None,
+            ever_sent=rep)
+
+    def reset_rows(self, state: CommState, reset,
+                   ctx: PodContext = DENSE_CTX) -> CommState:
+        """Rows where `reset` ([N] {0,1}) > 0 return to the zero bootstrap
+        (reference, residual, ever_sent all cleared) — the defined semantics
+        for a device that churned out and rejoined: it is a FRESH device, so
+        its receivers' cached reconstruction of it is gone and its next
         transmission carries the full model through delta codecs again.
         (The per-node state conflates the sender reference with every
         receiver's cache, so a reset clears both; the per-edge transport
@@ -198,79 +272,89 @@ class GossipTransport:
         r = reset > 0
         residual = state.residual
         if residual is not None:
-            rb = r.reshape(r.shape + (1,) * (residual.ndim - 1))
+            rr = ctx.rows(reset) > 0
+            rb = rr.reshape(rr.shape + (1,) * (residual.ndim - 1))
             residual = jnp.where(rb, 0.0, residual)
         return CommState(
             last_sent=jnp.where(r[:, None], 0.0, state.last_sent),
             residual=residual,
             ever_sent=jnp.where(r, 0.0, state.ever_sent))
 
-    def exchange_rows(self, w, state: CommState, keys, send_mask=None):
-        """The per-row transport math for an arbitrary block of senders.
-
-        `w` [R, D] flat models, `state` the block's CommState rows, `keys`
-        [R, 2] codec keys (ignored unless the codec wants rng).
-        `send_mask` [R] {0,1} optionally vetoes senders regardless of drift
-        (a churned-out device transmits nothing and its state freezes).
-        Returns (new_last [R, D], gate [R], new_state).  `exchange` is this
-        over the full node axis; the engine's shard_map backend calls it per
-        pod block (state rows shard with the nodes) and all_gathers
-        `new_last`.
-        """
-        codec = self.codec
-        rows = int(w.shape[0])
-        gate, _ = drift_gate(w, state.last_sent, self.config.trigger_threshold)
-        if send_mask is not None:
-            gate = gate * send_mask
-
-        x = w - state.last_sent if codec.is_delta else w
-
-        def enc_dec(xi, key, res):
-            payload, new_res = codec.encode(
-                xi, rng=key if self.wants_rng else None, residual=res)
-            return codec.decode(payload, out_size=self.d), new_res
-
-        if codec.has_residual:
-            dec, new_res = jax.vmap(enc_dec)(x, keys, state.residual)
-        else:
-            dec, _ = jax.vmap(lambda xi, key: enc_dec(xi, key, None))(x, keys)
-            new_res = None
-
-        recon = state.last_sent + dec if codec.is_delta else dec
-        sent = gate[:, None] > 0
-        new_last = jnp.where(sent, recon, state.last_sent)
-        if codec.has_residual:
-            # a silent node keeps accumulating: its un-flushed residual
-            # stays put until the trigger fires again.
-            keep = gate.reshape((rows,) + (1,) * (new_res.ndim - 1)) > 0
-            new_res = jnp.where(keep, new_res, state.residual)
-        new_state = CommState(last_sent=new_last, residual=new_res,
-                              ever_sent=jnp.maximum(state.ever_sent, gate))
-        return new_last, gate, new_state
-
     def exchange(self, stacked_params, state: CommState, rng=None,
-                 send_mask=None):
-        """One transport round for all nodes at once.
+                 send_mask=None, *, ctx: PodContext = DENSE_CTX,
+                 wire: str = "encoded"):
+        """One transport round for the caller's block of sender rows.
 
-        Returns (decoded_models, gate, new_state):
+        Args:
+          stacked_params: pytree, leaves [R, ...] — the block's models (all
+            N rows on the dense context).
+          state: CommState (replicated caches + this block's residual rows).
+          rng: PRNG key when the codec wants one — consumed REPLICATED over
+            the full node axis and row-sliced, so every block draws the
+            same per-node key regardless of where the rows live.
+          send_mask: optional [R] {0,1} sender veto regardless of drift (a
+            churned-out device transmits nothing and its state freezes).
+          ctx: the block's PodContext (see module docstring).
+          wire: "encoded" gathers the codec payload (every pod decodes the
+            same bytes), "decoded" gathers the reconstructed rows — the
+            dense oracle.  Bit-identical by construction.
+
+        Returns (decoded_models, gate_full, new_state):
           decoded_models — pytree with leaves [N, ...]: for each sender the
             model its neighbours reconstruct this round (rows of silent
             nodes hold their previous reconstruction; the aggregation mask
             zeroes them out anyway),
-          gate — [N] {0,1} who transmitted,
+          gate_full — [N] {0,1} who transmitted (replicated),
           new_state — the threaded CommState.
-        `send_mask` [N] optionally vetoes senders (see exchange_rows).
         """
+        _check_wire(wire)
+        codec = self.codec
         w, _ = tree_flatten_stacked(stacked_params)
+        r = int(w.shape[0])
         if self.wants_rng:
             if rng is None:
-                raise ValueError(f"codec {self.codec.name!r} needs an rng key")
-            keys = jax.random.split(rng, self.n)
+                raise ValueError(f"codec {codec.name!r} needs an rng key")
+            keys = ctx.rows(jax.random.split(rng, self.n))
         else:
-            keys = jnp.zeros((self.n, 2), jnp.uint32)
-        new_last, gate, new_state = self.exchange_rows(w, state, keys,
-                                                       send_mask=send_mask)
-        return self._unflatten(new_last), gate, new_state
+            keys = jnp.zeros((r, 2), jnp.uint32)
+
+        last_full = state.last_sent
+        last = ctx.rows(last_full)
+        gate, _ = drift_gate(w, last, self.config.trigger_threshold)
+        if send_mask is not None:
+            gate = gate * send_mask
+        x = w - last if codec.is_delta else w
+
+        def enc(xi, key, res):
+            return codec.encode(xi, rng=key if self.wants_rng else None,
+                                residual=res)
+
+        if codec.has_residual:
+            payload, new_res = jax.vmap(enc)(x, keys, state.residual)
+        else:
+            payload, _ = jax.vmap(lambda xi, key: enc(xi, key, None))(x, keys)
+            new_res = None
+
+        def dec(p):
+            return codec.decode(p, out_size=self.d)
+
+        if wire == "encoded":
+            dec_full = jax.vmap(dec)(jax.tree.map(ctx.gather, payload))
+        else:
+            dec_full = ctx.gather(jax.vmap(dec)(payload))
+        gate_full = ctx.gather(gate)
+
+        recon = last_full + dec_full if codec.is_delta else dec_full
+        new_last = jnp.where(gate_full[:, None] > 0, recon, last_full)
+        if codec.has_residual:
+            # a silent node keeps accumulating: its un-flushed residual
+            # stays put until the trigger fires again.
+            keep = gate.reshape((r,) + (1,) * (new_res.ndim - 1)) > 0
+            new_res = jnp.where(keep, new_res, state.residual)
+        new_state = CommState(
+            last_sent=new_last, residual=new_res,
+            ever_sent=jnp.maximum(state.ever_sent, gate_full))
+        return self._unflatten(new_last), gate_full, new_state
 
 
 class EdgeGossipTransport:
@@ -281,6 +365,10 @@ class EdgeGossipTransport:
     state is keyed by (sender, slot) and the receiver-side gather needs the
     *reverse* slot map: receiver r hearing neighbour j at slot e reads
     sender j's edge state at slot rev[r, e] (the slot of r in j's list).
+    The gather itself — receiver rows out of the flattened [N*E, D]
+    per-link reference table — runs through the `repro.kernels` gather-rows
+    Pallas kernel on every backend (a pure copy, bitwise identical to fancy
+    indexing).
     """
 
     def __init__(self, config: CommConfig, stacked_params,
@@ -342,7 +430,18 @@ class EdgeGossipTransport:
             ever_delivered=jnp.zeros((self.n, self.e), jnp.float32),
         )
 
-    def reset_edges(self, state: EdgeCommState, reset) -> EdgeCommState:
+    def state_specs(self, shard, rep) -> EdgeCommState:
+        """The PartitionSpec tree matching init_state's layout: replicated
+        receiver-facing caches, sharded sender-private controller rows."""
+        return EdgeCommState(
+            last_sent=rep,
+            residual=shard if self.codec.has_residual else None,
+            threshold=shard,
+            drift_ema=shard,
+            ever_delivered=rep)
+
+    def reset_edges(self, state: EdgeCommState, reset,
+                    ctx: PodContext = DENSE_CTX) -> EdgeCommState:
         """Per-link state on edges where `reset` [N, E] > 0 returns to its
         init_state values — the defined carry/reset semantics for edges
         whose endpoint churned out and REJOINED: the rejoined device is a
@@ -357,104 +456,146 @@ class EdgeGossipTransport:
         the frozen reference when the edge returns.  Zero-`reset` edges are
         left bit-identical."""
         r = reset > 0
+        rr = ctx.rows(reset) > 0
         residual = state.residual
         if residual is not None:
-            rb = r.reshape(r.shape + (1,) * (residual.ndim - 2))
+            rb = rr.reshape(rr.shape + (1,) * (residual.ndim - 2))
             residual = jnp.where(rb, 0.0, residual)
         return EdgeCommState(
             last_sent=jnp.where(r[:, :, None], 0.0, state.last_sent),
             residual=residual,
-            threshold=jnp.where(r, self.thr0, state.threshold),
-            drift_ema=jnp.where(r, 0.0, state.drift_ema),
+            threshold=jnp.where(rr, self.thr0, state.threshold),
+            drift_ema=jnp.where(rr, 0.0, state.drift_ema),
             ever_delivered=jnp.where(r, 0.0, state.ever_delivered),
         )
 
     def _swap_layout(self, arr):
-        """Swap an [N, E, ...] array between the sender and receiver edge
-        layouts (an involution: entry (i, e) of the result reads the other
-        endpoint's slot for the same directed link, nbr_idx[i, e] at
+        """Swap a full [N, E, ...] array between the sender and receiver
+        edge layouts (an involution: entry (i, e) of the result reads the
+        other endpoint's slot for the same directed link, nbr_idx[i, e] at
         rev_slot[i, e]).  Receiver->sender: link_mask[r, e] becomes the
         sender-side ack for i -> nbr_idx[i, e].  Sender->receiver: edge
-        state (i, d) lands at the slot where receiver r hears i."""
+        state (i, d) lands at the slot where receiver r hears i.  Only
+        legal on replicated quantities — the swap crosses rows."""
         return arr[self.nbr_idx, self.rev_slot]
 
+    def _gather_receiver_rows(self, new_last_full, rows):
+        """The reverse-slot gather: receiver row r's slot e reads sender
+        nbr_idx[r, e]'s reference at slot rev_slot[r, e] out of the full
+        per-link table — the gather-rows Pallas kernel over the flattened
+        [N*E, D] view (a pure copy; bitwise identical to fancy indexing)."""
+        from repro.kernels.ops import gather_rows
+
+        flat_idx = (rows(self.nbr_idx) * self.e + rows(self.rev_slot))
+        r = int(flat_idx.shape[0])
+        gathered = gather_rows(new_last_full.reshape(self.n * self.e, self.d),
+                               flat_idx.reshape(-1))
+        gathered = self._unflatten(gathered)
+        return jax.tree.map(
+            lambda l: l.reshape((r, self.e) + l.shape[1:]), gathered)
+
     def exchange(self, stacked_params, state: EdgeCommState, link_mask,
-                 rng=None, live=None, reset=None):
-        """One per-edge transport round.
+                 rng=None, live=None, reset=None, *,
+                 ctx: PodContext = DENSE_CTX, wire: str = "encoded"):
+        """One per-edge transport round for the caller's block of rows.
 
         Args:
-          stacked_params: pytree, leaves [N, ...].
-          state: EdgeCommState.
-          link_mask: [N, E] receiver-layout exogenous link mask (1 = the
-            (nbr_idx[r, e] -> r) link is up; includes neighbour validity
-            and, under a dynamics process, the round's live-edge mask).
-          rng: PRNG key when the codec wants one.
-          live: optional [N, E] {0,1} SYMMETRIC live-edge mask from a
+          stacked_params: pytree, leaves [R, ...] — the block's models (all
+            N rows on the dense context).
+          state: EdgeCommState (replicated caches + the block's controller
+            rows).
+          link_mask: FULL [N, E] receiver-layout exogenous link mask (1 =
+            the (nbr_idx[r, e] -> r) link is up; includes neighbour
+            validity and, under a dynamics process, the round's live-edge
+            mask).  Always full-axis: the link-layer ack reaches the sender
+            through the layout swap, which crosses rows.
+          rng: PRNG key when the codec wants one (consumed replicated over
+            the full edge set and row-sliced — see GossipTransport).
+          live: optional FULL [N, E] {0,1} SYMMETRIC live-edge mask from a
             `repro.dynamics.GraphProcess` (symmetry makes the sender and
             receiver layouts coincide).  A dead edge does not exist this
             round: its sender cannot fire on it (no drift gate, no bytes)
             and its adaptive threshold/EMA freeze — unlike a `link_mask`
             failure, which is a LOSS the sender pays for.
-          reset: optional [N, E] {0,1} edges whose per-link state returns to
-            bootstrap BEFORE this round's drift is measured (see
+          reset: optional FULL [N, E] {0,1} edges whose per-link state
+            returns to bootstrap BEFORE this round's drift is measured (see
             reset_edges; the engine raises it on every edge incident to a
             node that rejoined after churn).
+          ctx: the block's PodContext (see module docstring).
+          wire: "encoded" gathers the codec payload, "decoded" the
+            reconstructions — bit-identical, see GossipTransport.exchange.
 
-        Returns (gathered, agg_mask, gate, new_state):
-          gathered — pytree with leaves [N, E, ...]: slot e of node r holds
-            r's CURRENT reconstruction of neighbour nbr_idx[r, e] (fresh if
-            the edge delivered this round, the per-link stale cache
-            otherwise — receivers always have their own cache),
-          agg_mask — [N, E] receiver-layout aggregation mask per the
+        Returns (gathered, agg_mask, gate_full, new_state):
+          gathered — pytree with leaves [R, E, ...]: slot e of block row r
+            holds r's CURRENT reconstruction of neighbour nbr_idx[r, e]
+            (fresh if the edge delivered this round, the per-link stale
+            cache otherwise — receivers always have their own cache),
+          agg_mask — [R, E] receiver-layout aggregation mask per the
             on_silence policy,
-          gate — [N, E] sender-layout {0,1} fired edges (bytes accounting),
+          gate_full — [N, E] sender-layout {0,1} fired edges, replicated
+            (bytes accounting),
           new_state — the threaded EdgeCommState.
         """
+        _check_wire(wire)
         codec, cfg = self.codec, self.config
+        rows = ctx.rows
         w, _ = tree_flatten_stacked(stacked_params)
+        r = int(w.shape[0])
         if reset is not None:
-            state = self.reset_edges(state, reset)
+            state = self.reset_edges(state, reset, ctx=ctx)
         # a dynamics-dead edge is excluded from validity for the round:
         # no gate, no bytes, frozen controller state.
-        valid = (self.nbr_valid if live is None else self.nbr_valid * live)
-        gate, drift = edge_drift_gate(w, state.last_sent, state.threshold,
-                                      valid)
+        valid_full = (self.nbr_valid if live is None
+                      else self.nbr_valid * live)
+        last_full = state.last_sent
+        last = rows(last_full)
+        gate, drift = edge_drift_gate(w, last, state.threshold,
+                                      rows(valid_full))
         # link-layer ack: a payload advances its edge's state only if the
-        # edge fired AND the link stayed up (sender layout).
-        sender_link = self._swap_layout(link_mask)
-        delivered = gate * sender_link
+        # edge fired AND the link stayed up (sender layout; the swap crosses
+        # rows, so it runs on the replicated full mask).
+        sender_link_full = self._swap_layout(link_mask)
+        delivered = gate * rows(sender_link_full)
 
-        x = (w[:, None, :] - state.last_sent if codec.is_delta
-             else jnp.broadcast_to(w[:, None, :], state.last_sent.shape))
+        x = (w[:, None, :] - last if codec.is_delta
+             else jnp.broadcast_to(w[:, None, :], last.shape))
         if self.wants_rng:
             if rng is None:
                 raise ValueError(f"codec {codec.name!r} needs an rng key")
-            keys = jax.random.split(rng, self.n * self.e).reshape(
-                self.n, self.e, 2)
+            keys = rows(jax.random.split(rng, self.n * self.e).reshape(
+                self.n, self.e, 2))
         else:
-            keys = jnp.zeros((self.n, self.e, 2), jnp.uint32)
+            keys = jnp.zeros((r, self.e, 2), jnp.uint32)
 
-        def enc_dec(xi, key, res):
-            payload, new_res = codec.encode(
-                xi, rng=key if self.wants_rng else None, residual=res)
-            return codec.decode(payload, out_size=self.d), new_res
+        def enc(xi, key, res):
+            return codec.encode(xi, rng=key if self.wants_rng else None,
+                                residual=res)
 
-        vv = lambda f: jax.vmap(jax.vmap(f))
+        vv = lambda f: jax.vmap(jax.vmap(f))  # noqa: E731
         if codec.has_residual:
-            dec, enc_res = vv(enc_dec)(x, keys, state.residual)
+            payload, enc_res = vv(enc)(x, keys, state.residual)
         else:
-            dec, _ = vv(lambda xi, key: enc_dec(xi, key, None))(x, keys)
+            payload, _ = vv(lambda xi, key: enc(xi, key, None))(x, keys)
             enc_res = None
 
-        recon = state.last_sent + dec if codec.is_delta else dec
-        adv = delivered[:, :, None] > 0
-        new_last = jnp.where(adv, recon, state.last_sent)
+        def dec(p):
+            return codec.decode(p, out_size=self.d)
+
+        if wire == "encoded":
+            dec_full = vv(dec)(jax.tree.map(ctx.gather, payload))
+        else:
+            dec_full = ctx.gather(vv(dec)(payload))
+        gate_full = ctx.gather(gate)
+        delivered_full = gate_full * sender_link_full
+
+        recon = last_full + dec_full if codec.is_delta else dec_full
+        new_last = jnp.where(delivered_full[:, :, None] > 0, recon, last_full)
         if codec.has_residual:
             # the EF residual tracks DELIVERED information only: a dropped
             # or silent link keeps its residual bit-identical (the pending
             # drift is recomputed from the unchanged reference next round).
             keep = delivered.reshape(
-                (self.n, self.e) + (1,) * (enc_res.ndim - 2)) > 0
+                (r, self.e) + (1,) * (enc_res.ndim - 2)) > 0
             new_res = jnp.where(keep, enc_res, state.residual)
         else:
             new_res = None
@@ -462,28 +603,26 @@ class EdgeGossipTransport:
         if cfg.policy == "adaptive":
             new_thr, new_ema = adaptive_threshold_update(
                 state.threshold, state.drift_ema, drift, gate,
-                valid, target=cfg.target_trigger,
+                rows(valid_full), target=cfg.target_trigger,
                 ema_beta=cfg.drift_ema_beta, rate=cfg.threshold_rate)
         else:
             new_thr, new_ema = state.threshold, state.drift_ema
-        ever = jnp.maximum(state.ever_delivered, delivered)
+        ever = jnp.maximum(state.ever_delivered, delivered_full)
         new_state = EdgeCommState(last_sent=new_last, residual=new_res,
                                   threshold=new_thr, drift_ema=new_ema,
                                   ever_delivered=ever)
 
-        # receiver view: slot e of node r is sender j's edge state toward r.
-        gathered = self._unflatten(
-            self._swap_layout(new_last).reshape(self.n * self.e, self.d))
-        gathered = jax.tree.map(
-            lambda l: l.reshape((self.n, self.e) + l.shape[1:]), gathered)
+        # receiver view: slot e of block row r is sender j's edge state
+        # toward r — the reverse-slot gather out of the replicated table.
+        gathered = self._gather_receiver_rows(new_last, rows)
         if cfg.on_silence == "drop":
-            agg_mask = link_mask * self._swap_layout(gate)
+            agg_mask = rows(link_mask * self._swap_layout(gate_full))
         else:
             # stale: aggregate the per-link cache at full weight, masking
             # only links that never delivered (cache = zero bootstrap);
             # exogenous failures still drop (a loss, not a decision).
-            agg_mask = link_mask * self._swap_layout(ever)
-        return gathered, agg_mask, gate, new_state
+            agg_mask = rows(link_mask * self._swap_layout(ever))
+        return gathered, agg_mask, gate_full, new_state
 
 
 def codec_roundtrip_stacked(codec: Codec, stacked, rng=None):

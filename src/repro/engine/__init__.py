@@ -7,11 +7,12 @@
                      schedule=Schedule(rounds=30, eval_every=5))
     history = exp.run()
 
-Methods plug in as :class:`AggregationStrategy` instances through
-:func:`register_method`; execution lowers through `build_round` to the vmap
-or shard_map backend and runs either per-round or as one scan-fused XLA
-program (`Schedule.mode`).  See docs/api.md for the full tour and the
-`DFLSimulator` migration table.
+Methods plug in as :class:`AggregationStrategy` instances (each declaring a
+frozen :class:`Capabilities` record) through :func:`register_method`;
+execution lowers through `build_round` — one round body for every strategy
+× transport × dynamics combination — to the vmap or shard_map backend and
+runs either per-round or as one scan-fused XLA program (`Schedule.mode`).
+See docs/api.md for the full tour.
 """
 from repro.engine.backends import BACKENDS, build_round  # noqa: F401
 from repro.engine.experiment import (  # noqa: F401
@@ -22,6 +23,7 @@ from repro.engine.experiment import (  # noqa: F401
 )
 from repro.engine.strategies import (  # noqa: F401
     AggregationStrategy,
+    Capabilities,
     CFAGEStrategy,
     CFAStrategy,
     DecAvgStrategy,

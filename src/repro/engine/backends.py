@@ -1,20 +1,27 @@
-"""`build_round(experiment)`: one round spec, two executions.
+"""`build_round(experiment)`: ONE round body, two lowerings.
 
 Lowers an :class:`~repro.engine.Experiment` to a jit-able round function —
 Algorithm 1's (local SGD steps → neighbour exchange → aggregation) as ONE
-XLA program per round — on either backend:
+XLA program per round.  Every strategy × transport × dynamics combination
+shares a single round body, written once against the transport layer's
+:class:`~repro.comm.PodContext` (a row-slice + all-gather pair), and the
+two backends differ ONLY in the context they bind:
 
-  * ``vmap``      — every per-node quantity vmapped over the node axis (the
-    legacy `DFLSimulator` execution, ported op-for-op: with the fp32 codec,
-    threshold 0 and the fixed policy it is bit-for-bit the pre-engine round);
-  * ``shard_map`` — explicit shard_map over the "pod" mesh axis (the
-    `repro.dist.dfl_step` formulation generalized to the full method/
-    transport roster): each pod owns N/n_pods nodes' params, optimizer
-    state, data shards and transport state; the neighbour exchange is an
-    all_gather over the pod ring; everything per-node — training, trigger,
-    codec, aggregation — runs blockwise on the pod's own rows with the SAME
-    per-node ops as the vmap lowering, so the two backends agree
-    bit-for-bit (pinned in tests/test_engine.py on the 4-device CPU mesh).
+  * ``vmap``      — the dense context (identity slice, identity gather):
+    every per-node quantity vmapped over the full node axis — the small-N
+    oracle;
+  * ``shard_map`` — explicit shard_map over the "pod" mesh axis: each pod
+    owns N/n_pods nodes' params, optimizer state, data shards and
+    sender-private transport rows; the context's gather is a tiled
+    `all_gather` over the pod ring carrying the transport's ENCODED payload
+    by default (`Experiment(wire=...)` selects the decoded-rows oracle
+    wire), and receiver-facing transport caches are replicated so the
+    per-edge reverse-slot gather and the CFA-GE neighbour walk read them
+    without further collectives.  Everything per-node — training, trigger,
+    codec, aggregation, gradient exchange — runs with the SAME per-row ops
+    as the dense context, so the two backends agree bit-for-bit (pinned in
+    tests/test_engine.py and tests/test_exchange_unified.py on the
+    4-device CPU mesh, across the full capability roster).
 
 The round function's calling convention depends on the transport and on
 whether the experiment carries a `repro.dynamics.GraphProcess` (whose
@@ -33,31 +40,33 @@ With dynamics, the round starts by realizing this round's graph (one pure
 state transition -> a GraphEvent): a dead node runs zero local steps and
 its params/opt state freeze bit-exactly, the delivery mask is intersected
 with the live-edge mask, transports only fire (and only account bytes) on
-live edges, and a node that rejoins after churn has its per-link transport
-state reset before the exchange.  `trig_frac` is the fired fraction of
-LIVE directed edges; `live_edges` their count.
+live edges, a node that rejoins after churn has its per-link transport
+state reset before the exchange, and server-style aggregation intersects
+its data-size weights with the live mask (an offline client's frozen
+params carry zero weight).  `trig_frac` is the fired fraction of LIVE
+directed edges; `live_edges` their count.
 
-Method behaviour enters exclusively through the experiment's
-:class:`~repro.engine.AggregationStrategy` (exchange/aggregate hooks and
-the `kind`/`grad_exchange` capabilities) — there is no method branching
-here beyond those capabilities.
+Method behaviour enters exclusively through the experiment's strategy
+:class:`~repro.engine.Capabilities` record (kind / grad_exchange) and the
+strategy's exchange/aggregate hooks — there is no method branching here
+beyond the declared capabilities, and every capability lowers to every
+backend.
 
 Randomness discipline (the bit-exactness mechanism): every rng consumption
 — per-step dropout keys, hetero step budgets, participation masks, codec
-keys, and the dynamics process's edge coins — is computed from the
-REPLICATED rng stream over the full node axis and then row-sliced per
-block, so the shard_map lowering sees exactly the values the vmap lowering
-sees.  Only data movement (the all_gather) differs.  A process that needs
-no rng (StaticGraph, PeriodicRewiring) consumes none, which is what makes
+keys, gradient-exchange minibatch keys, and the dynamics process's edge
+coins — is computed from the REPLICATED rng stream over the full node axis
+and then row-sliced per block, so the shard_map lowering sees exactly the
+values the vmap lowering sees.  Only data movement (the gather) differs,
+and the transport's two wires carry bit-identical information by
+construction (decode is deterministic).  A process that needs no rng
+(StaticGraph, PeriodicRewiring) consumes none, which is what makes
 `dynamics=StaticGraph()` bit-identical to `dynamics=None`.
 
-Scale note: the shard_map exchange moves the decoded fp32 models because
-this is the *simulator* contract (bytes-on-wire are accounted exactly from
-`payload_bytes × fired edges`, not from the gather).  The LM-scale rounds
-in `repro.dist.dfl_step` are the production formulation of the same
-exchange where the all_gather carries the encoded int8 payload and the
-dequantize+Eq.6 reduction is fused into the `dequant_neighbor_avg_rows`
-Pallas kernel.
+Byte accounting is exact and replicated: the fired-edge gates come back
+full-axis from the exchange, so `sent_edges` is the same full-array sum on
+every pod (small integers, exact in f32) and the `payload_bytes ×
+sent_edges` multiply happens in Python where it survives past f32's 2^24.
 """
 from __future__ import annotations
 
@@ -66,10 +75,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import EdgeGossipTransport
+from repro.comm import DENSE_CTX, EdgeGossipTransport, PodContext
 from repro.comm.trigger import edge_delivery
 from repro.dist.sharding import NODE_AXIS
-from repro.utils.pytree import tree_flatten_stacked
 
 BACKENDS = ("vmap", "shard_map")
 
@@ -172,26 +180,30 @@ def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
     return local_training
 
 
-def _make_delivery_mask(exp, *, rows):
+def _make_delivery_mask(exp):
     """Exogenous per-edge Bernoulli link failures (the paper's
-    no-synchronization model), drawn over the FULL [N, max_deg] layout and
-    row-sliced so every backend sees the same draws."""
+    no-synchronization model), drawn over the FULL [N, max_deg] layout
+    (consumers row-slice at the use site, so every backend sees the same
+    draws)."""
     cfg = exp.train
     nbr_valid = exp.nbr_valid
 
     def delivery_mask(rng):
         if cfg.participation >= 1.0:
-            return rows(nbr_valid)
+            return nbr_valid
         u = jax.random.uniform(rng, nbr_valid.shape)
-        return rows(nbr_valid * (u < cfg.participation).astype(jnp.float32))
+        return nbr_valid * (u < cfg.participation).astype(jnp.float32)
 
     return delivery_mask
 
 
 def _make_gradient_exchange(exp):
-    """CFA-GE second phase (vmap backend only): neighbours evaluate our
-    aggregated model on their data; we descend along the p_ij-weighted mean
-    of their gradients."""
+    """CFA-GE second phase: neighbours evaluate our aggregated model on
+    their data; we descend along the p_ij-weighted mean of their gradients.
+    Runs per block row: `rows` slices the neighbour table and the
+    replicated minibatch keys; the neighbour DATA is read out of the full
+    (replicated) padded arrays, which is what lets the walk cross pods
+    without a collective."""
     cfg = exp.train
     batcher = exp.batcher
     counts = exp.counts
@@ -201,23 +213,26 @@ def _make_gradient_exchange(exp):
     max_deg = int(nbr_idx.shape[1])
     v_grad = jax.vmap(exp._grad_fn, in_axes=(0, 0, 0, 0))
 
-    def gradient_exchange(params, mask, round_idx, rng):
+    def gradient_exchange(rows, params, mask, round_idx, rng):
         bs = cfg.batch_size
+        nbr_idx_r = rows(nbr_idx)
+        nbr_w_r = rows(nbr_weight)
+        r = int(nbr_idx_r.shape[0])
 
         def body(acc, d):
-            j = nbr_idx[:, d]  # [n] neighbour ids in slot d
+            j = nbr_idx_r[:, d]  # [r] neighbour ids in slot d
             cj = counts[j]
             base = (round_idx * max_deg + d) * bs
             bidx = (base + jnp.arange(bs, dtype=jnp.int32)[None, :]) * batcher.stride
             bidx = bidx % jnp.maximum(cj[:, None], 1)
-            xj = x_pad[j[:, None], bidx]  # [n, bs, ...]
+            xj = x_pad[j[:, None], bidx]  # [r, bs, ...]
             yj = y_pad[j[:, None], bidx]
-            keys = jax.random.split(jax.random.fold_in(rng, d), n)
+            keys = rows(jax.random.split(jax.random.fold_in(rng, d), n))
             g = v_grad(params, xj, yj, keys)  # grad of F_j at w_i
-            w_d = nbr_weight[:, d] * mask[:, d]
+            w_d = nbr_w_r[:, d] * mask[:, d]
 
             def add(a, gi):
-                wb = w_d.reshape((n,) + (1,) * (gi.ndim - 1))
+                wb = w_d.reshape((r,) + (1,) * (gi.ndim - 1))
                 return a + wb * gi.astype(jnp.float32)
 
             return jax.tree.map(add, acc, g), None
@@ -226,13 +241,13 @@ def _make_gradient_exchange(exp):
             lambda p: jnp.zeros(p.shape, jnp.float32), params
         )
         acc, _ = jax.lax.scan(body, zeros, jnp.arange(max_deg))
-        tot = jnp.sum(nbr_weight * mask, axis=1)  # [n]
+        tot = jnp.sum(nbr_w_r * mask, axis=1)  # [r]
         safe = jnp.maximum(tot, 1e-9)
         lr_ge = cfg.ge_lr if cfg.ge_lr is not None else cfg.lr
 
         def apply(p, a):
-            wb = (1.0 / safe).reshape((n,) + (1,) * (a.ndim - 1))
-            gate = (tot > 0).astype(jnp.float32).reshape((n,) + (1,) * (a.ndim - 1))
+            wb = (1.0 / safe).reshape((r,) + (1,) * (a.ndim - 1))
+            gate = (tot > 0).astype(jnp.float32).reshape((r,) + (1,) * (a.ndim - 1))
             return (p.astype(jnp.float32) - lr_ge * gate * wb * a).astype(p.dtype)
 
         return jax.tree.map(apply, params, acc)
@@ -240,219 +255,220 @@ def _make_gradient_exchange(exp):
     return gradient_exchange
 
 
+# ----------------------------------------------------------- the round body
+
+def _make_round_body(exp, *, loss_reduce):
+    """The ONE round body, written against a PodContext.
+
+    Returns ``body(ctx, params, opt, comm_state, dyn_state, round_idx, rng,
+    x, y)`` -> the full 9-slot tuple ``(params, opt, comm_state, dyn_state,
+    rng, loss, sent_edges, trig_frac, live_edges)`` with ``None`` in the
+    slots the experiment does not carry (the backend wrappers squeeze those
+    out to the documented calling conventions).  All branching below is on
+    STATIC configuration — capabilities, transport type, dynamics presence
+    — so each experiment traces exactly one path.
+    """
+    cfg, strategy, agg_state = exp.train, exp.strategy, exp.agg_state
+    caps = strategy.capabilities
+    transport = exp.transport
+    per_edge = isinstance(transport, EdgeGossipTransport)
+    wire = exp.wire
+    nbr_idx, nbr_valid = exp.nbr_idx, exp.nbr_valid
+    counts = exp.counts
+    has_dyn = exp.bound_dyn is not None
+    realize = _make_realize(exp) if has_dyn else None
+    delivery_mask = _make_delivery_mask(exp)
+    if caps.grad_exchange:
+        gradient_exchange = _make_gradient_exchange(exp)
+
+    degrees = jnp.sum(nbr_valid, axis=1)
+    total_edges = jnp.sum(degrees)  # directed edge count
+
+    def aggregate(rows, params, gathered, mask):
+        state = (jax.tree.map(rows, agg_state) if caps.kind == "gossip"
+                 else agg_state)
+        return strategy.aggregate(exp, state, params, gathered, mask)
+
+    def body(ctx, params, opt, comm_state, dyn_state, round_idx, rng, x, y):
+        rows = ctx.rows
+        local_training = _make_local_training(
+            exp, x=x, y=y, counts=rows(counts), rows=rows,
+            loss_reduce=loss_reduce)
+
+        # -- dynamics prelude: realize this round's graph ------------------
+        if has_dyn:
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            alive = ev.alive
+        else:
+            ev, alive = None, None
+
+        # -- Alg. 1 l.4-9: local SGD (dead nodes run zero steps) -----------
+        params, opt, rng, train_loss = local_training(
+            params, opt, round_idx, rng, alive=alive)
+
+        # -- exogenous link failures ∩ the live graph ----------------------
+        rng, sub = jax.random.split(rng)
+        link_full = delivery_mask(sub)
+        if has_dyn:
+            link_full = link_full * ev.live
+        old_params = params
+
+        # -- the exchange + aggregation, by declared capability ------------
+        sent_edges = trig = new_comm = None
+        if transport is None:
+            if caps.kind == "server":
+                # server-style: global average over the full stack, with
+                # data-size weights intersected with liveness — an offline
+                # client's frozen params carry zero weight (the all-ones
+                # mask without dynamics is an exact no-op).
+                full = jax.tree.map(ctx.gather, params)
+                params = aggregate(rows, params, full, alive)
+            elif caps.kind == "gossip":
+                full = jax.tree.map(ctx.gather, params)
+                gathered = strategy.exchange(exp, full, rows(nbr_idx))
+                params = aggregate(rows, params, gathered, rows(link_full))
+                if caps.grad_exchange:
+                    rng, sub = jax.random.split(rng)
+                    params = gradient_exchange(rows, params, rows(link_full),
+                                               round_idx, sub)
+            # kind == "none": isolation — no communication at all.
+        elif per_edge:
+            # per-EDGE transport: every directed link carries its own
+            # reference/residual/threshold; the full link mask feeds the
+            # exchange (link-layer ack through the layout swap) and the
+            # transport hands back both the receiver-layout gathered models
+            # (fresh or per-link stale cache) and the aggregation mask.
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+            else:
+                ck = None
+            if has_dyn:
+                rj = ev.rejoined
+                reset = jnp.maximum(rj[:, None], rj[nbr_idx]) * nbr_valid
+                live = ev.live
+            else:
+                reset = live = None
+            gathered, mask, gate_full, new_comm = transport.exchange(
+                params, comm_state, link_full, ck, live=live, reset=reset,
+                ctx=ctx, wire=wire)
+            params = aggregate(rows, params, gathered, mask)
+            # unicast accounting: one payload per FIRED edge (a silent edge
+            # of an otherwise-sending node costs nothing); failed links
+            # still burn the sender's bytes.
+            sent_edges = jnp.sum(gate_full)
+            if has_dyn:
+                trig = sent_edges / jnp.maximum(jnp.sum(ev.live), 1.0)
+            else:
+                trig = sent_edges / jnp.float32(transport.num_edges)
+        else:
+            # per-NODE transport: encode -> (event-triggered, possibly
+            # failing) wire -> decode -> aggregate.  With the fp32 codec
+            # and threshold 0 this is bit-for-bit the plain round (same rng
+            # stream, identical payload values).
+            if transport.wants_rng:
+                rng, ck = jax.random.split(rng)
+            else:
+                ck = None
+            if has_dyn:
+                # a rejoined node's row returns to bootstrap before the
+                # exchange; dead senders are vetoed outright.
+                comm_state = transport.reset_rows(comm_state, ev.rejoined,
+                                                  ctx=ctx)
+                send_mask = rows(ev.alive)
+            else:
+                send_mask = None
+            decoded, gate_full, new_comm = transport.exchange(
+                params, comm_state, ck, send_mask=send_mask, ctx=ctx,
+                wire=wire)
+            # `decoded` rows of silent nodes hold their cached last-sent
+            # model, so "stale" aggregates them at full weight (masking
+            # only neighbours that have NEVER transmitted — their cache is
+            # still the zero bootstrap reference); "drop" masks any silent
+            # node like a failed link.
+            if transport.config.on_silence == "drop":
+                mask = edge_delivery(gate_full, rows(link_full),
+                                     rows(nbr_idx))
+            else:
+                mask = edge_delivery(new_comm.ever_sent, rows(link_full),
+                                     rows(nbr_idx))
+            gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
+            params = aggregate(rows, params, gathered, mask)
+            # broadcast accounting: a transmitting node pays one payload
+            # per outgoing edge — its LIVE outgoing edges under dynamics (a
+            # non-existent link carries nothing); failed links still burn
+            # the sender's bytes.
+            if has_dyn:
+                live_deg = jnp.sum(ev.live, axis=1)
+                sent_edges = jnp.sum(gate_full * live_deg)
+                trig = sent_edges / jnp.maximum(jnp.sum(ev.live), 1.0)
+            else:
+                sent_edges = jnp.sum(gate_full * degrees)
+                trig = sent_edges / total_edges
+
+        # -- dynamics epilogue: freeze the dead, count the live ------------
+        if has_dyn:
+            params = _freeze_dead(params, old_params, rows(ev.alive))
+            live_total = jnp.sum(ev.live)
+        else:
+            live_total = None
+
+        return (params, opt, new_comm, dyn_state, rng, train_loss,
+                sent_edges, trig, live_total)
+
+    return body
+
+
+def _squeeze(out):
+    """Drop the None slots of the full 9-tuple, yielding the documented
+    per-configuration calling convention (the slot ORDER is fixed, so the
+    surviving entries line up with the module-docstring signatures)."""
+    return tuple(o for o in out if o is not None)
+
+
 # ------------------------------------------------------------- vmap backend
 
 def _build_vmap_round(exp):
-    """Op-for-op the legacy simulator round, with the method's behaviour
-    supplied by the strategy hooks instead of an agg-kind dispatch."""
-    cfg, strategy, agg_state = exp.train, exp.strategy, exp.agg_state
-    nbr_idx = exp.nbr_idx
-    transport = exp.transport
+    """The dense lowering: the round body under the identity context."""
+    body = _make_round_body(exp, loss_reduce=_identity_rows)
+    x, y = exp.x_pad, exp.y_pad
+    has_comm = exp.transport is not None
+    has_dyn = exp.bound_dyn is not None
 
-    local_training = _make_local_training(
-        exp, x=exp.x_pad, y=exp.y_pad, counts=exp.counts,
-        rows=_identity_rows, loss_reduce=_identity_rows)
-    delivery_mask = _make_delivery_mask(exp, rows=_identity_rows)
+    def call(params, opt, comm_state, dyn_state, round_idx, rng):
+        return _squeeze(body(DENSE_CTX, params, opt, comm_state, dyn_state,
+                             round_idx, rng, x, y))
 
-    def gossip_aggregate(params, gathered, mask):
-        return strategy.aggregate(exp, agg_state, params, gathered, mask)
+    if has_comm and has_dyn:
+        def round_fn(params, opt, comm_state, dyn_state, round_idx, rng):
+            return call(params, opt, comm_state, dyn_state, round_idx, rng)
+    elif has_comm:
+        def round_fn(params, opt, comm_state, round_idx, rng):
+            return call(params, opt, comm_state, None, round_idx, rng)
+    elif has_dyn:
+        def round_fn(params, opt, dyn_state, round_idx, rng):
+            return call(params, opt, None, dyn_state, round_idx, rng)
+    else:
+        def round_fn(params, opt, round_idx, rng):
+            return call(params, opt, None, None, round_idx, rng)
 
-    if strategy.grad_exchange:
-        gradient_exchange = _make_gradient_exchange(exp)
-
-    degrees = jnp.sum(exp.nbr_valid, axis=1)
-    total_edges = jnp.sum(degrees)  # directed edge count
-
-    def comm_round_fn(params, opt, comm_state, round_idx, rng):
-        """The round with the per-NODE transport in the middle: encode ->
-        (event-triggered, possibly failing) wire -> decode -> aggregate.
-        With the fp32 codec and threshold 0 this is bit-for-bit the plain
-        round (same rng stream, identical payload values)."""
-        params, opt, rng, train_loss = local_training(params, opt, round_idx,
-                                                      rng)
-        rng, sub = jax.random.split(rng)
-        link = delivery_mask(sub)  # exogenous failures (participation)
-        if transport.wants_rng:
-            rng, ck = jax.random.split(rng)
-        else:
-            ck = None
-        decoded, gate, comm_state = transport.exchange(params, comm_state, ck)
-        # `decoded` rows of silent nodes hold their cached last-sent model,
-        # so "stale" aggregates them at full weight (masking only neighbours
-        # that have NEVER transmitted — their cache is still the zero
-        # bootstrap reference); "drop" masks any silent node like a failed
-        # link.
-        if transport.config.on_silence == "drop":
-            mask = edge_delivery(gate, link, nbr_idx)
-        else:
-            mask = edge_delivery(comm_state.ever_sent, link, nbr_idx)
-        gathered = strategy.exchange(exp, decoded, nbr_idx)
-        params = gossip_aggregate(params, gathered, mask)
-        # a transmitting node broadcasts one payload per outgoing edge;
-        # failed links still burn the sender's bytes.  Return the edge COUNT
-        # (small, exact in f32) — the byte multiply happens in Python so
-        # exact accounting survives past f32's 2^24 integers.
-        sent_edges = jnp.sum(gate * degrees)
-        return (params, opt, comm_state, rng, train_loss,
-                sent_edges, sent_edges / total_edges)
-
-    def edge_comm_round_fn(params, opt, comm_state, round_idx, rng):
-        """The per-EDGE transport round: every directed link carries its own
-        reference/residual/threshold, so the link mask feeds the exchange
-        (link-layer ack) and the transport hands back both the
-        receiver-layout gathered models (fresh or per-link stale cache) and
-        the aggregation mask.  Same rng stream as comm_round_fn, so fp32 +
-        threshold 0 + policy "fixed" is bit-for-bit the legacy round
-        (pinned in tests/test_comm_per_edge.py)."""
-        params, opt, rng, train_loss = local_training(params, opt, round_idx,
-                                                      rng)
-        rng, sub = jax.random.split(rng)
-        link = delivery_mask(sub)  # exogenous failures (participation)
-        if transport.wants_rng:
-            rng, ck = jax.random.split(rng)
-        else:
-            ck = None
-        gathered, mask, gate, comm_state = transport.exchange(
-            params, comm_state, link, ck)
-        params = gossip_aggregate(params, gathered, mask)
-        # unicast accounting: one payload per FIRED edge (a silent edge of
-        # an otherwise-sending node costs nothing); failed links still burn
-        # the sender's bytes.
-        sent_edges = jnp.sum(gate)
-        trig = sent_edges / jnp.float32(transport.num_edges)
-        return (params, opt, comm_state, rng, train_loss,
-                sent_edges, trig)
-
-    def round_fn(params, opt, round_idx, rng):
-        params, opt, rng, train_loss = local_training(params, opt, round_idx,
-                                                      rng)
-        rng, sub = jax.random.split(rng)
-        mask = delivery_mask(sub)
-
-        if strategy.kind == "server":
-            params = strategy.aggregate(exp, agg_state, params, params, mask)
-        elif strategy.kind == "none":
-            pass
-        else:
-            gathered = strategy.exchange(exp, params, nbr_idx)
-            params = gossip_aggregate(params, gathered, mask)
-            if strategy.grad_exchange:
-                rng, sub = jax.random.split(rng)
-                params = gradient_exchange(params, mask, round_idx, sub)
-
-        return params, opt, rng, train_loss
-
-    # ---- dynamics variants: same rounds with the realized graph threaded
-    # through (see module docstring).  Written as separate bodies so the
-    # static path stays op-for-op untouched; under `StaticGraph` these are
-    # bit-identical to the plain bodies (pinned in tests/test_dynamics.py).
-    if exp.bound_dyn is not None:
-        realize = _make_realize(exp)
-        nbr_valid = exp.nbr_valid
-
-        def dyn_round_fn(params, opt, dyn_state, round_idx, rng):
-            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
-            params, opt, rng, train_loss = local_training(
-                params, opt, round_idx, rng, alive=ev.alive)
-            rng, sub = jax.random.split(rng)
-            mask = delivery_mask(sub) * ev.live
-            old = params
-            if strategy.kind == "server":
-                params = strategy.aggregate(exp, agg_state, params, params,
-                                            mask)
-            elif strategy.kind == "none":
-                pass
-            else:
-                gathered = strategy.exchange(exp, params, nbr_idx)
-                params = gossip_aggregate(params, gathered, mask)
-                if strategy.grad_exchange:
-                    rng, sub = jax.random.split(rng)
-                    params = gradient_exchange(params, mask, round_idx, sub)
-            params = _freeze_dead(params, old, ev.alive)
-            return (params, opt, dyn_state, rng, train_loss,
-                    jnp.sum(ev.live))
-
-        def dyn_comm_round_fn(params, opt, comm_state, dyn_state, round_idx,
-                              rng):
-            """comm_round_fn on the realized graph: dead senders are vetoed
-            (send_mask), a rejoined node's row returns to bootstrap before
-            the exchange, and a transmitting node pays for its LIVE
-            outgoing edges only (a non-existent link carries nothing)."""
-            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
-            params, opt, rng, train_loss = local_training(
-                params, opt, round_idx, rng, alive=ev.alive)
-            rng, sub = jax.random.split(rng)
-            link = delivery_mask(sub) * ev.live
-            if transport.wants_rng:
-                rng, ck = jax.random.split(rng)
-            else:
-                ck = None
-            comm_state = transport.reset_rows(comm_state, ev.rejoined)
-            decoded, gate, comm_state = transport.exchange(
-                params, comm_state, ck, send_mask=ev.alive)
-            if transport.config.on_silence == "drop":
-                mask = edge_delivery(gate, link, nbr_idx)
-            else:
-                mask = edge_delivery(comm_state.ever_sent, link, nbr_idx)
-            gathered = strategy.exchange(exp, decoded, nbr_idx)
-            new_params = gossip_aggregate(params, gathered, mask)
-            params = _freeze_dead(new_params, params, ev.alive)
-            live_deg = jnp.sum(ev.live, axis=1)
-            live_total = jnp.sum(ev.live)
-            sent_edges = jnp.sum(gate * live_deg)
-            trig = sent_edges / jnp.maximum(live_total, 1.0)
-            return (params, opt, comm_state, dyn_state, rng, train_loss,
-                    sent_edges, trig, live_total)
-
-        def dyn_edge_comm_round_fn(params, opt, comm_state, dyn_state,
-                                   round_idx, rng):
-            """edge_comm_round_fn on the realized graph: the transport gets
-            the live mask (dead edges cannot fire, their controller state
-            freezes) and the reset mask (every edge incident to a rejoined
-            node returns to bootstrap)."""
-            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
-            params, opt, rng, train_loss = local_training(
-                params, opt, round_idx, rng, alive=ev.alive)
-            rng, sub = jax.random.split(rng)
-            link = delivery_mask(sub) * ev.live
-            if transport.wants_rng:
-                rng, ck = jax.random.split(rng)
-            else:
-                ck = None
-            rj = ev.rejoined
-            reset = jnp.maximum(rj[:, None], rj[nbr_idx]) * nbr_valid
-            gathered, mask, gate, comm_state = transport.exchange(
-                params, comm_state, link, ck, live=ev.live, reset=reset)
-            new_params = gossip_aggregate(params, gathered, mask)
-            params = _freeze_dead(new_params, params, ev.alive)
-            sent_edges = jnp.sum(gate)
-            live_total = jnp.sum(ev.live)
-            trig = sent_edges / jnp.maximum(live_total, 1.0)
-            return (params, opt, comm_state, dyn_state, rng, train_loss,
-                    sent_edges, trig, live_total)
-
-        if transport is None:
-            return dyn_round_fn
-        return (dyn_edge_comm_round_fn
-                if isinstance(transport, EdgeGossipTransport)
-                else dyn_comm_round_fn)
-
-    if transport is None:
-        return round_fn
-    return (edge_comm_round_fn if isinstance(transport, EdgeGossipTransport)
-            else comm_round_fn)
+    return round_fn
 
 
 # -------------------------------------------------------- shard_map backend
 
 def _build_shardmap_round(exp):
-    """The same round shard_mapped over the pod axis (see module docstring).
+    """The same round body shard_mapped over the pod axis.
 
     All mesh axes are manual (`check_rep=False`) following
     `repro.dist.dfl_step.build_dfl_round_shardmap`; each pod holds its
     nodes' full replicas, so per-node reductions (Eq. 5's global norm, the
-    trigger's drift) are complete blockwise and only the model exchange
-    crosses pods.
+    trigger's drift) are complete blockwise and only the exchange's gather
+    crosses pods.  Transport state splits by the transport's `state_specs`:
+    sender-private rows (residuals, per-edge thresholds/EMAs) shard with
+    their pod; receiver-facing caches (`last_sent`, the ever-sent/-delivered
+    flags) are replicated and recomputed identically on every pod from the
+    gathered wire, which is what lets the per-edge reverse-slot gather and
+    the CFA-GE neighbour walk run blockwise.
     """
     mesh = exp.mesh
     if mesh is None or NODE_AXIS not in mesh.shape:
@@ -464,175 +480,81 @@ def _build_shardmap_round(exp):
     if n % n_pods:
         raise ValueError(f"{n} DFL nodes do not tile the {n_pods}-pod axis")
     per_pod = n // n_pods
-    strategy = exp.strategy
     transport = exp.transport
-    if strategy.grad_exchange:
-        raise NotImplementedError(
-            f"method {exp.method.name!r} (gradient exchange) is vmap-only; "
-            f"use backend='vmap'")
-    if isinstance(transport, EdgeGossipTransport):
-        raise NotImplementedError(
-            "the per-edge transport is vmap-only (its reverse-slot gather "
-            "crosses pods); use backend='vmap' or per_edge=False")
+    has_comm = transport is not None
+    has_dyn = exp.bound_dyn is not None
 
-    cfg = exp.train
-    nbr_idx, nbr_valid = exp.nbr_idx, exp.nbr_valid
-    counts = exp.counts
-    agg_state = exp.agg_state
-    degrees = jnp.sum(nbr_valid, axis=1)
-    total_edges = jnp.sum(degrees)
+    def pmean(v):
+        return jax.lax.pmean(v, NODE_AXIS)
 
-    def block_rows(i0):
+    body = _make_round_body(exp, loss_reduce=pmean)
+
+    def make_ctx():
+        i0 = jax.lax.axis_index(NODE_AXIS) * per_pod
+
         def rows(a):
             return jax.lax.dynamic_slice_in_dim(a, i0, per_pod, axis=0)
-        return rows
 
-    def gather_rows(a_blk):
-        return jax.lax.all_gather(a_blk, NODE_AXIS, axis=0, tiled=True)
+        def gather(a):
+            return jax.lax.all_gather(a, NODE_AXIS, axis=0, tiled=True)
 
-    def pmean(x):
-        return jax.lax.pmean(x, NODE_AXIS)
-
-    def block_prelude(params, opt, round_idx, rng, x_blk, y_blk, alive=None):
-        """Local training + participation draw for this pod's rows; returns
-        the row slicer so callers share the replicated randomness."""
-        rows = block_rows(jax.lax.axis_index(NODE_AXIS) * per_pod)
-        local_training = _make_local_training(
-            exp, x=x_blk, y=y_blk, counts=rows(counts), rows=rows,
-            loss_reduce=pmean)
-        delivery_mask = _make_delivery_mask(exp, rows=rows)
-        params, opt, rng, train_loss = local_training(params, opt, round_idx,
-                                                      rng, alive=alive)
-        rng, sub = jax.random.split(rng)
-        link = delivery_mask(sub)
-        return rows, params, opt, rng, train_loss, link
-
-    def aggregate_block(rows, params, gathered, mask):
-        state_blk = (jax.tree.map(rows, agg_state)
-                     if strategy.kind == "gossip" else agg_state)
-        return strategy.aggregate(exp, state_blk, params, gathered, mask)
-
-    def plain_block(params, opt, round_idx, rng, x_blk, y_blk):
-        rows, params, opt, rng, train_loss, link = block_prelude(
-            params, opt, round_idx, rng, x_blk, y_blk)
-        if strategy.kind == "server":
-            full = jax.tree.map(gather_rows, params)
-            params = aggregate_block(rows, params, full, link)
-        elif strategy.kind == "gossip":
-            full = jax.tree.map(gather_rows, params)
-            gathered = strategy.exchange(exp, full, rows(nbr_idx))
-            params = aggregate_block(rows, params, gathered, link)
-        return params, opt, rng, train_loss
-
-    def comm_block(params, opt, comm_state, round_idx, rng, x_blk, y_blk):
-        """comm_round_fn blockwise: the trigger/codec run on the pod's own
-        rows (state sharded with them), the all_gather moves the decoded
-        reconstructions + gates, aggregation runs on the block."""
-        rows, params, opt, rng, train_loss, link = block_prelude(
-            params, opt, round_idx, rng, x_blk, y_blk)
-        if transport.wants_rng:
-            rng, ck = jax.random.split(rng)
-            keys = rows(jax.random.split(ck, n))
-        else:
-            keys = jnp.zeros((per_pod, 2), jnp.uint32)
-        w_blk, _ = tree_flatten_stacked(params)
-        new_last, gate, comm_state = transport.exchange_rows(
-            w_blk, comm_state, keys)
-        decoded = transport._unflatten(gather_rows(new_last))  # [N, ...]
-        gate_full = gather_rows(gate)
-        if transport.config.on_silence == "drop":
-            mask = edge_delivery(gate_full, link, rows(nbr_idx))
-        else:
-            ever_full = gather_rows(comm_state.ever_sent)
-            mask = edge_delivery(ever_full, link, rows(nbr_idx))
-        gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
-        params = aggregate_block(rows, params, gathered, mask)
-        sent_edges = jax.lax.psum(jnp.sum(gate * rows(degrees)), NODE_AXIS)
-        return (params, opt, comm_state, rng, train_loss,
-                sent_edges, sent_edges / total_edges)
-
-    # ---- dynamics variants: the process transition runs REPLICATED inside
-    # the block (its state is a global graph quantity and its coins come
-    # from the replicated rng stream), then every per-node consumer slices
-    # the realized event to its rows — the same discipline as every other
-    # randomness, so the lowering stays bit-identical to vmap.
-    if exp.bound_dyn is not None:
-        realize = _make_realize(exp)
-
-        def dyn_plain_block(params, opt, dyn_state, round_idx, rng, x_blk,
-                            y_blk):
-            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
-            rows, params, opt, rng, train_loss, link = block_prelude(
-                params, opt, round_idx, rng, x_blk, y_blk, alive=ev.alive)
-            link = link * rows(ev.live)
-            old = params
-            if strategy.kind == "server":
-                full = jax.tree.map(gather_rows, params)
-                params = aggregate_block(rows, params, full, link)
-            elif strategy.kind == "gossip":
-                full = jax.tree.map(gather_rows, params)
-                gathered = strategy.exchange(exp, full, rows(nbr_idx))
-                params = aggregate_block(rows, params, gathered, link)
-            params = _freeze_dead(params, old, rows(ev.alive))
-            return (params, opt, dyn_state, rng, train_loss,
-                    jnp.sum(ev.live))
-
-        def dyn_comm_block(params, opt, comm_state, dyn_state, round_idx,
-                           rng, x_blk, y_blk):
-            """comm_block on the realized graph: transport state rows are
-            reset/vetoed with their pod's slice of the event; bytes count
-            live outgoing edges only."""
-            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
-            rows, params, opt, rng, train_loss, link = block_prelude(
-                params, opt, round_idx, rng, x_blk, y_blk, alive=ev.alive)
-            link = link * rows(ev.live)
-            if transport.wants_rng:
-                rng, ck = jax.random.split(rng)
-                keys = rows(jax.random.split(ck, n))
-            else:
-                keys = jnp.zeros((per_pod, 2), jnp.uint32)
-            comm_state = transport.reset_rows(comm_state, rows(ev.rejoined))
-            w_blk, _ = tree_flatten_stacked(params)
-            new_last, gate, comm_state = transport.exchange_rows(
-                w_blk, comm_state, keys, send_mask=rows(ev.alive))
-            decoded = transport._unflatten(gather_rows(new_last))  # [N, ...]
-            gate_full = gather_rows(gate)
-            if transport.config.on_silence == "drop":
-                mask = edge_delivery(gate_full, link, rows(nbr_idx))
-            else:
-                ever_full = gather_rows(comm_state.ever_sent)
-                mask = edge_delivery(ever_full, link, rows(nbr_idx))
-            gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
-            new_params = aggregate_block(rows, params, gathered, mask)
-            params = _freeze_dead(new_params, params, rows(ev.alive))
-            live_deg = jnp.sum(ev.live, axis=1)  # [N], replicated
-            live_total = jnp.sum(ev.live)
-            sent_edges = jax.lax.psum(jnp.sum(gate * rows(live_deg)),
-                                      NODE_AXIS)
-            trig = sent_edges / jnp.maximum(live_total, 1.0)
-            return (params, opt, comm_state, dyn_state, rng, train_loss,
-                    sent_edges, trig, live_total)
-    else:
-        dyn_plain_block = dyn_comm_block = None
+        return PodContext(rows=rows, gather=gather)
 
     shard = P(NODE_AXIS)
     rep = P()
-    if transport is None:
-        if exp.bound_dyn is not None:
-            sharded = shard_map(
-                dyn_plain_block, mesh,
-                in_specs=(shard, shard, rep, rep, rep, shard, shard),
-                out_specs=(shard, shard, rep, rep, rep, rep),
-                check_rep=False)
+    if has_comm:
+        comm_specs = transport.state_specs(shard, rep)
 
-            def dyn_round_fn(params, opt, dyn_state, round_idx, rng):
-                return sharded(params, opt, dyn_state, round_idx, rng,
-                               exp.x_pad, exp.y_pad)
-
-            return dyn_round_fn
+    if has_comm and has_dyn:
+        def block(params, opt, comm_state, dyn_state, round_idx, rng, x, y):
+            return _squeeze(body(make_ctx(), params, opt, comm_state,
+                                 dyn_state, round_idx, rng, x, y))
 
         sharded = shard_map(
-            plain_block, mesh,
+            block, mesh,
+            in_specs=(shard, shard, comm_specs, rep, rep, rep, shard, shard),
+            out_specs=(shard, shard, comm_specs, rep, rep, rep, rep, rep,
+                       rep),
+            check_rep=False)
+
+        def round_fn(params, opt, comm_state, dyn_state, round_idx, rng):
+            return sharded(params, opt, comm_state, dyn_state, round_idx,
+                           rng, exp.x_pad, exp.y_pad)
+    elif has_comm:
+        def block(params, opt, comm_state, round_idx, rng, x, y):
+            return _squeeze(body(make_ctx(), params, opt, comm_state, None,
+                                 round_idx, rng, x, y))
+
+        sharded = shard_map(
+            block, mesh,
+            in_specs=(shard, shard, comm_specs, rep, rep, shard, shard),
+            out_specs=(shard, shard, comm_specs, rep, rep, rep, rep),
+            check_rep=False)
+
+        def round_fn(params, opt, comm_state, round_idx, rng):
+            return sharded(params, opt, comm_state, round_idx, rng,
+                           exp.x_pad, exp.y_pad)
+    elif has_dyn:
+        def block(params, opt, dyn_state, round_idx, rng, x, y):
+            return _squeeze(body(make_ctx(), params, opt, None, dyn_state,
+                                 round_idx, rng, x, y))
+
+        sharded = shard_map(
+            block, mesh,
+            in_specs=(shard, shard, rep, rep, rep, shard, shard),
+            out_specs=(shard, shard, rep, rep, rep, rep),
+            check_rep=False)
+
+        def round_fn(params, opt, dyn_state, round_idx, rng):
+            return sharded(params, opt, dyn_state, round_idx, rng,
+                           exp.x_pad, exp.y_pad)
+    else:
+        def block(params, opt, round_idx, rng, x, y):
+            return _squeeze(body(make_ctx(), params, opt, None, None,
+                                 round_idx, rng, x, y))
+
+        sharded = shard_map(
+            block, mesh,
             in_specs=(shard, shard, rep, rep, shard, shard),
             out_specs=(shard, shard, rep, rep),
             check_rep=False)
@@ -640,30 +562,4 @@ def _build_shardmap_round(exp):
         def round_fn(params, opt, round_idx, rng):
             return sharded(params, opt, round_idx, rng, exp.x_pad, exp.y_pad)
 
-        return round_fn
-
-    if exp.bound_dyn is not None:
-        sharded = shard_map(
-            dyn_comm_block, mesh,
-            in_specs=(shard, shard, shard, rep, rep, rep, shard, shard),
-            out_specs=(shard, shard, shard, rep, rep, rep, rep, rep, rep),
-            check_rep=False)
-
-        def dyn_comm_round_fn(params, opt, comm_state, dyn_state, round_idx,
-                              rng):
-            return sharded(params, opt, comm_state, dyn_state, round_idx,
-                           rng, exp.x_pad, exp.y_pad)
-
-        return dyn_comm_round_fn
-
-    sharded = shard_map(
-        comm_block, mesh,
-        in_specs=(shard, shard, shard, rep, rep, shard, shard),
-        out_specs=(shard, shard, shard, rep, rep, rep, rep),
-        check_rep=False)
-
-    def comm_round_fn(params, opt, comm_state, round_idx, rng):
-        return sharded(params, opt, comm_state, round_idx, rng,
-                       exp.x_pad, exp.y_pad)
-
-    return comm_round_fn
+    return round_fn

@@ -17,10 +17,15 @@ behind one object:
   * `comm`     — optional `repro.comm.CommConfig`: codecs, event triggers,
     per-edge state, exact bytes-on-wire accounting.  The per-node or
     per-edge transport is selected from the config and the strategy's
-    capability — never by caller branching;
+    declared :class:`~repro.engine.Capabilities` — never by caller
+    branching — and every transport runs on every backend;
   * `backend`  — "vmap" (one jitted program over the stacked node axis) or
     "shard_map" (the same program over the "pod" mesh axis, one block of
     nodes per pod; bit-identical to vmap, see engine.backends);
+  * `wire`     — what the shard_map exchange gathers: "encoded" (default —
+    the codec payload crosses the pod interconnect; every pod decodes the
+    same bytes) or "decoded" (the reconstructed fp32 rows — the small-N
+    oracle).  Bit-identical by construction; a no-op under vmap;
   * `schedule` — rounds / eval cadence / execution mode: "fused" compiles
     the WHOLE schedule (K rounds + gated evals) into one `lax.scan` program
     dispatched once, "loop" dispatches one XLA call per round (the legacy
@@ -29,9 +34,7 @@ behind one object:
 
 Mutable run state (params, optimizer and transport state, rng, byte
 accounting) lives on the instance so `run()` can be called repeatedly and
-metrics continue where the last call stopped, matching the old
-`DFLSimulator` contract that `repro.fl.simulator` now shims onto this
-class.
+metrics continue where the last call stopped.
 """
 from __future__ import annotations
 
@@ -42,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, EdgeGossipTransport, GossipTransport
+from repro.comm import WIRES, CommConfig, EdgeGossipTransport, GossipTransport
 from repro.core.virtual_teacher import make_loss_fn
 from repro.data.allocation import pad_node_datasets
 from repro.data.pipeline import Batcher
@@ -166,12 +169,16 @@ class Experiment:
 
     def __init__(self, world: World, method: str = "decdiff+vt", *,
                  comm: Optional[CommConfig] = None, backend: str = "vmap",
+                 wire: str = "encoded",
                  schedule: Optional[Schedule] = None,
                  train: Optional[TrainConfig] = None, mesh=None,
                  **train_overrides):
         if backend not in backends.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"available: {backends.BACKENDS}")
+        if wire not in WIRES:
+            raise ValueError(f"unknown wire {wire!r}; available: {WIRES}")
+        self.wire = wire
         self.method: MethodSpec = get_method(method)
         self.strategy = self.method.strategy
         self.world = world
@@ -255,10 +262,14 @@ class Experiment:
         self._comm_rounds = 0
         self.trig_history: List[float] = []  # per-round triggered fraction
         if comm is not None:
-            if not self.strategy.supports_transport:
+            if not self.strategy.capabilities.transport:
+                from repro.engine.strategies import _REGISTRY
+                roster = sorted(m for m, s in _REGISTRY.items()
+                                if s.strategy.capabilities.transport)
                 raise ValueError(
                     f"comm transport models neighbour model-gossip only; "
-                    f"method {method!r} is unsupported")
+                    f"method {method!r} is unsupported "
+                    f"(transport-capable methods: {roster})")
             if comm.use_per_edge:
                 self.transport = EdgeGossipTransport(
                     comm, self.params, topo.neighbor_idx, topo.neighbor_mask)

@@ -17,11 +17,18 @@ three hooks:
     consuming :mod:`repro.core.aggregation` / :mod:`repro.core.decdiff`
     through one interface.
 
-Capabilities replace caller branching: ``kind`` ("gossip" | "server" |
-"none") tells the engine whether neighbours are exchanged at all,
-``grad_exchange`` opts into the CFA-GE second phase, and
-``supports_transport`` is derived — the engine selects the per-node or
-per-edge transport from the `CommConfig`, never from the method name.
+Capabilities replace caller branching: every strategy carries ONE frozen
+:class:`Capabilities` record — ``kind`` ("gossip" | "server" | "none")
+tells the engine whether neighbours are exchanged at all, ``grad_exchange``
+opts into the CFA-GE second phase, and ``transport`` is derived — the
+engine selects the per-node or per-edge transport from the `CommConfig`,
+never from the method name, and lowers every capability combination to
+every backend (there are no backend-specific capabilities).  The record is
+validated once, at :func:`register_method` time, so a strategy whose
+declared capabilities are inconsistent fails at registration with the
+available roster in the message, not inside a jitted round.  The legacy
+``kind`` / ``grad_exchange`` / ``supports_transport`` attributes remain as
+read-only views of the record.
 
 A *method* (what users name in ``Experiment(method=...)``) is a
 :class:`MethodSpec`: a strategy plus the loss ("ce" | "vt") and the init
@@ -47,6 +54,42 @@ from repro.core.aggregation import (
 )
 from repro.core.decdiff import decdiff_aggregate_stacked
 
+KINDS = ("gossip", "server", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a strategy's communication step IS — declared once, validated at
+    :func:`register_method` time, and the ONLY thing backend lowering reads.
+
+    kind: "gossip" — aggregate over delivered neighbour models;
+          "server" — global aggregation over all nodes (FedAvg star);
+          "none"   — no aggregation (isolation).
+    grad_exchange: CFA-GE second phase — neighbours evaluate our aggregated
+      model on their data and we descend along their weighted gradients.
+      Only meaningful on gossip strategies (the phase walks the neighbour
+      table).
+    """
+
+    kind: str = "gossip"
+    grad_exchange: bool = False
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"Capabilities.kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        if self.grad_exchange and self.kind != "gossip":
+            raise ValueError(
+                f"grad_exchange walks the neighbour table, so it requires "
+                f"kind='gossip', got kind={self.kind!r}")
+
+    @property
+    def transport(self) -> bool:
+        """Can the neighbour exchange ride the repro.comm gossip transport?
+        True exactly for plain model-gossip: transport payload state models
+        *model* traffic, not CFA-GE's extra gradient legs or FedAvg's star."""
+        return self.kind == "gossip" and not self.grad_exchange
+
 
 class AggregationStrategy:
     """Base strategy: padded-neighbour gather exchange, abstract aggregate.
@@ -54,24 +97,28 @@ class AggregationStrategy:
     Subclass and override :meth:`aggregate` (and optionally
     :meth:`init_state` / :meth:`exchange`); instances are stateless —
     everything per-experiment lives in the ``state`` pytree returned by
-    ``init_state`` and in the experiment itself.
+    ``init_state`` and in the experiment itself.  Declare a non-default
+    communication shape by setting the ``capabilities`` class attribute to
+    a :class:`Capabilities` record; ``kind`` / ``grad_exchange`` /
+    ``supports_transport`` are read-only views of it.
     """
 
     name: str = "base"
-    #: "gossip" — aggregate over delivered neighbour models (transportable);
-    #: "server" — global aggregation over all nodes (FedAvg star);
-    #: "none"   — no aggregation (isolation).
-    kind: str = "gossip"
-    #: CFA-GE second phase: neighbours evaluate our aggregated model on
-    #: their data and we descend along their weighted gradients.
-    grad_exchange: bool = False
+    #: the declared communication shape; replaced wholesale in subclasses
+    #: (never mutated — the record is frozen).
+    capabilities: Capabilities = Capabilities()
+
+    @property
+    def kind(self) -> str:
+        return self.capabilities.kind
+
+    @property
+    def grad_exchange(self) -> bool:
+        return self.capabilities.grad_exchange
 
     @property
     def supports_transport(self) -> bool:
-        """Can the neighbour exchange ride the repro.comm gossip transport?
-        True exactly for plain model-gossip: per-edge payload state models
-        *model* traffic, not CFA-GE's extra gradient legs or FedAvg's star."""
-        return self.kind == "gossip" and not self.grad_exchange
+        return self.capabilities.transport
 
     # ---------------------------------------------------------------- hooks
     def init_state(self, exp) -> Dict[str, jnp.ndarray]:
@@ -102,7 +149,7 @@ class IsolationStrategy(AggregationStrategy):
     """ISOL baseline: never communicate, keep the local model."""
 
     name = "isol"
-    kind = "none"
+    capabilities = Capabilities(kind="none")
 
     def aggregate(self, exp, state, params, gathered, mask):
         del state, gathered, mask
@@ -111,14 +158,18 @@ class IsolationStrategy(AggregationStrategy):
 
 class FedAvgStrategy(AggregationStrategy):
     """Server-side FedAvg over ALL clients (the partially-decentralized FED
-    baseline); `gathered` is the full stacked model set."""
+    baseline); `gathered` is the full stacked model set and `mask` the [N]
+    {0,1} live-client vector (all-ones without a dynamics process — an
+    exact no-op on the weights).  The server intersects the data-size
+    weights with liveness: a churned-out client's frozen params carry zero
+    weight instead of being averaged in as if it had trained this round."""
 
     name = "fedavg"
-    kind = "server"
+    capabilities = Capabilities(kind="server")
 
     def aggregate(self, exp, state, params, gathered, mask):
-        del mask
-        avg = fedavg_aggregate(gathered, state["counts"])
+        counts = state["counts"] if mask is None else state["counts"] * mask
+        avg = fedavg_aggregate(gathered, counts)
         return jax.tree.map(
             lambda a, p: jnp.broadcast_to(
                 a[None], (p.shape[0],) + a.shape).astype(p.dtype),
@@ -159,7 +210,7 @@ class CFAGEStrategy(CFAStrategy):
     set — doubling communication twice over, the paper's efficiency foil."""
 
     name = "cfa"  # the aggregation IS Eq. 9; the exchange capability differs
-    grad_exchange = True
+    capabilities = Capabilities(grad_exchange=True)
 
 
 class DecDiffStrategy(AggregationStrategy):
@@ -187,16 +238,6 @@ class MethodSpec:
     loss: str = "ce"            # "ce" | "vt" (virtual teacher, Eq. 7-8)
     common_init: bool = False   # True = coordinated init (FedAvg/DecAvg)
 
-    def legacy_dict(self) -> Dict:
-        """The pre-engine METHODS-dict rendering (kept for the deprecated
-        `repro.fl.METHODS` view; "server"/"none" were the agg names)."""
-        agg = {"gossip": self.strategy.name, "server": "server",
-               "none": "none"}[self.strategy.kind]
-        d = dict(agg=agg, loss=self.loss, common_init=self.common_init)
-        if self.strategy.grad_exchange:
-            d["grad_exchange"] = True
-        return d
-
 
 _REGISTRY: Dict[str, MethodSpec] = {}
 
@@ -211,13 +252,29 @@ def register_method(name: str, strategy: AggregationStrategy, *,
     "vt"); `common_init` coordinates the per-node initializations.
     Re-registering an existing name requires `overwrite=True` (typos should
     fail loudly; deliberate replacement is a capability).
+
+    Capability validation happens HERE, once: the strategy must carry a
+    :class:`Capabilities` record (itself internally consistent — the frozen
+    dataclass validates on construction) and may not shadow the derived
+    `kind`/`grad_exchange` views with stale class attributes, so that the
+    record the backends lower from is the one the author declared.
     """
     if not isinstance(strategy, AggregationStrategy):
         raise TypeError(f"strategy must be an AggregationStrategy instance, "
                         f"got {type(strategy).__name__}")
-    if strategy.kind not in ("gossip", "server", "none"):
-        raise ValueError(f"strategy.kind must be 'gossip', 'server' or "
-                         f"'none', got {strategy.kind!r}")
+    caps = strategy.capabilities
+    if not isinstance(caps, Capabilities):
+        raise TypeError(
+            f"method {name!r}: strategy.capabilities must be a Capabilities "
+            f"record, got {type(caps).__name__} (registered methods: "
+            f"{sorted(_REGISTRY)})")
+    if (strategy.kind, strategy.grad_exchange) != (caps.kind,
+                                                   caps.grad_exchange):
+        raise ValueError(
+            f"method {name!r}: kind/grad_exchange ({strategy.kind!r}, "
+            f"{strategy.grad_exchange}) shadow the Capabilities record "
+            f"({caps.kind!r}, {caps.grad_exchange}) — declare the shape on "
+            f"`capabilities` only (registered methods: {sorted(_REGISTRY)})")
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"method {name!r} is already registered "
                          f"(pass overwrite=True to replace it)")

@@ -1,8 +1,7 @@
-from repro.comm import CommConfig  # noqa: F401  (re-export: lives on SimulatorConfig.comm)
+from repro.comm import CommConfig  # noqa: F401  (historical re-export; tests/users import it from here)
 from repro.fl.metrics import (  # noqa: F401
     RoundMetrics,
     characteristic_time,
     comm_bytes_per_round,
 )
-from repro.fl.simulator import METHODS, DFLSimulator, SimulatorConfig  # noqa: F401
 from repro.fl.trainer import centralized_train  # noqa: F401

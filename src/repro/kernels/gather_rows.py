@@ -1,0 +1,49 @@
+"""Pallas kernel: row gather out of a stacked table.
+
+The unified exchange resolves the per-edge reverse slot map by reading, for
+every receiver row r and slot e, sender ``nbr_idx[r, e]``'s reconstruction
+at slot ``rev_slot[r, e]`` — a gather of K rows out of the [M, D] table of
+per-link references (M = N x max_deg flattened).  Done with fancy indexing
+the gather materializes its index bookkeeping per D-column; here the D axis
+streams in (M, COLS) tiles — same geometry as the dequant_avg kernels, one
+tile <= N*E*8 KiB VMEM for fp32 — and each tile is read once and scattered
+to all K output rows before the next tile lands:
+
+    out[k, d] = tbl[idx[k], d]
+
+A pure copy: no float ops, so kernel vs. XLA-gather is bitwise identical
+(pinned in tests/test_kernels.py), which is what lets the engine run it on
+every backend without perturbing the vmap oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COLS = 2048
+
+
+def _gather_rows_kernel(tbl_ref, idx_ref, out_ref):
+    # dynamic row indexing of the loaded tile: the whole column tile is in
+    # VMEM, so the gather is a register-level row permutation per tile.
+    out_ref[...] = jnp.take(tbl_ref[...], idx_ref[...], axis=0)
+
+
+def gather_rows_blocks(tbl: jnp.ndarray, idx: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """tbl [M, D] fp32, idx [K] int32 row ids -> [K, D] gathered rows."""
+    m, d = tbl.shape
+    k = idx.shape[0]
+    assert d % COLS == 0, d
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid=(d // COLS,),
+        in_specs=[
+            pl.BlockSpec((m, COLS), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, COLS), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, d), jnp.float32),
+        interpret=interpret,
+    )(tbl, idx)

@@ -142,6 +142,29 @@ def decode_attention_fused(q, k_cache, v_cache, slot_pos, pos, interpret=None):
     return out[:b]
 
 
+# ------------------------------------------------------------- gather rows
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(tbl, idx, interpret=None):
+    """Row gather `tbl[idx]` via the streaming Pallas kernel.
+
+    tbl [M, D], idx [K] int row ids -> [K, D] (tbl's dtype preserved).
+    The unified exchange's reverse-slot resolution: tbl is the flattened
+    [N*max_deg, D] per-link reference table, idx the receivers' flattened
+    (nbr, rev_slot) pairs.  A pure copy — bitwise identical to `tbl[idx]`.
+    """
+    from repro.kernels.gather_rows import COLS, gather_rows_blocks
+
+    interpret = _interpret_default() if interpret is None else interpret
+    d = tbl.shape[1]
+    pad = (-d) % COLS
+    tp = jnp.pad(tbl.astype(jnp.float32), ((0, 0), (0, pad)))
+    out = gather_rows_blocks(tp, idx.astype(jnp.int32),
+                             interpret=interpret)
+    return out[:, :d].astype(tbl.dtype)
+
+
 # ------------------------------------------------------------- neighbor avg
 
 

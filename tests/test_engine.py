@@ -1,20 +1,22 @@
-"""repro.engine contracts: the strategy registry, backend/schedule
-equivalence, and the deprecated DFLSimulator shim.
+"""repro.engine contracts: the strategy registry, the Capabilities record,
+and backend/schedule equivalence.
 
 The load-bearing pins:
 
   1. registry — unknown methods fail with the available roster in the
      message; custom strategies registered through `register_method` run
-     end-to-end through the same engine as the built-ins;
+     end-to-end through the same engine as the built-ins; inconsistent
+     capability declarations fail AT REGISTRATION, with the roster;
   2. schedule — the scan-fused runner produces bit-identical params and
      metrics to the per-round Python loop (same rng stream, same ops,
      compiled once under `lax.scan`);
-  3. backends — the shard_map lowering on the forced 4-device CPU mesh is
-     bit-identical to the vmap lowering, plain AND through the fp32/
-     threshold-0/fixed transport (the ISSUE-4 acceptance spec), AND
-     scan-fused on top;
-  4. shim — `DFLSimulator` warns DeprecationWarning and delegates to an
-     `Experiment` that reproduces it bit-for-bit.
+  3. backends — the shard_map lowering is bit-identical to the vmap
+     lowering for EVERY declared capability (plain, per-node transport,
+     per-edge adaptive transport, CFA-GE gradient exchange), on both wires
+     (encoded payload / decoded rows), single-pod here and on the forced
+     4-device mesh in tests/test_exchange_unified.py;
+  4. dynamics × server — FedAvg under churn aggregates LIVE clients only
+     (the offline-clients-frozen-params regression).
 """
 import jax
 import jax.numpy as jnp
@@ -24,6 +26,7 @@ import pytest
 from repro.comm import CommConfig
 from repro.engine import (
     AggregationStrategy,
+    Capabilities,
     Experiment,
     Schedule,
     TrainConfig,
@@ -90,6 +93,78 @@ def test_register_method_guards():
         register_method("decdiff", get_method("decdiff").strategy)
     with pytest.raises(TypeError, match="AggregationStrategy"):
         register_method("not-a-strategy", lambda: None)
+
+
+# ------------------------------------------------------------- capabilities
+
+
+def test_capabilities_record_is_frozen_and_validated():
+    caps = Capabilities()
+    assert caps.kind == "gossip" and not caps.grad_exchange
+    assert caps.transport  # plain model-gossip rides the comm transport
+    with pytest.raises(Exception):
+        caps.kind = "server"  # frozen
+    with pytest.raises(ValueError, match="kind"):
+        Capabilities(kind="peer-to-peer")
+    with pytest.raises(ValueError, match="grad_exchange"):
+        Capabilities(kind="server", grad_exchange=True)
+    # the derived transport capability across the roster
+    assert not Capabilities(kind="server").transport
+    assert not Capabilities(kind="none").transport
+    assert not Capabilities(grad_exchange=True).transport
+
+
+def test_roster_capabilities_are_consistent():
+    """Every registered strategy's legacy views delegate to its record."""
+    for name in available_methods():
+        s = get_method(name).strategy
+        caps = s.capabilities
+        assert isinstance(caps, Capabilities), name
+        assert (s.kind, s.grad_exchange, s.supports_transport) == \
+            (caps.kind, caps.grad_exchange, caps.transport), name
+    assert get_method("cfa-ge").strategy.capabilities.grad_exchange
+    assert get_method("fedavg").strategy.capabilities.kind == "server"
+    assert get_method("isol").strategy.capabilities.kind == "none"
+
+
+def test_register_method_rejects_shadowed_capabilities():
+    """A subclass that shadows the derived views with stale class attrs
+    (the pre-Capabilities declaration style) must fail at registration —
+    with the roster in the message — not silently lower the wrong path."""
+
+    class _Shadowed(AggregationStrategy):
+        name = "shadowed"
+        kind = "server"  # shadows the capabilities-delegating property
+
+        def aggregate(self, exp, state, params, gathered, mask):
+            return params
+
+    with pytest.raises(ValueError, match="shadow") as ei:
+        register_method("shadowed-test", _Shadowed())
+    assert "decdiff" in str(ei.value)  # the roster is in the message
+
+    class _NotARecord(AggregationStrategy):
+        name = "notarecord"
+        capabilities = {"kind": "gossip"}
+
+        def aggregate(self, exp, state, params, gathered, mask):
+            return params
+
+    with pytest.raises(TypeError, match="Capabilities"):
+        register_method("notarecord-test", _NotARecord())
+    assert "shadowed-test" not in _REGISTRY
+    assert "notarecord-test" not in _REGISTRY
+
+
+def test_transport_error_lists_capable_roster(tiny_world):
+    """The build-time capability error names the methods that DO support
+    the transport, so the fix is in the message."""
+    with pytest.raises(ValueError, match="model-gossip only") as ei:
+        Experiment(tiny_world, "cfa-ge", comm=CommConfig(codec="fp32"))
+    msg = str(ei.value)
+    for m in ("'decdiff'", "'decdiff+vt'", "'dechetero'", "'cfa'"):
+        assert m in msg
+    assert "'cfa-ge'" not in msg.split("transport-capable")[1]
 
 
 class _HeadroomStrategy(AggregationStrategy):
@@ -168,14 +243,74 @@ def test_schedule_and_backend_validation(tiny_world):
         Experiment(tiny_world, "decdiff+vt", warp_factor=9)
 
 
-def test_shardmap_backend_capability_gates(tiny_world):
-    """Per-edge transport state and CFA-GE are vmap-only; the shard_map
-    lowering must say so at build time, not fail inside jit."""
-    with pytest.raises(NotImplementedError, match="per-edge"):
-        Experiment(tiny_world, "decdiff+vt", backend="shard_map",
-                   comm=CommConfig(codec="int8", per_edge=True), **TINY)
-    with pytest.raises(NotImplementedError, match="vmap-only"):
-        Experiment(tiny_world, "cfa-ge", backend="shard_map", **TINY)
+def test_shardmap_lowers_every_capability(tiny_world):
+    """The configurations that historically raised at build time on the
+    sharded backend — per-edge (adaptive) transport and CFA-GE gradient
+    exchange — now lower through the unified exchange and match vmap
+    bit-for-bit (single-pod here; real 4-pod axis in
+    tests/test_exchange_unified.py)."""
+    for method, comm in (
+        ("decdiff+vt", CommConfig(codec="int8", per_edge=True,
+                                  trigger_threshold=1.0)),
+        ("dechetero", CommConfig(codec="int8", policy="adaptive",
+                                 target_trigger=0.5)),
+        ("cfa-ge", None),
+    ):
+        exps = []
+        for backend in ("vmap", "shard_map"):
+            exp = Experiment(tiny_world, method, comm=comm, backend=backend,
+                             schedule=Schedule(rounds=3, eval_every=3,
+                                               mode="loop"), **TINY)
+            exp.run()
+            exps.append(exp)
+        assert _params_equal(exps[0].params, exps[1].params), method
+        assert exps[0].comm_bytes_total == exps[1].comm_bytes_total, method
+        assert exps[0].trig_history == exps[1].trig_history, method
+
+
+def test_wire_validation_and_bit_identity(tiny_world):
+    """`wire=` must validate; the encoded-payload gather (the default) and
+    the decoded-rows oracle wire carry the same information.  Decode is
+    deterministic, so a single exchange step is bitwise identical across
+    wires (asserted at op level below); end-to-end the two builds are
+    distinct XLA programs whose fusion may differ in the last ulp, so
+    params compare at ulp tolerance while the integer-valued accounting
+    (bytes, trigger history) must match exactly."""
+    with pytest.raises(ValueError, match="unknown wire"):
+        Experiment(tiny_world, "decdiff+vt", wire="telepathy")
+
+    # op level: one exchange step, both wires, bitwise equal.
+    from repro.comm.transport import GossipTransport
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((8, 33)), jnp.float32)}
+    tr = GossipTransport(CommConfig(codec="int8", trigger_threshold=1.0),
+                         params)
+    st = tr.init_state(params)
+    st = st._replace(last_sent=jnp.asarray(
+        rng.standard_normal(st.last_sent.shape), jnp.float32))
+    key = jax.random.PRNGKey(3)
+    step = {w: jax.jit(lambda p, s, k, w=w: tr.exchange(p, s, k, wire=w))(
+        params, st, key) for w in ("encoded", "decoded")}
+    for a, b in zip(jax.tree.leaves(step["encoded"]),
+                    jax.tree.leaves(step["decoded"])):
+        assert jnp.array_equal(a, b)
+
+    comm = CommConfig(codec="int8", trigger_threshold=1.0)
+    exps = []
+    for wire in ("encoded", "decoded"):
+        exp = Experiment(tiny_world, "decdiff+vt", comm=comm,
+                         backend="shard_map", wire=wire,
+                         schedule=Schedule(rounds=3, eval_every=3,
+                                           mode="loop"),
+                         participation=0.7, **TINY)
+        exp.run()
+        exps.append(exp)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=3e-6, atol=1e-7),
+        exps[0].params, exps[1].params)
+    assert exps[0].comm_bytes_total == exps[1].comm_bytes_total
+    assert exps[0].trig_history == exps[1].trig_history
 
 
 def test_train_config_immutable_and_overridable(tiny_world):
@@ -310,30 +445,80 @@ def test_build_round_signature_matches_transport(tiny_world):
     assert len(out) == 7  # + comm_state, sent_edges, trig_frac
 
 
-# --------------------------------------------------------------- the shim
+# ------------------------------------------------ server-under-churn bugfix
 
 
-def test_dflsimulator_shim_warns_and_matches_experiment(tiny_world):
-    """The legacy front door must (a) raise DeprecationWarning, (b) be
-    bit-for-bit the Experiment it wraps, (c) keep the old attribute
-    surface (METHODS view, comm accounting)."""
-    from repro.fl import DFLSimulator, METHODS, SimulatorConfig
+def _node0_dead():
+    """A deterministic process: node 0 is offline every round (never having
+    been alive, nothing ever 'rejoins').  Minimal churn fixture for the
+    FedAvg liveness regression."""
+    from repro.dynamics import GraphEvent, GraphProcess
 
-    cfg = SimulatorConfig(method="decdiff+vt", rounds=3, eval_every=2,
-                          comm=CommConfig(codec="fp32"), **TINY)
-    with pytest.deprecated_call(match="DFLSimulator is deprecated"):
-        sim = DFLSimulator(tiny_world.model, tiny_world.topo, tiny_world.xs,
-                           tiny_world.ys, tiny_world.x_test,
-                           tiny_world.y_test, cfg)
-    hist = sim.run()
-    exp = Experiment(tiny_world, "decdiff+vt", comm=CommConfig(codec="fp32"),
-                     schedule=Schedule(rounds=3, eval_every=2, mode="loop"),
+    class _P(GraphProcess):
+        name = "node0-dead"
+        needs_rng = False
+
+        def make_step(self, topo):
+            idx = jnp.asarray(np.maximum(topo.neighbor_idx, 0))
+            valid = jnp.asarray(topo.neighbor_mask.astype(np.float32))
+            n = topo.num_nodes
+            alive = jnp.ones((n,), jnp.float32).at[0].set(0.0)
+            live = valid * alive[:, None] * alive[idx]
+            zeros = jnp.zeros((n,), jnp.float32)
+
+            def step(state, round_idx, key):
+                del round_idx, key
+                return state, GraphEvent(live=live, alive=alive,
+                                         rejoined=zeros)
+
+            return step
+
+    return _P()
+
+
+def test_fedavg_under_churn_averages_live_clients_only(tiny_world):
+    """The regression: a churned-out client's frozen params must carry ZERO
+    weight in the server average.  fedavg uses common init, so isolating
+    the bug is exact: run the same world with node 0 permanently offline,
+    recover the post-training pre-aggregation models from an identically-
+    seeded no-aggregation run (same init keys, same rng stream through
+    local training), and check the engine's round equals the data-size-
+    weighted average over the LIVE clients — and NOT the buggy all-clients
+    average that would drag in node 0's never-trained init."""
+    import dataclasses as _dc
+
+    from repro.core.aggregation import fedavg_aggregate
+
+    world = _dc.replace(tiny_world, dynamics=_node0_dead())
+    exp = Experiment(world, "fedavg",
+                     schedule=Schedule(rounds=1, eval_every=1, mode="loop"),
                      **TINY)
-    eh = exp.run()
-    assert _params_equal(sim.params, exp.params)
-    assert sim.comm_bytes_total == exp.comm_bytes_total
-    assert [m.round for m in hist] == [m.round for m in eh]
-    # legacy surface intact
-    assert sim.spec == {"agg": "decdiff", "loss": "vt", "common_init": False}
-    assert METHODS["cfa-ge"]["grad_exchange"] is True
-    assert METHODS["fedavg"]["agg"] == "server"
+    counts = np.asarray(exp.counts, np.float32)
+    exp.run()
+
+    # the trained-but-unaggregated models, via a common-init isolation twin
+    # (identical init keys and rng stream up to the aggregation step)
+    name = "isol-coordinated-test"
+    register_method(name, get_method("isol").strategy, common_init=True)
+    try:
+        twin = Experiment(_dc.replace(tiny_world, dynamics=_node0_dead()),
+                          name,
+                          schedule=Schedule(rounds=1, eval_every=1,
+                                            mode="loop"), **TINY)
+        p0 = jax.tree.map(np.asarray, twin.params)
+        twin.run()
+    finally:
+        _REGISTRY.pop(name, None)
+
+    alive = np.asarray([0.0, 1.0, 1.0, 1.0], np.float32)
+    want_live = fedavg_aggregate(twin.params, jnp.asarray(counts * alive))
+    buggy = fedavg_aggregate(twin.params, jnp.asarray(counts))
+    got = jax.tree.map(np.asarray, exp.params)
+    for g, w, b, init in zip(jax.tree.leaves(got),
+                             jax.tree.leaves(want_live),
+                             jax.tree.leaves(buggy),
+                             jax.tree.leaves(p0)):
+        for i in (1, 2, 3):  # live clients hold the live-only average
+            assert np.array_equal(g[i], np.asarray(w))
+            assert not np.array_equal(g[i], np.asarray(b))
+        assert np.array_equal(g[0], init[0])  # the dead client froze

@@ -236,3 +236,42 @@ def test_decode_attention_ref_matches_model_layer():
     ref_out = linear(ref.reshape(b, 1, cfg.q_dim).astype(x.dtype), p["wo"])
     np.testing.assert_allclose(np.asarray(out_model), np.asarray(ref_out),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gather_rows — exchange receiver-row gather (cross-pod reverse-slot path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,d", [(8, 8, 16), (24, 96, 40), (16, 5, 2048), (12, 48, 3000)])
+def test_gather_rows_matches_fancy_indexing(m, k, d):
+    from repro.kernels.ops import gather_rows
+
+    rng = np.random.default_rng(7)
+    tbl = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, m, size=(k,)), jnp.int32)
+    out = gather_rows(tbl, idx, interpret=True)
+    ref = tbl[idx]
+    assert out.dtype == tbl.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gather_rows_reverse_slot_roundtrip():
+    """Gathering rev-slot indices out of a flattened [N*E, D] table reproduces
+    the dense _swap_layout on a symmetric neighbour layout."""
+    from repro.comm import CommConfig
+    from repro.comm.transport import EdgeGossipTransport
+    from repro.graphs.topology import make_topology
+    from repro.kernels.ops import gather_rows
+
+    topo = make_topology("ring", n=6)
+    d = 10
+    params = {"w": jnp.zeros((topo.num_nodes, d), jnp.float32)}
+    tr = EdgeGossipTransport(CommConfig(codec="int8"), params,
+                             topo.neighbor_idx, topo.neighbor_mask)
+    n, e = tr.n, tr.e
+    rng = np.random.default_rng(3)
+    tbl = jnp.asarray(rng.standard_normal((n, e, d)), jnp.float32)
+    flat_idx = (tr.nbr_idx * e + tr.rev_slot).reshape(-1).astype(jnp.int32)
+    out = gather_rows(tbl.reshape(n * e, d), flat_idx, interpret=True).reshape(n, e, d)
+    ref = tbl[tr.nbr_idx, tr.rev_slot]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
