@@ -39,6 +39,22 @@ def main() -> None:
     record("engine_runner", t0,
            f"scan-fused {eng['fused_speedup_vmap']:.2f}x vs per-round loop")
 
+    # --- node-axis scaling (dense vs sparse layout) ---------------------
+    from benchmarks import bench_scale
+
+    t0 = time.time()
+    # the reduced lane runs the smoke sweep (scale_smoke artifact) so a
+    # down-scaled pass never clobbers the committed BENCH_scale.json;
+    # --full refreshes the real artifact + BENCH verdict.
+    sc = bench_scale.run(smoke=not args.full, verbose=False)
+    sparse_rows = [r for r in sc["rows"]
+                   if r["layout"] == "sparse" and "rounds_per_sec" in r]
+    top = max(sparse_rows, key=lambda r: r["nodes"])
+    record("scale", t0,
+           f"sparse n={top['nodes']} {top['rounds_per_sec']:.2f} rounds/s; "
+           f"builder n={sc['builder']['nodes']} "
+           f"{sc['builder']['wall_s']:.1f}s")
+
     # --- dynamics suite (time-varying topologies) -----------------------
     from benchmarks import bench_dynamics
 

@@ -104,11 +104,14 @@ class PodContext(NamedTuple):
                block (identity when the caller holds all rows);
     ``gather`` maps the caller's [R, ...] block to the full [N, ...] axis
                (the engine's tiled all_gather over the pod mesh axis;
-               identity on the dense path).
+               identity on the dense path);
+    ``pod``    the caller's block index along the pod mesh axis (a traced
+               scalar under shard_map; None on the single-block path).
     """
 
     rows: Callable
     gather: Callable
+    pod: Optional[jnp.ndarray] = None
 
 
 def _identity(a):

@@ -78,6 +78,8 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import DENSE_CTX, EdgeGossipTransport, PodContext
 from repro.comm.trigger import edge_delivery
 from repro.dist.sharding import NODE_AXIS
+from repro.engine.neighborhood import DenseNeighborhood, SparseNeighborhood
+from repro.utils.pytree import tree_flatten_stacked
 
 BACKENDS = ("vmap", "shard_map")
 
@@ -273,16 +275,35 @@ def _make_round_body(exp, *, loss_reduce):
     transport = exp.transport
     per_edge = isinstance(transport, EdgeGossipTransport)
     wire = exp.wire
-    nbr_idx, nbr_valid = exp.nbr_idx, exp.nbr_valid
+    nbr_idx, nbr_valid, nbr_weight = exp.nbr_idx, exp.nbr_valid, exp.nbr_weight
     counts = exp.counts
+    n = exp.n
     has_dyn = exp.bound_dyn is not None
     realize = _make_realize(exp) if has_dyn else None
-    delivery_mask = _make_delivery_mask(exp)
+    sparse = exp.layout == "sparse"
+    plan = exp.sparse_plan if sparse else None
+    # Gossip aggregation lowers to the strategy's flat form whenever one is
+    # declared: one weighted neighbour reduce over a Neighborhood view, the
+    # SAME code on both layouts (the dense view is the small-N oracle for
+    # the sparse one, so the dense lowering must go through it too).  The
+    # per-edge transport also lowers to it — its per-link caches cannot be
+    # a single [N, D] table, so the Neighborhood is built over the
+    # transport's pre-gathered panel instead (same kernel, same bits; this
+    # is what keeps per-edge fp32/thr0 bit-exact vs the per-node round).
+    # The padded-gather form remains only for strategies without a flat
+    # form.
+    use_flat = (caps.kind == "gossip"
+                and strategy.flat_aggregate is not None)
+    if sparse:
+        degrees = plan.degrees
+        total_edges = jnp.float32(plan.num_directed)
+        delivery_mask = None
+    else:
+        delivery_mask = _make_delivery_mask(exp)
+        degrees = jnp.sum(nbr_valid, axis=1)
+        total_edges = jnp.sum(degrees)  # directed edge count
     if caps.grad_exchange:
         gradient_exchange = _make_gradient_exchange(exp)
-
-    degrees = jnp.sum(nbr_valid, axis=1)
-    total_edges = jnp.sum(degrees)  # directed edge count
 
     def aggregate(rows, params, gathered, mask):
         state = (jax.tree.map(rows, agg_state) if caps.kind == "gossip"
@@ -307,11 +328,44 @@ def _make_round_body(exp, *, loss_reduce):
             params, opt, round_idx, rng, alive=alive)
 
         # -- exogenous link failures ∩ the live graph ----------------------
+        # The split happens unconditionally on both layouts so the rng
+        # stream stays aligned; the DRAWS differ by layout (dense draws the
+        # [N, max_deg] panel, sparse one uniform per directed edge), which
+        # is why oracle equivalence is stated at participation == 1.0 —
+        # there, neither layout draws at all.
         rng, sub = jax.random.split(rng)
-        link_full = delivery_mask(sub)
-        if has_dyn:
-            link_full = link_full * ev.live
+        if sparse:
+            link_full = None
+            link_u = (jax.random.uniform(sub, (plan.num_directed,))
+                      if cfg.participation < 1.0 else None)
+        else:
+            link_u = None
+            link_full = delivery_mask(sub)
+            if has_dyn:
+                link_full = link_full * ev.live
         old_params = params
+
+        def flat_gossip(params, gate_vec, table_mat=None):
+            """The flat-form gossip update: flatten the block's models,
+            build the layout's Neighborhood over the full [N, D] table
+            (gathered here unless the transport already decoded one), and
+            run the strategy's flat aggregate.  `gate_vec` [N] {0,1} is the
+            senders' broadcast gate."""
+            local_mat, unflatten = tree_flatten_stacked(params)
+            if table_mat is None:
+                table_mat = ctx.gather(local_mat)
+            if sparse:
+                pod = ctx.pod if ctx.pod is not None else jnp.int32(0)
+                nb = SparseNeighborhood(plan, pod, table_mat, local_mat,
+                                        unflatten, gate_vec, link_u,
+                                        cfg.participation)
+            else:
+                w = rows(nbr_weight) * edge_delivery(
+                    gate_vec, rows(link_full), rows(nbr_idx))
+                nb = DenseNeighborhood(table_mat, rows(nbr_idx), w,
+                                       local_mat, unflatten)
+            state = jax.tree.map(rows, agg_state)
+            return strategy.flat_aggregate(exp, state, nb)
 
         # -- the exchange + aggregation, by declared capability ------------
         sent_edges = trig = new_comm = None
@@ -324,9 +378,13 @@ def _make_round_body(exp, *, loss_reduce):
                 full = jax.tree.map(ctx.gather, params)
                 params = aggregate(rows, params, full, alive)
             elif caps.kind == "gossip":
-                full = jax.tree.map(ctx.gather, params)
-                gathered = strategy.exchange(exp, full, rows(nbr_idx))
-                params = aggregate(rows, params, gathered, rows(link_full))
+                if use_flat:
+                    params = flat_gossip(params, jnp.ones((n,), jnp.float32))
+                else:
+                    full = jax.tree.map(ctx.gather, params)
+                    gathered = strategy.exchange(exp, full, rows(nbr_idx))
+                    params = aggregate(rows, params, gathered,
+                                       rows(link_full))
                 if caps.grad_exchange:
                     rng, sub = jax.random.split(rng)
                     params = gradient_exchange(rows, params, rows(link_full),
@@ -351,7 +409,23 @@ def _make_round_body(exp, *, loss_reduce):
             gathered, mask, gate_full, new_comm = transport.exchange(
                 params, comm_state, link_full, ck, live=live, reset=reset,
                 ctx=ctx, wire=wire)
-            params = aggregate(rows, params, gathered, mask)
+            if use_flat:
+                # flat form over the transport's pre-gathered per-link
+                # panel (no single [N, D] table exists: slot models are
+                # per-link stale caches), composed weights ω·|D|·mask —
+                # the same kernel reduce as the per-node path, so fp32/thr0
+                # stays bit-exact against it.
+                local_mat, unflatten = tree_flatten_stacked(params)
+                panel = jnp.concatenate(
+                    [l.reshape(l.shape[0], l.shape[1], -1)
+                      .astype(jnp.float32)
+                     for l in jax.tree.leaves(gathered)], axis=2)
+                nb = DenseNeighborhood(None, None, rows(nbr_weight) * mask,
+                                       local_mat, unflatten, panel=panel)
+                params = strategy.flat_aggregate(
+                    exp, jax.tree.map(rows, agg_state), nb)
+            else:
+                params = aggregate(rows, params, gathered, mask)
             # unicast accounting: one payload per FIRED edge (a silent edge
             # of an otherwise-sending node costs nothing); failed links
             # still burn the sender's bytes.
@@ -386,13 +460,18 @@ def _make_round_body(exp, *, loss_reduce):
             # still the zero bootstrap reference); "drop" masks any silent
             # node like a failed link.
             if transport.config.on_silence == "drop":
-                mask = edge_delivery(gate_full, rows(link_full),
-                                     rows(nbr_idx))
+                gate_vec = gate_full
             else:
-                mask = edge_delivery(new_comm.ever_sent, rows(link_full),
+                gate_vec = new_comm.ever_sent
+            if use_flat:
+                params = flat_gossip(
+                    params, gate_vec,
+                    table_mat=tree_flatten_stacked(decoded)[0])
+            else:
+                mask = edge_delivery(gate_vec, rows(link_full),
                                      rows(nbr_idx))
-            gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
-            params = aggregate(rows, params, gathered, mask)
+                gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
+                params = aggregate(rows, params, gathered, mask)
             # broadcast accounting: a transmitting node pays one payload
             # per outgoing edge — its LIVE outgoing edges under dynamics (a
             # non-existent link carries nothing); failed links still burn
@@ -490,7 +569,8 @@ def _build_shardmap_round(exp):
     body = _make_round_body(exp, loss_reduce=pmean)
 
     def make_ctx():
-        i0 = jax.lax.axis_index(NODE_AXIS) * per_pod
+        pod = jax.lax.axis_index(NODE_AXIS)
+        i0 = pod * per_pod
 
         def rows(a):
             return jax.lax.dynamic_slice_in_dim(a, i0, per_pod, axis=0)
@@ -498,7 +578,7 @@ def _build_shardmap_round(exp):
         def gather(a):
             return jax.lax.all_gather(a, NODE_AXIS, axis=0, tiled=True)
 
-        return PodContext(rows=rows, gather=gather)
+        return PodContext(rows=rows, gather=gather, pod=pod)
 
     shard = P(NODE_AXIS)
     rep = P()

@@ -52,14 +52,17 @@ from repro.data.pipeline import Batcher
 from repro.dist.sharding import NODE_AXIS
 from repro.dynamics import GraphProcess
 from repro.engine import backends
+from repro.engine.neighborhood import build_sparse_plan
 from repro.engine.strategies import MethodSpec, get_method
 from repro.fl.metrics import RoundMetrics
 from repro.fl.trainer import make_eval_fn, make_grad_fn, make_train_step
+from repro.graphs.sparse import SparseTopology
 from repro.graphs.topology import Topology
 from repro.models.api import SmallModel
 from repro.optim.sgd import sgd_momentum
 
 SCHEDULE_MODES = ("fused", "loop")
+LAYOUTS = ("dense", "sparse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +111,12 @@ class Schedule:
 class World:
     """The physical problem: who talks to whom, over what data.
 
+    `topo` is either a dense :class:`~repro.graphs.Topology` (padded
+    [N, max_deg] layout, the small-N default) or a
+    :class:`~repro.graphs.SparseTopology` (CSR edge list — the 10^4+-node
+    layout; `Experiment` selects the matching engine automatically, see
+    `Experiment(layout=...)`).
+
     `dynamics` optionally makes "who talks to whom" time-varying: a
     :class:`repro.dynamics.GraphProcess` (edge dropout, Gilbert–Elliott
     bursty links, node churn, periodic rewiring, …) that realizes a
@@ -116,7 +125,7 @@ class World:
     docs/dynamics.md."""
 
     model: SmallModel
-    topo: Topology
+    topo: "Topology | SparseTopology"
     xs: List[np.ndarray]       # per-node train inputs
     ys: List[np.ndarray]       # per-node train labels
     x_test: np.ndarray
@@ -172,12 +181,15 @@ class Experiment:
                  wire: str = "encoded",
                  schedule: Optional[Schedule] = None,
                  train: Optional[TrainConfig] = None, mesh=None,
-                 **train_overrides):
+                 layout: Optional[str] = None, **train_overrides):
         if backend not in backends.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"available: {backends.BACKENDS}")
         if wire not in WIRES:
             raise ValueError(f"unknown wire {wire!r}; available: {WIRES}")
+        if layout is not None and layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; "
+                             f"available: {LAYOUTS}")
         self.wire = wire
         self.method: MethodSpec = get_method(method)
         self.strategy = self.method.strategy
@@ -194,6 +206,24 @@ class Experiment:
             raise ValueError(
                 f"world has {topo.num_nodes} nodes but "
                 f"{len(world.xs)}/{len(world.ys)} data shards")
+        # --- node-axis layout: dense padded [N, max_deg] (the small-N
+        # oracle) or sparse CSR edge list (the 10^4+-node engine).  The
+        # layout follows the topology type unless overridden — dense over a
+        # SparseTopology densifies it (guarded ≤4096 nodes, the oracle
+        # regime); sparse over a Topology converts it, so the same world
+        # can run both for equivalence pins.
+        if layout is None:
+            layout = "sparse" if isinstance(topo, SparseTopology) else "dense"
+        self.layout = layout
+        if layout == "dense" and isinstance(topo, SparseTopology):
+            topo = topo.to_topology()
+        elif layout == "sparse" and not isinstance(topo, SparseTopology):
+            topo = SparseTopology.from_topology(topo)
+        if layout == "sparse" and world.dynamics is not None:
+            raise ValueError(
+                "layout='sparse' does not support a dynamics process yet "
+                "(time-varying masks are defined over the dense padded "
+                "layout); run layout='dense' or drop World.dynamics")
         # --- dynamics (repro.dynamics): bind the graph process once; it may
         # augment the static layout (rewiring compiles against the family's
         # union graph), so everything below derives from the bound topo.
@@ -219,15 +249,44 @@ class Experiment:
         self.x_test = jnp.asarray(world.x_test)
         self.y_test = jnp.asarray(world.y_test.astype(np.int32))
 
-        # --- graph tensors (padded neighbour layout) ---
-        idx = topo.neighbor_idx.astype(np.int32)
-        self.nbr_idx = jnp.asarray(np.maximum(idx, 0))
-        self.nbr_valid = jnp.asarray(topo.neighbor_mask.astype(np.float32))
-        # combined ω_ij * |D_j| weights (aggregators normalize internally,
-        # which realizes p_ij = |D_j| / Σ_{N_i} |D_j| of Eqs. 4/6/9).
-        omega = topo.neighbor_weights()  # [N, D]
-        dj = counts[np.maximum(idx, 0)].astype(np.float32)
-        self.nbr_weight = jnp.asarray(omega * dj * topo.neighbor_mask)
+        # --- graph tensors (padded dense layout OR the sparse plan) ---
+        if self.layout == "sparse":
+            caps = self.strategy.capabilities
+            if caps.grad_exchange:
+                raise ValueError(
+                    f"method {method!r} needs the gradient-exchange phase, "
+                    f"which walks the dense neighbour table; run "
+                    f"layout='dense'")
+            if caps.kind == "gossip" and self.strategy.flat_aggregate is None:
+                raise ValueError(
+                    f"method {method!r}: strategy "
+                    f"{type(self.strategy).__name__} declares no "
+                    f"flat_aggregate form, so it only runs on "
+                    f"layout='dense' (see repro.engine.neighborhood)")
+            if comm is not None and comm.use_per_edge:
+                raise ValueError(
+                    "per-edge transport state lives in dense [N, max_deg] "
+                    "edge slots; layout='sparse' supports the per-node "
+                    "transport only (CommConfig(use_per_edge=False))")
+            n_pods = 1
+            if backend == "shard_map" and self.mesh is not None:
+                n_pods = int(dict(self.mesh.shape).get(NODE_AXIS, 1))
+            self.nbr_idx = None
+            self.nbr_valid = None
+            self.nbr_weight = None
+            self.sparse_plan = build_sparse_plan(topo, counts, n_pods)
+        else:
+            self.sparse_plan = None
+            idx = topo.neighbor_idx.astype(np.int32)
+            self.nbr_idx = jnp.asarray(np.maximum(idx, 0))
+            self.nbr_valid = jnp.asarray(
+                topo.neighbor_mask.astype(np.float32))
+            # combined ω_ij * |D_j| weights (aggregators normalize
+            # internally, which realizes p_ij = |D_j| / Σ_{N_i} |D_j| of
+            # Eqs. 4/6/9).
+            omega = topo.neighbor_weights()  # [N, D]
+            dj = counts[np.maximum(idx, 0)].astype(np.float32)
+            self.nbr_weight = jnp.asarray(omega * dj * topo.neighbor_mask)
 
         self.optimizer = sgd_momentum(lr=train.lr, momentum=train.momentum)
         self.loss_fn = make_loss_fn(self.method.loss, beta=train.beta)
@@ -280,7 +339,9 @@ class Experiment:
         # --- dynamics state + live-edge accounting ---
         self.dyn_state = (self.bound_dyn.state0
                           if self.bound_dyn is not None else None)
-        self._total_directed = float(topo.neighbor_mask.sum())
+        self._total_directed = (float(topo.num_directed)
+                                if self.layout == "sparse"
+                                else float(topo.neighbor_mask.sum()))
         self._live_sum = 0.0
         self._live_rounds = 0
         self.live_history: List[float] = []  # per-round live-edge fraction

@@ -107,6 +107,14 @@ class AggregationStrategy:
     #: the declared communication shape; replaced wholesale in subclasses
     #: (never mutated — the record is frozen).
     capabilities: Capabilities = Capabilities()
+    #: gossip strategies may additionally implement ``flat_aggregate(exp,
+    #: state, nb)``: the same update expressed over a Neighborhood view
+    #: (see :mod:`repro.engine.neighborhood`) — one weighted reduce over
+    #: delivered neighbours followed by per-row scalar normalization on the
+    #: flattened [R, D] model matrix.  The flat form is what both node-axis
+    #: layouts (dense oracle and sparse edge-list) lower to, so a strategy
+    #: that provides it runs at 10^4+ nodes; None means dense-layout only.
+    flat_aggregate = None
 
     @property
     def kind(self) -> str:
@@ -124,9 +132,13 @@ class AggregationStrategy:
     def init_state(self, exp) -> Dict[str, jnp.ndarray]:
         """Static aggregation tensors, leaves with leading node axis [N, ...]
         (the shard_map backend slices them per pod block).  Default: the
-        combined ω_ij·|D_j| neighbour weights and the per-node |D_i|."""
-        return {"weights": exp.nbr_weight,
-                "counts": exp.counts.astype(jnp.float32)}
+        combined ω_ij·|D_j| neighbour weights and the per-node |D_i|.  On
+        the sparse layout the padded weight panel does not exist (the plan
+        carries the edge weights); only the per-node tensors remain."""
+        state = {"counts": exp.counts.astype(jnp.float32)}
+        if exp.nbr_weight is not None:
+            state["weights"] = exp.nbr_weight
+        return state
 
     def exchange(self, exp, params, nbr_idx):
         """Neighbour exchange: stacked models -> [R, max_deg, ...] per-slot
@@ -190,6 +202,13 @@ class DecAvgStrategy(AggregationStrategy):
         return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(
             params, gathered, state["weights"], mask, state["counts"])
 
+    def flat_aggregate(self, exp, state, nb):
+        sums, tot = nb.reduce()
+        sw = state["counts"]
+        total = tot + sw
+        out = (sw / total)[:, None] * nb.local() + sums / total[:, None]
+        return nb.unflatten(out)
+
 
 class CFAStrategy(AggregationStrategy):
     """Eq. 9 consensus step (Savazzi et al.): w_i += ε Σ_j p_ij (w_j - w_i)."""
@@ -202,6 +221,15 @@ class CFAStrategy(AggregationStrategy):
 
         return jax.vmap(one, in_axes=(0, 0, 0, 0))(
             params, gathered, state["weights"], mask)
+
+    def flat_aggregate(self, exp, state, nb):
+        sums, tot = nb.reduce_delta()
+        na = nb.n_active()
+        safe = jnp.where(tot > 0, tot, 1.0)
+        eps = jnp.where(na > 0, 1.0 / jnp.maximum(na, 1.0), 0.0)
+        gate = jnp.where(tot > 0, 1.0, 0.0)
+        out = nb.local() + ((gate * eps) / safe)[:, None] * sums
+        return nb.unflatten(out)
 
 
 class CFAGEStrategy(CFAStrategy):
@@ -225,6 +253,16 @@ class DecDiffStrategy(AggregationStrategy):
             functools.partial(decdiff_aggregate_stacked, s=exp.train.s),
             in_axes=(0, 0, 0, 0),
         )(params, gathered, state["weights"], mask)
+
+    def flat_aggregate(self, exp, state, nb):
+        sums, tot = nb.reduce()
+        safe = jnp.where(tot > 0, tot, 1.0)
+        avg = sums / safe[:, None]
+        diff = avg - nb.local()
+        d = jnp.sqrt(jnp.sum(diff * diff, axis=1))
+        scale = jnp.where(tot > 0, 1.0 / (d + exp.train.s), 0.0)
+        out = nb.local() + scale[:, None] * diff
+        return nb.unflatten(out)
 
 
 # --------------------------------------------------------------- registry

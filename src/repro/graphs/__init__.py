@@ -1,4 +1,9 @@
-from repro.graphs.partition import map_graph_to_pods  # noqa: F401
+from repro.graphs.partition import map_graph_to_pods, pod_adjacency  # noqa: F401
+from repro.graphs.sparse import (  # noqa: F401
+    SPARSE_BUILDERS,
+    SparseTopology,
+    make_sparse_topology,
+)
 from repro.graphs.topology import (  # noqa: F401
     TOPOLOGY_BUILDERS,
     Topology,

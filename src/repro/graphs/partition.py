@@ -17,54 +17,63 @@ from repro.graphs.topology import Topology
 
 def map_graph_to_pods(topo: Topology, num_pods: int) -> List[List[int]]:
     """Partition graph nodes into `num_pods` balanced, connectivity-aware
-    groups.  Returns a list of node-id lists, one per pod."""
+    groups.  Returns a list of node-id lists, one per pod.
+
+    Sizes are exact ±1 (`divmod` split: the first `n % num_pods` groups get
+    one extra node), never empty — shard_map's equal-row-block layout
+    depends on it.  Each group seeds at the highest-degree unassigned node
+    (ties broken toward the lowest id) and grows by BFS; a stalled frontier
+    (disconnected remainder) fills deterministically from the lowest
+    unassigned id."""
     n = topo.num_nodes
-    if num_pods >= n:
-        return [[i] for i in range(n)] + [[] for _ in range(num_pods - n)]
-    target = -(-n // num_pods)  # ceil
+    if num_pods < 1:
+        raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+    if num_pods > n:
+        raise ValueError(
+            f"num_pods={num_pods} > num_nodes={n} would leave empty pods; "
+            "shard_map needs at least one node per pod")
+    base, rem = divmod(n, num_pods)
+    sizes = [base + 1 if g < rem else base for g in range(num_pods)]
     unassigned = set(range(n))
     groups: List[List[int]] = []
-    while unassigned:
-        # seed with the highest-degree unassigned node, grow by BFS.
-        seed = max(unassigned, key=lambda u: topo.degrees[u])
+    for size in sizes:
+        seed = max(unassigned, key=lambda u: (int(topo.degrees[u]), -u))
         group = [seed]
         unassigned.discard(seed)
         frontier = [seed]
-        while len(group) < target and frontier:
+        while len(group) < size and frontier:
             u = frontier.pop(0)
             for v in np.nonzero(topo.adjacency[u])[0]:
                 v = int(v)
-                if v in unassigned and len(group) < target:
+                if v in unassigned and len(group) < size:
                     group.append(v)
                     unassigned.discard(v)
                     frontier.append(v)
-        # if BFS stalled (disconnected remainder) take arbitrary nodes.
-        while len(group) < target and unassigned:
-            v = unassigned.pop()
+        while len(group) < size and unassigned:
+            v = min(unassigned)
+            unassigned.discard(v)
             group.append(v)
         groups.append(group)
-        if len(groups) == num_pods:
-            # dump any remainder into the last groups round-robin.
-            for k, v in enumerate(sorted(unassigned)):
-                groups[k % num_pods].append(v)
-            unassigned.clear()
-    while len(groups) < num_pods:
-        groups.append([])
+    assert not unassigned
     return groups
 
 
 def pod_adjacency(topo: Topology, groups: List[List[int]]) -> np.ndarray:
     """Quotient adjacency between pods: pods are neighbours iff any cut edge
-    connects their groups.  Edge weight = summed ω over the cut."""
+    connects their groups.  Edge weight = summed ω over the cut.
+
+    Vectorized over the edge list; `np.add.at` accumulates in the same
+    row-major edge order the old per-node loop used, so the float32 sums
+    are bit-identical."""
     p = len(groups)
     where = np.zeros(topo.num_nodes, np.int64)
     for g, nodes in enumerate(groups):
-        for u in nodes:
-            where[u] = g
+        if nodes:
+            where[np.asarray(nodes, np.int64)] = g
+    u, v = np.nonzero(topo.adjacency)
+    gu, gv = where[u], where[v]
+    cut = gu != gv
     w = np.zeros((p, p), np.float32)
-    for u in range(topo.num_nodes):
-        for v in np.nonzero(topo.adjacency[u])[0]:
-            gu, gv = where[u], where[int(v)]
-            if gu != gv:
-                w[gu, gv] += topo.weights[u, int(v)]
+    np.add.at(w, (gu[cut], gv[cut]),
+              topo.weights[u[cut], v[cut]].astype(np.float32))
     return w

@@ -77,6 +77,27 @@ def _is_connected(adj: np.ndarray) -> bool:
     return bool(seen.all())
 
 
+def _padded_neighbors(adj: np.ndarray):
+    """Vectorized padded neighbour layout from a dense {0,1} adjacency.
+
+    Returns (neighbor_idx, neighbor_mask, max_degree).  `np.nonzero` is
+    row-major, so within each row the neighbour ids come out ascending —
+    the same order the per-row Python loop produced."""
+    n = adj.shape[0]
+    degs = adj.sum(axis=1).astype(np.int64)
+    max_deg = max(int(degs.max()), 1)
+    nbr = -np.ones((n, max_deg), np.int32)
+    msk = np.zeros((n, max_deg), np.int8)
+    rows, cols = np.nonzero(adj)
+    if rows.size:
+        starts = np.zeros(n, np.int64)
+        np.cumsum(degs[:-1], out=starts[1:])
+        pos = np.arange(rows.size) - np.repeat(starts, degs)
+        nbr[rows, pos] = cols.astype(np.int32)
+        msk[rows, pos] = 1
+    return nbr, msk, max_deg
+
+
 def _from_adjacency(name: str, adj: np.ndarray,
                     weight_fn: Optional[Callable[[int, int, np.random.Generator], float]] = None,
                     rng: Optional[np.random.Generator] = None) -> Topology:
@@ -84,21 +105,19 @@ def _from_adjacency(name: str, adj: np.ndarray,
     adj = adj.astype(np.int8)
     np.fill_diagonal(adj, 0)
     adj = np.maximum(adj, adj.T)  # undirected
-    rng = rng or np.random.default_rng(0)
-    weights = np.zeros((n, n), np.float32)
-    for i in range(n):
-        for j in range(i + 1, n):
-            if adj[i, j]:
-                w = 1.0 if weight_fn is None else float(weight_fn(i, j, rng))
-                weights[i, j] = weights[j, i] = w
-    degs = adj.sum(axis=1)
-    max_deg = max(int(degs.max()), 1)
-    nbr = -np.ones((n, max_deg), np.int32)
-    msk = np.zeros((n, max_deg), np.int8)
-    for i in range(n):
-        js = np.nonzero(adj[i])[0]
-        nbr[i, : len(js)] = js
-        msk[i, : len(js)] = 1
+    if weight_fn is None:
+        weights = (adj != 0).astype(np.float32)
+    else:
+        # keep the explicit upper-triangle loop: weight_fn sees (i, j, rng)
+        # in a defined order, so vectorizing would change the rng stream.
+        rng = rng or np.random.default_rng(0)
+        weights = np.zeros((n, n), np.float32)
+        for i in range(n):
+            for j in range(i + 1, n):
+                if adj[i, j]:
+                    w = float(weight_fn(i, j, rng))
+                    weights[i, j] = weights[j, i] = w
+    nbr, msk, max_deg = _padded_neighbors(adj)
     return Topology(
         name=name,
         num_nodes=n,
@@ -133,20 +152,36 @@ def erdos_renyi(n: int, p: float = 0.2, seed: int = 0, ensure_connected: bool = 
     raise RuntimeError(f"could not sample a connected ER({n},{p}) graph")
 
 
-def barabasi_albert(n: int, m: int = 2, seed: int = 0, **kw) -> Topology:
-    """BA preferential-attachment graph (paper Fig. 1 motivating example)."""
-    if _HAVE_NX:
-        g = nx.barabasi_albert_graph(n, m, seed=seed)
-        adj = nx.to_numpy_array(g, dtype=np.int8)
-    else:  # pragma: no cover
-        r = np.random.default_rng(seed)
-        adj = np.zeros((n, n), np.int8)
-        for v in range(m + 1, n):
-            deg = adj.sum(axis=1)[:v] + 1.0
-            targets = r.choice(v, size=min(m, v), replace=False, p=deg / deg.sum())
-            for t in targets:
-                adj[v, t] = adj[t, v] = 1
-    return _from_adjacency(f"barabasi_albert(n={n},m={m})", adj, **kw)
+def barabasi_albert(n: int, m: int = 2, seed: int = 0,
+                    ensure_connected: bool = True, **kw) -> Topology:
+    """BA preferential-attachment graph (paper Fig. 1 motivating example).
+
+    The networkx builder is connected by construction; the fallback sampler
+    can leave early nodes isolated, so it gets the same seeded retry loop as
+    :func:`erdos_renyi` (attempt 0 uses `seed` itself, preserving the
+    original stream for graphs that come out connected first try).
+    """
+    for attempt in range(64):
+        s = seed + attempt * 10007
+        if _HAVE_NX:
+            g = nx.barabasi_albert_graph(n, m, seed=s)
+            adj = nx.to_numpy_array(g, dtype=np.int8)
+        else:
+            r = np.random.default_rng(s)
+            adj = np.zeros((n, n), np.int8)
+            # node m links to every seed node 0..m-1 (as in the standard
+            # construction); without this the seeds root disjoint attachment
+            # trees and m=1 graphs can never come out connected.
+            adj[m, :m] = adj[:m, m] = 1
+            for v in range(m + 1, n):
+                deg = adj.sum(axis=1)[:v] + 1.0
+                targets = r.choice(v, size=min(m, v), replace=False, p=deg / deg.sum())
+                for t in targets:
+                    adj[v, t] = adj[t, v] = 1
+        topo = _from_adjacency(f"barabasi_albert(n={n},m={m})", adj, **kw)
+        if topo.connected or not ensure_connected:
+            return topo
+    raise RuntimeError(f"could not sample a connected BA({n},{m}) graph")
 
 
 def watts_strogatz(n: int, k: int = 4, p: float = 0.1, seed: int = 0, **kw) -> Topology:

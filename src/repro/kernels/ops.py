@@ -204,6 +204,68 @@ def dequant_neighbor_avg(q, scales, weights, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_neighbor_avg(vals, w, interpret=None):
+    """Ragged neighbor reduce: per-receiver (Σ_k w·vals, Σ_k w) in one pass.
+
+    vals [B, K, D] f32 slot-padded neighbour rows (src-ascending per row,
+    garbage allowed wherever w is 0), w [B, K] f32 unnormalized gossip
+    weights (0 at padding/undelivered slots) -> (sums [B, D], tot [B]).
+
+    A ones column rides along as column D so the totals come out of the
+    same per-row contraction as the sums (a separate `jnp.sum(w)` would
+    not be bitwise K-width-invariant).  Each receiver row is contracted
+    independently inside the kernel (see `repro.kernels.segment_avg`), and
+    `lax.map` drives fixed ROWS-row chunks so the kernel traces once: the
+    result is bitwise invariant to B, chunking, and K zero-padding — the
+    dense engine at small N is therefore an exact oracle for this path.
+    """
+    from repro.kernels import segment_avg as _sa
+
+    interpret = _interpret_default() if interpret is None else interpret
+    b, k, d = vals.shape
+    v2 = jnp.concatenate([vals.astype(jnp.float32),
+                          jnp.ones((b, k, 1), jnp.float32)], axis=2)
+    v2 = jnp.pad(v2, ((0, (-b) % _sa.ROWS), (0, 0), (0, (-(d + 1)) % _sa.COLS)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, (-b) % _sa.ROWS), (0, 0)))
+    bp, dp = v2.shape[0], v2.shape[2]
+    out = jax.lax.map(
+        lambda args: _sa.segment_avg_chunk(args[0], args[1],
+                                           interpret=interpret),
+        (wp.reshape(bp // _sa.ROWS, _sa.ROWS, k),
+         v2.reshape(bp // _sa.ROWS, _sa.ROWS, k, dp)))
+    out = out.reshape(bp, dp)[:b]
+    return out[:, :d], out[:, d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_segment_neighbor_avg(q, scales, w, interpret=None):
+    """Ragged dequantize-and-reduce over int8 payload blocks.
+
+    q [B, K, D] int8 slot-padded wire payloads, scales [B, K] f32 per-slot
+    quantization scales, w [B, K] f32 gossip weights -> sums [B, D] f32,
+    Σ_k (w_k·s_k)·q_k per receiver.  Sums only: normalization totals must
+    come from `segment_neighbor_avg`'s ones-column path so their bits match
+    the f32 route (the fused w·s product here associates differently from
+    w·(s·q), so this is the fast path, not the oracle-pinned one).
+    """
+    from repro.kernels import segment_avg as _sa
+
+    interpret = _interpret_default() if interpret is None else interpret
+    b, k, d = q.shape
+    qp = jnp.pad(q.astype(jnp.int8),
+                 ((0, (-b) % _sa.ROWS), (0, 0), (0, (-d) % _sa.COLS)))
+    ws = w.astype(jnp.float32) * scales.astype(jnp.float32)
+    wsp = jnp.pad(ws, ((0, (-b) % _sa.ROWS), (0, 0)))
+    bp, dp = qp.shape[0], qp.shape[2]
+    out = jax.lax.map(
+        lambda args: _sa.dequant_segment_avg_chunk(args[0], args[1],
+                                                   interpret=interpret),
+        (wsp.reshape(bp // _sa.ROWS, _sa.ROWS, k),
+         qp.reshape(bp // _sa.ROWS, _sa.ROWS, k, dp)))
+    return out.reshape(bp, dp)[:b, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def dequant_neighbor_avg_rows(q, scales, wn, interpret=None):
     """Eq. 6 for a BLOCK of receivers over int8 comm payloads, fused.
 

@@ -140,3 +140,23 @@ def test_graph_partition_to_pods():
     assert got == list(range(20))
     w = pod_adjacency(topo, groups)
     assert w.shape == (4, 4) and (w >= 0).all() and np.allclose(w, w.T)
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(2, 60), num_pods=st.integers(1, 60),
+       seed=st.integers(0, 2 ** 16))
+def test_map_graph_to_pods_partition_property(n, num_pods, seed):
+    """Property arm of the partition pin (seeded deterministic arm lives in
+    tests/test_sparse_graphs.py): for ANY random graph and ANY pod count
+    <= n, the groups are an exact cover with +-1 balanced sizes and no
+    empty pod; counts beyond n raise rather than yielding empty pods."""
+    topo = make_topology("erdos_renyi", n=n, p=0.5, seed=seed)
+    if num_pods > n:
+        with pytest.raises(ValueError, match="empty pods"):
+            map_graph_to_pods(topo, num_pods)
+        return
+    groups = map_graph_to_pods(topo, num_pods)
+    base, rem = divmod(n, num_pods)
+    assert [len(g) for g in groups] == \
+        [base + 1 if g < rem else base for g in range(num_pods)]
+    assert sorted(x for g in groups for x in g) == list(range(n))

@@ -1,0 +1,355 @@
+"""SparseTopology: builders, CSR invariants, dense duality, and the
+partition/padded-layout satellites (no hypothesis dependency — everything
+here runs in tier-1)."""
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    SparseTopology,
+    make_sparse_topology,
+    make_topology,
+)
+from repro.graphs import topology as topology_mod
+from repro.graphs.partition import map_graph_to_pods, pod_adjacency
+from repro.graphs.sparse import (
+    _csr_connected,
+    _pair_decode,
+    sparse_barabasi_albert,
+    sparse_complete,
+    sparse_erdos_renyi,
+    sparse_grid2d,
+    sparse_ring,
+    sparse_star,
+    sparse_watts_strogatz,
+)
+
+
+def _assert_csr_invariants(st: SparseTopology):
+    """Structural contract every SparseTopology must satisfy."""
+    e = st.num_directed
+    assert st.edge_src.dtype == np.int32 and st.edge_dst.dtype == np.int32
+    assert st.edge_weight.dtype == np.float32
+    assert st.row_offsets.dtype == np.int64
+    assert st.row_offsets.shape == (st.num_nodes + 1,)
+    assert st.row_offsets[0] == 0 and st.row_offsets[-1] == e
+    assert (np.diff(st.row_offsets) >= 0).all()
+    # sorted by (dst, src): dst non-decreasing, src ascending within a row
+    assert (np.diff(st.edge_dst) >= 0).all()
+    for i in range(st.num_nodes):
+        row = st.edge_src[st.row_offsets[i]:st.row_offsets[i + 1]]
+        assert (np.diff(row) > 0).all()  # strictly ascending, no dup edges
+        assert (st.edge_dst[st.row_offsets[i]:st.row_offsets[i + 1]] == i).all()
+    # no self loops; every directed edge has its reverse with equal weight
+    assert (st.edge_src != st.edge_dst).all()
+    fwd = {(int(s), int(d)): float(w)
+           for s, d, w in zip(st.edge_src, st.edge_dst, st.edge_weight)}
+    assert len(fwd) == e
+    for (s, d), w in fwd.items():
+        assert fwd[(d, s)] == w
+
+
+SPARSE_CASES = [
+    ("erdos_renyi", dict(n=40, p=0.25, seed=3)),
+    ("barabasi_albert", dict(n=40, m=2, seed=0)),
+    ("barabasi_albert", dict(n=40, m=1, seed=1)),  # hub-heavy tree
+    ("watts_strogatz", dict(n=40, k=4, p=0.2, seed=0)),
+    ("ring", dict(n=12)),
+    ("star", dict(n=12)),
+    ("complete", dict(n=9)),
+    ("grid2d", dict(rows=3, cols=5)),
+]
+
+
+@pytest.mark.parametrize("name,kw", SPARSE_CASES,
+                         ids=[f"{n}-{i}" for i, (n, _) in enumerate(SPARSE_CASES)])
+def test_sparse_builder_invariants(name, kw):
+    st = make_sparse_topology(name, **kw)
+    _assert_csr_invariants(st)
+    assert st.connected
+    # connected flag agrees with a dense reachability check
+    assert st.connected == topology_mod._is_connected(st.to_topology().adjacency)
+
+
+def test_sparse_builders_deterministic():
+    for name, kw in SPARSE_CASES:
+        a = make_sparse_topology(name, **kw)
+        b = make_sparse_topology(name, **kw)
+        assert np.array_equal(a.edge_src, b.edge_src)
+        assert np.array_equal(a.edge_dst, b.edge_dst)
+        assert np.array_equal(a.edge_weight, b.edge_weight)
+
+
+def test_round_trip_from_dense_bitwise():
+    """from_topology -> to_topology reproduces the dense Topology bitwise,
+    including non-unit float32 weights — the property that lets the dense
+    engine act as the sparse engine's oracle."""
+    for name, kw in [("erdos_renyi", dict(n=24, p=0.3, seed=1)),
+                     ("barabasi_albert", dict(n=24, m=2, seed=0)),
+                     ("star", dict(n=16)),
+                     ("grid2d", dict(rows=4, cols=4))]:
+        topo = make_topology(
+            name, **kw, weight_fn=lambda i, j, rng: rng.uniform(0.1, 3.0))
+        st = SparseTopology.from_topology(topo)
+        _assert_csr_invariants(st)
+        assert st.num_edges == topo.num_edges
+        assert np.array_equal(st.degrees, topo.degrees)
+        back = st.to_topology()
+        assert np.array_equal(back.adjacency, topo.adjacency)
+        assert np.array_equal(back.weights, topo.weights)
+        assert np.array_equal(back.neighbor_idx, topo.neighbor_idx)
+        assert np.array_equal(back.neighbor_mask, topo.neighbor_mask)
+        assert back.max_degree == topo.max_degree
+        assert back.connected == topo.connected
+
+
+def test_sparse_dense_builders_same_structure():
+    """Sparse ring/star/complete/grid2d are deterministic families — their
+    edge sets must match the dense builders exactly."""
+    pairs = [(sparse_ring(12), make_topology("ring", n=12)),
+             (sparse_star(12), make_topology("star", n=12)),
+             (sparse_complete(8), make_topology("complete", n=8)),
+             (sparse_grid2d(3, 4), make_topology("grid2d", rows=3, cols=4))]
+    for st, topo in pairs:
+        ref = SparseTopology.from_topology(topo)
+        assert np.array_equal(st.edge_src, ref.edge_src)
+        assert np.array_equal(st.edge_dst, ref.edge_dst)
+        assert np.array_equal(st.edge_weight, ref.edge_weight)
+        assert np.array_equal(st.row_offsets, ref.row_offsets)
+
+
+def test_from_pairs_dedupe_self_loops_first_wins():
+    # pairs: (0,1) w=2, (1,0) dup w=9 (dropped, first wins), (2,2) self loop
+    # (dropped), (1,2) w=5
+    u = np.array([0, 1, 2, 1])
+    v = np.array([1, 0, 2, 2])
+    w = np.array([2.0, 9.0, 7.0, 5.0])
+    st = SparseTopology.from_pairs("t", 3, u, v, weights=w)
+    _assert_csr_invariants(st)
+    assert st.num_edges == 2 and st.num_directed == 4
+    fwd = {(int(s), int(d)): float(ww)
+           for s, d, ww in zip(st.edge_src, st.edge_dst, st.edge_weight)}
+    assert fwd == {(0, 1): 2.0, (1, 0): 2.0, (1, 2): 5.0, (2, 1): 5.0}
+
+
+def test_pair_decode_inverts_triu_enumeration():
+    for n in (2, 3, 7, 20):
+        i_ref, j_ref = np.triu_indices(n, 1)
+        codes = np.arange(n * (n - 1) // 2, dtype=np.int64)
+        i, j = _pair_decode(n, codes)
+        assert np.array_equal(i, i_ref) and np.array_equal(j, j_ref)
+
+
+def test_csr_connected_detects_components():
+    # two disjoint edges: {0,1} and {2,3}
+    st = SparseTopology.from_pairs("d", 4, np.array([0, 2]), np.array([1, 3]))
+    assert not st.connected
+    assert not _csr_connected(st.num_nodes, st.row_offsets, st.edge_src)
+    # isolated node 4 appended to a path
+    st2 = SparseTopology.from_pairs("d2", 5, np.array([0, 1, 2]),
+                                    np.array([1, 2, 3]))
+    assert not st2.connected
+    st3 = sparse_ring(5)
+    assert st3.connected
+
+
+def test_sparse_builder_error_paths():
+    with pytest.raises(ValueError, match="1 <= m < n"):
+        sparse_barabasi_albert(n=8, m=0)
+    with pytest.raises(ValueError, match="1 <= m < n"):
+        sparse_barabasi_albert(n=8, m=8)
+    with pytest.raises(ValueError, match="even 0 < k < n"):
+        sparse_watts_strogatz(n=8, k=3)
+    with pytest.raises(ValueError, match="even 0 < k < n"):
+        sparse_watts_strogatz(n=8, k=8)
+    with pytest.raises(ValueError, match="unknown sparse topology"):
+        make_sparse_topology("smallworldz", n=8)
+
+
+def test_densify_guard():
+    st = sparse_ring(4200)
+    with pytest.raises(ValueError, match="refusing to densify"):
+        st.to_topology()
+
+
+def test_sparse_er_edge_count_tracks_p():
+    """Exact G(n,p): realized edge count is Binomial(n(n-1)/2, p) — check
+    it lands within 5 sigma for a mid-size graph."""
+    n, p = 300, 0.1
+    st = sparse_erdos_renyi(n=n, p=p, seed=0, ensure_connected=False)
+    m_all = n * (n - 1) // 2
+    mean, sd = m_all * p, np.sqrt(m_all * p * (1 - p))
+    assert abs(st.num_edges - mean) < 5 * sd
+
+
+def test_sparse_ba_scale_free_tail():
+    """BA(m=2) should grow a hub: max degree well above the m=2 floor and
+    above anything an ER graph of equal density produces typically."""
+    st = sparse_barabasi_albert(n=2000, m=2, seed=0)
+    assert st.max_degree > 30
+    assert (st.degrees >= 1).all()
+
+
+# ------------------------------------------------------- satellite: fallback
+
+
+def test_ba_fallback_connected_without_networkx(monkeypatch):
+    """Regression: the non-networkx BA fallback used to leave seed nodes
+    rooting disjoint attachment trees (m=1 graphs could NEVER come out
+    connected and the retry loop exhausted its 64 attempts).  With node m
+    linked to seeds 0..m-1 the sample is connected by construction."""
+    monkeypatch.setattr(topology_mod, "_HAVE_NX", False)
+    for n, m, seed in [(8, 1, 0), (12, 1, 3), (16, 2, 0), (20, 3, 5)]:
+        topo = topology_mod.barabasi_albert(n=n, m=m, seed=seed)
+        assert topo.connected, (n, m, seed)
+        assert (topo.adjacency == topo.adjacency.T).all()
+        assert topo.adjacency.diagonal().sum() == 0
+        # node m is linked to every seed node
+        assert (topo.adjacency[m, :m] == 1).all()
+        # attachment: every node past the seeds has at least one edge
+        assert (topo.degrees >= 1).all()
+    # even without the retry loop the construction is connected
+    t = topology_mod.barabasi_albert(n=10, m=1, seed=7, ensure_connected=False)
+    assert t.connected
+
+
+# ------------------------------------------- satellite: _from_adjacency oracle
+
+
+def _padded_reference(adj):
+    """The O(N^2) per-row loop `_padded_neighbors` replaced."""
+    n = adj.shape[0]
+    degs = adj.sum(axis=1).astype(np.int64)
+    max_deg = max(int(degs.max()), 1)
+    nbr = -np.ones((n, max_deg), np.int32)
+    msk = np.zeros((n, max_deg), np.int8)
+    for i in range(n):
+        cols = np.nonzero(adj[i])[0]
+        nbr[i, :cols.size] = cols.astype(np.int32)
+        msk[i, :cols.size] = 1
+    return nbr, msk, max_deg
+
+
+def test_from_adjacency_matches_loop_reference():
+    """Golden pin: the vectorized padded layout is bit-identical to the
+    naive per-row loop, on messy input (asymmetric, self loops, isolated
+    rows) and with a weight_fn whose rng stream order must be preserved."""
+    rng = np.random.default_rng(11)
+    adj = (rng.random((23, 23)) < 0.2).astype(np.int8)
+    np.fill_diagonal(adj, 1)  # _from_adjacency must zero these
+    adj[5] = 0  # isolated-ish row (may still have in-edges symmetrized)
+    topo = topology_mod._from_adjacency(
+        "messy", adj.copy(),
+        weight_fn=lambda i, j, r: r.uniform(0.5, 2.0),
+        rng=np.random.default_rng(99))
+    sym = np.maximum(adj, adj.T).astype(np.int8)
+    np.fill_diagonal(sym, 0)
+    assert np.array_equal(topo.adjacency, sym)
+    nbr, msk, max_deg = _padded_reference(sym)
+    assert np.array_equal(topo.neighbor_idx, nbr)
+    assert np.array_equal(topo.neighbor_mask, msk)
+    assert topo.max_degree == max_deg
+    # weight stream: the upper-triangle order is part of the contract
+    r = np.random.default_rng(99)
+    ref_w = np.zeros((23, 23), np.float32)
+    for i in range(23):
+        for j in range(i + 1, 23):
+            if sym[i, j]:
+                w = float(r.uniform(0.5, 2.0))
+                ref_w[i, j] = ref_w[j, i] = w
+    assert np.array_equal(topo.weights, ref_w)
+
+
+# --------------------------------------------------- satellite: partition
+
+
+@pytest.mark.parametrize("name,kw,num_pods", [
+    ("erdos_renyi", dict(n=20, p=0.3, seed=0), 4),
+    ("erdos_renyi", dict(n=23, p=0.3, seed=1), 5),  # non-divisible
+    ("barabasi_albert", dict(n=30, m=1, seed=2), 7),  # hub-heavy tree
+    ("star", dict(n=17), 4),
+    ("ring", dict(n=9), 9),  # one node per pod
+    ("grid2d", dict(rows=4, cols=5), 3),
+])
+def test_map_graph_to_pods_exact_sizes(name, kw, num_pods):
+    """Partition property: exact +-1 group sizes in the documented order
+    (first n % p groups get the extra node), disjoint cover, no empties."""
+    topo = make_topology(name, **kw)
+    n = topo.num_nodes
+    groups = map_graph_to_pods(topo, num_pods)
+    assert len(groups) == num_pods
+    base, rem = divmod(n, num_pods)
+    assert [len(g) for g in groups] == \
+        [base + 1 if g < rem else base for g in range(num_pods)]
+    assert all(groups)  # no empty pods
+    flat = sorted(x for g in groups for x in g)
+    assert flat == list(range(n))
+
+
+def test_map_graph_to_pods_rejects_bad_counts():
+    topo = make_topology("ring", n=6)
+    with pytest.raises(ValueError, match="num_pods must be >= 1"):
+        map_graph_to_pods(topo, 0)
+    with pytest.raises(ValueError, match="empty pods"):
+        map_graph_to_pods(topo, 7)
+
+
+# ------------------------------------------ satellite: hub-heavy coverage
+
+
+def test_pod_adjacency_star_hub():
+    """Star: every cut edge touches the hub's pod; quotient weights count
+    each leaf edge once per direction."""
+    topo = make_topology("star", n=16,
+                        weight_fn=lambda i, j, rng: rng.uniform(0.1, 2.0))
+    groups = map_graph_to_pods(topo, 4)
+    w = pod_adjacency(topo, groups)
+    assert w.shape == (4, 4)
+    assert np.allclose(w, w.T)
+    assert (np.diag(w) == 0).all()
+    hub_pod = next(g for g, nodes in enumerate(groups) if 0 in nodes)
+    # all inter-pod structure goes through the hub's pod
+    off = w.copy()
+    off[hub_pod, :] = 0
+    off[:, hub_pod] = 0
+    assert (off == 0).all()
+    # total quotient weight = 2x the summed omega over cut (both directions)
+    where = np.zeros(16, np.int64)
+    for g, nodes in enumerate(groups):
+        where[nodes] = g
+    cut_w = sum(float(topo.weights[0, j]) for j in range(1, 16)
+                if where[j] != hub_pod)
+    assert np.isclose(w.sum(), 2 * cut_w)
+
+
+def test_pod_adjacency_ba_tree():
+    topo = make_topology("barabasi_albert", n=24, m=1, seed=0)
+    groups = map_graph_to_pods(topo, 6)
+    w = pod_adjacency(topo, groups)
+    assert np.allclose(w, w.T) and (np.diag(w) == 0).all()
+    # a connected graph's quotient over a partition keeps every pod reachable
+    reach = topology_mod._is_connected((w > 0).astype(np.int8))
+    assert reach
+
+
+def test_neighbor_weights_hub_rows():
+    """neighbor_weights() on hub-heavy graphs: hub row fully populated,
+    leaf rows one entry, padding exactly zero."""
+    for topo in (make_topology("star", n=10,
+                               weight_fn=lambda i, j, rng: float(10 * i + j)),
+                 make_topology("barabasi_albert", n=12, m=1, seed=1)):
+        nw = topo.neighbor_weights()
+        assert nw.shape == (topo.num_nodes, topo.max_degree)
+        assert nw.dtype == np.float32
+        for i in range(topo.num_nodes):
+            d = int(topo.degrees[i])
+            assert (nw[i, :d] > 0).all()
+            assert (nw[i, d:] == 0).all()
+            for k in range(d):
+                j = int(topo.neighbor_idx[i, k])
+                assert nw[i, k] == np.float32(topo.weights[i, j])
+    star = make_topology("star", n=10,
+                         weight_fn=lambda i, j, rng: float(10 * i + j))
+    assert star.max_degree == 9
+    # hub row carries weight w(0,j) = j for each leaf j (ascending order)
+    assert np.array_equal(star.neighbor_weights()[0],
+                          np.arange(1, 10, dtype=np.float32))
