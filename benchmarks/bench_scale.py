@@ -9,24 +9,30 @@ O(N + E) edge state and reduces degree-bucketed ragged blocks, so the node
 axis extends to 10^4 engine nodes (and 10^5-10^6 for the graph builders
 and the reduce kernel alone) on this 2-core CPU container.
 
-Three tiers, recorded in one artifact:
+Three tiers, recorded in one artifact (four with ``--dynamics``):
 
   * engine rounds/sec: a tiny-MLP gossip world (DecDiff), swept over N for
     BOTH layouts; dense stops where its padded block would not fit (the
     row records the projected bytes instead of crashing the host);
   * kernel reduce: `segment_neighbor_avg` walltime at 10^5 receivers;
-  * graph build: `sparse_barabasi_albert` walltime at 10^6 nodes.
+  * graph build: `sparse_barabasi_albert` walltime at 10^6 nodes;
+  * ``--dynamics``: the lifted sparse scenario cube at scale — DecDiff
+    through the int8+adaptive PER-EDGE transport under 20% i.i.d. edge
+    dropout at 10^4 nodes, sparse layout (the dense engine is
+    memory-walled there; at oracle sizes the two are bit-identical, see
+    tests/test_sparse_parity.py).
 
-    PYTHONPATH=src python -m benchmarks.bench_scale [--smoke]
+    PYTHONPATH=src python -m benchmarks.bench_scale [--smoke] [--dynamics]
 
-``--smoke`` runs [64, 256] nodes x both layouts (plus a downscaled kernel/
-builder tier) and writes the ``scale_smoke`` artifact only — the committed
-BENCH_scale.json is refreshed by the full bench via
+``--smoke`` runs [64, 256] nodes x both layouts (plus downscaled kernel/
+builder/dynamics tiers) and writes the ``scale_smoke`` artifact only — the
+committed BENCH_scale.json is refreshed by the full bench via
 `gen_report.write_bench_scale()`.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import resource
 import time
 
@@ -170,13 +176,56 @@ def builder_tier(n: int = 1_000_000, verbose: bool = True):
     return row
 
 
-def run(smoke: bool = False, seed: int = 0, verbose: bool = True):
+def dynamics_tier(n: int = 10_000, rounds: int = ROUNDS, seed: int = 0,
+                  verbose: bool = True):
+    """The whole lifted scenario cube in one record: `layout="sparse"` x
+    per-edge adaptive int8 transport x `EdgeDropout(p=0.2)` — the three
+    combinations the sparse engine used to reject at construction, composed,
+    at a node count the dense engine cannot reach."""
+    from repro.comm import CommConfig
+    from repro.dynamics import EdgeDropout
+    from repro.engine import Experiment, Schedule
+
+    world, st = tiny_world(n, seed)
+    world = dataclasses.replace(world, dynamics=EdgeDropout(p=0.2))
+    comm = CommConfig(codec="int8", policy="adaptive", target_trigger=0.6,
+                      per_edge=True)
+    exp = Experiment(world, "decdiff", layout="sparse", comm=comm,
+                     schedule=Schedule(rounds=rounds, eval_every=rounds,
+                                       mode="loop"),
+                     steps_per_round=1, batch_size=4, eval_batch=64,
+                     lr=0.1, seed=seed)
+    exp.run()  # compile + warmup
+    t0 = time.perf_counter()
+    exp.run()
+    wall = time.perf_counter() - t0
+    row = {"nodes": n, "edges_directed": st.num_directed,
+           "layout": "sparse", "method": "decdiff",
+           "transport": "per-edge int8 adaptive (target_trigger=0.6)",
+           "dropout_p": 0.2, "rounds": rounds,
+           "rounds_per_sec": rounds / wall, "wall_s": wall,
+           "maxrss_mb": _maxrss_mb(),
+           "live_frac_mean": float(np.mean(exp.live_history[-rounds:])),
+           "trig_frac_mean": float(np.mean(exp.trig_history[-rounds:])),
+           "comm_bytes_total": int(exp.comm_bytes_total)}
+    if verbose:
+        print(f"[dynamics n={n} sparse int8+adaptive drop=0.2] "
+              f"{row['rounds_per_sec']:.2f} rounds/s  "
+              f"(live {row['live_frac_mean']:.3f}, "
+              f"trig {row['trig_frac_mean']:.3f})", flush=True)
+    return row
+
+
+def run(smoke: bool = False, seed: int = 0, verbose: bool = True,
+        dynamics: bool = False):
     nodes = SMOKE_NODES if smoke else ENGINE_NODES
     rows = engine_sweep(nodes, ROUNDS, seed=seed, verbose=verbose)
     kernel = kernel_tier(receivers=10_000 if smoke else 100_000,
                          verbose=verbose)
     builder = builder_tier(n=100_000 if smoke else 1_000_000,
                            verbose=verbose)
+    dyn_row = (dynamics_tier(n=512 if smoke else 10_000, seed=seed,
+                             verbose=verbose) if dynamics else None)
     payload = {
         "world": {"graph": "sparse_barabasi_albert(m=2)",
                   "model": "mlp(16->32->10)", "method": "decdiff",
@@ -186,6 +235,7 @@ def run(smoke: bool = False, seed: int = 0, verbose: bool = True):
         "rows": rows,
         "kernel": kernel,
         "builder": builder,
+        "dynamics": dyn_row,
     }
     if smoke:
         # CI artifact only — the committed BENCH_scale.json is refreshed by
@@ -207,9 +257,12 @@ def main():
                     help="[64, 256] nodes x both layouts + downscaled "
                          "kernel/builder tiers; writes the scale_smoke "
                          "artifact only")
+    ap.add_argument("--dynamics", action="store_true",
+                    help="add the sparse int8+adaptive-under-dropout tier "
+                         "(10^4 nodes; 512 with --smoke)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    run(smoke=args.smoke, seed=args.seed)
+    run(smoke=args.smoke, seed=args.seed, dynamics=args.dynamics)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,8 @@ from repro.comm.transport import (  # noqa: F401
     EdgeGossipTransport,
     GossipTransport,
     PodContext,
+    SparseEdgeCommState,
+    SparseEdgeGossipTransport,
     codec_roundtrip_stacked,
 )
 from repro.comm.trigger import (  # noqa: F401

@@ -10,7 +10,7 @@ Sits between local training and aggregation.  Each round every node:
   3. receivers dequantize first and aggregate second, so DecDiff's Eq. 5-6
      semantics are untouched: the aggregator simply sees ŵ_j instead of w_j.
 
-Two transports share the codecs and that round shape:
+Three transports share the codecs and that round shape:
 
 `GossipTransport` — per-NODE state (the PR-2 broadcast model): one
 `last_sent[j]` [N, D] doubles as sender j's trigger reference AND every
@@ -32,6 +32,14 @@ one link drops), so "stale" aggregation serves genuinely per-link staleness.
 Cost: encode runs per edge, not per node, and state is max_deg x larger —
 the price of personalized links (the wire bytes are identical when all
 edges of a node fire together).
+
+`SparseEdgeGossipTransport` — the same per-edge semantics re-keyed to the
+flat `[E]` CSR edge list of a `SparseTopology`: state is O(E) not
+O(N·max_deg), there is no padding, no layout swap and no reverse-slot
+gather (a CSR edge id addresses BOTH directions of the exchange), and the
+per-edge rng stream is keyed by the same canonical directed-edge
+enumeration the dense transport's slot panel indexes — which is what makes
+the two layouts bit-identical on the same graph.
 
 The ONE exchange path (every backend, every transport)
 ------------------------------------------------------
@@ -407,6 +415,18 @@ class EdgeGossipTransport:
         self.nbr_valid = jnp.asarray(valid)
         self.rev_slot = jnp.asarray(rev)
         self.num_edges = float(valid.sum())  # directed edge count
+        # canonical CSR directed-edge id of the link (i -> j) at sender slot
+        # (i, d): receiver j's row offset plus i's position among j's senders
+        # (ascending — the padded lists are sorted, so rev IS that position).
+        # This is the exact enumeration SparseTopology sorts its edge list
+        # by, which is what lets the sparse per-edge transport consume the
+        # identical per-edge rng stream.  Padding slots alias edge 0; their
+        # keys are drawn but never gate an update.
+        deg = valid.sum(axis=1).astype(np.int64)
+        offsets = np.concatenate([np.zeros(1, np.int64), np.cumsum(deg)])
+        self.num_directed = int(deg.sum())
+        self.edge_id = jnp.asarray(
+            (offsets[np.maximum(idx, 0)] + rev).astype(np.int32))
         # the threshold an edge (re)starts from: the scalar for the fixed
         # policy, the always-send bootstrap for the adaptive one (shared by
         # init_state and reset_edges so a rejoined device re-bootstraps
@@ -565,8 +585,11 @@ class EdgeGossipTransport:
         if self.wants_rng:
             if rng is None:
                 raise ValueError(f"codec {codec.name!r} needs an rng key")
-            keys = rows(jax.random.split(rng, self.n * self.e).reshape(
-                self.n, self.e, 2))
+            # one key per CANONICAL directed edge (CSR id), not per padded
+            # slot — the sparse per-edge transport indexes the same split,
+            # so the two layouts' stochastic codecs agree bit-for-bit.
+            keys = rows(jax.random.split(
+                rng, max(self.num_directed, 1))[self.edge_id])
         else:
             keys = jnp.zeros((r, self.e, 2), jnp.uint32)
 
@@ -626,6 +649,220 @@ class EdgeGossipTransport:
             # exogenous failures still drop (a loss, not a decision).
             agg_mask = rows(link_mask * self._swap_layout(ever))
         return gathered, agg_mask, gate_full, new_state
+
+
+class SparseEdgeCommState(NamedTuple):
+    """Per-edge transport state in the flat [E] CSR edge-list layout.
+
+    Entry e is the directed link ``edge_src[e] -> edge_dst[e]`` of a
+    :class:`~repro.graphs.sparse.SparseTopology` — the dense layout's
+    `[N, max_deg]` panels with the padding removed.  All fields are
+    replicated over pods: the edge axis does not tile the node-axis pod
+    mesh (per-pod edge BANKS over the graph cut are the halo-exchange
+    follow-up tracked in ROADMAP.md)."""
+
+    last_sent: jnp.ndarray            # [E, D] per-link reconstruction ref
+    residual: Optional[jnp.ndarray]   # [E, ...] per-link EF residual
+    threshold: jnp.ndarray            # [E] per-link trigger thresholds
+    drift_ema: jnp.ndarray            # [E] per-link drift EMA (adaptive)
+    ever_delivered: jnp.ndarray       # [E] {0,1}: link ever delivered?
+
+
+class SparseEdgeGossipTransport:
+    """Per-edge transport over a flat CSR edge list — no layout swap at all.
+
+    The dense :class:`EdgeGossipTransport` keys state by (sender, slot) and
+    needs TWO index gymnastics per round: the `rev_slot` layout swap (sender
+    acks from the receiver-layout link mask) and the reverse-slot gather
+    (receivers read each sender's per-link reference).  In the CSR edge
+    list, a directed edge id is simultaneously the sender-layout AND the
+    receiver-layout address of the same link: the gate, the delivery, the
+    aggregation mask and the reconstruction reference of edge e all live at
+    position e, and receiver i's delivered neighbour models are exactly
+    `last_sent[row_offsets[i]:row_offsets[i+1]]` — the CSR row the
+    SparseNeighborhood buckets already enumerate (`WidthBucket.epos`).
+    `rev_edge` (the permutation pairing e with its opposite direction) is
+    kept for state introspection — e.g. asserting a churn reset cleared
+    BOTH directed records of a link — not for the data path.
+
+    Bit-parity with the dense twin is by construction: the per-edge drift
+    gate, the Robbins-Monro controller and the codec are the same
+    elementwise programs, the rng stream is keyed by the same canonical CSR
+    edge id, and every mask composition is a product of exact {0,1} floats.
+
+    The model rows are the only cross-pod movement (`ctx.gather` of the
+    [R, D] block); encode/decode then runs replicated over the full edge
+    axis, so the `wire` choice does not change what crosses pods here —
+    accepted for signature parity with the dense transport."""
+
+    def __init__(self, config: CommConfig, stacked_params, st):
+        from repro.graphs.sparse import rev_edge_permutation
+
+        self.config = config
+        self.codec = config.make_codec()
+        mat, self._unflatten = tree_flatten_stacked(stacked_params)
+        self.n, self.d = int(mat.shape[0]), int(mat.shape[1])
+        self.e_dir = int(st.num_directed)
+        self.payload_bytes = self.codec.payload_bytes_for(self.d)
+        self.dense_bytes = 4 * self.d
+        self.wants_rng = (self.codec.needs_rng
+                          and getattr(self.codec, "stochastic", True))
+        self.edge_src = jnp.asarray(st.edge_src.astype(np.int32))
+        self.edge_dst = jnp.asarray(st.edge_dst.astype(np.int32))
+        self.rev_edge = jnp.asarray(rev_edge_permutation(st))
+        self.num_edges = float(self.e_dir)  # directed edge count
+        # shared (re)start threshold — see EdgeGossipTransport.thr0
+        self.thr0 = (config.trigger_threshold if config.policy == "fixed"
+                     else 0.0)
+
+    def init_state(self, stacked_params) -> SparseEdgeCommState:
+        mat, _ = tree_flatten_stacked(stacked_params)
+        if self.codec.has_residual:
+            res0 = self.codec.init_residual(mat[0])
+            residual = jnp.zeros((self.e_dir,) + res0.shape, jnp.float32)
+        else:
+            residual = None
+        return SparseEdgeCommState(
+            last_sent=jnp.zeros((self.e_dir, self.d), jnp.float32),
+            residual=residual,
+            threshold=jnp.full((self.e_dir,), self.thr0, jnp.float32),
+            drift_ema=jnp.zeros((self.e_dir,), jnp.float32),
+            ever_delivered=jnp.zeros((self.e_dir,), jnp.float32),
+        )
+
+    def state_specs(self, shard, rep) -> SparseEdgeCommState:
+        """All replicated: the edge axis does not tile the node-axis pod
+        mesh, and every pod recomputes the full-edge update from the
+        gathered model rows deterministically (so replicas cannot
+        diverge).  Sharding the edge bank by pod-incident cut is the
+        halo-exchange follow-up in ROADMAP.md."""
+        del shard
+        return SparseEdgeCommState(
+            last_sent=rep,
+            residual=rep if self.codec.has_residual else None,
+            threshold=rep, drift_ema=rep, ever_delivered=rep)
+
+    def reset_edges(self, state: SparseEdgeCommState, reset,
+                    ctx: PodContext = DENSE_CTX) -> SparseEdgeCommState:
+        """Edges where `reset` [E] > 0 return to their init_state values —
+        the same rejoin semantics as EdgeGossipTransport.reset_edges
+        (reference, residual, threshold/EMA and delivery history restart;
+        zero-`reset` edges stay bit-identical).  The engine raises reset on
+        BOTH directed records of every link incident to a rejoined node
+        (`max(rejoined[edge_src], rejoined[edge_dst])` is symmetric under
+        `rev_edge` by construction)."""
+        del ctx  # state is replicated; kept for signature parity
+        r = reset > 0
+        residual = state.residual
+        if residual is not None:
+            rb = r.reshape(r.shape + (1,) * (residual.ndim - 1))
+            residual = jnp.where(rb, 0.0, residual)
+        return SparseEdgeCommState(
+            last_sent=jnp.where(r[:, None], 0.0, state.last_sent),
+            residual=residual,
+            threshold=jnp.where(r, self.thr0, state.threshold),
+            drift_ema=jnp.where(r, 0.0, state.drift_ema),
+            ever_delivered=jnp.where(r, 0.0, state.ever_delivered),
+        )
+
+    def exchange(self, stacked_params, state: SparseEdgeCommState, link_mask,
+                 rng=None, live=None, reset=None, *,
+                 ctx: PodContext = DENSE_CTX, wire: str = "encoded"):
+        """One per-edge transport round over the flat edge list.
+
+        Args:
+          stacked_params: pytree, leaves [R, ...] — the block's models (all
+            N rows on the dense context).
+          state: SparseEdgeCommState (replicated).
+          link_mask: [E] {0,1} exogenous per-directed-edge link mask (the
+            engine folds participation draws and, under dynamics, the live
+            mask into it).
+          rng: PRNG key when the codec wants one — split over the canonical
+            directed edge ids, the SAME stream the dense per-edge transport
+            indexes through its slot panel.
+          live: optional [E] {0,1} live-edge mask from a GraphProcess: a
+            dead edge does not exist this round (no gate, no bytes, frozen
+            controller state), unlike a `link_mask` failure the sender pays
+            for.
+          reset: optional [E] {0,1} — edges rebooted BEFORE this round's
+            drift is measured (see reset_edges).
+          ctx / wire: see class docstring.
+
+        Returns (edge_table, agg_mask, gate, new_state):
+          edge_table — [E, D] fp32: entry e is what edge e's receiver
+            currently holds for its sender (fresh if delivered this round,
+            the per-link stale cache otherwise).  Feed it to
+            SparseNeighborhood(edge_table=...) — receiver rows address it
+            by CSR edge position, no gather needed.
+          agg_mask — [E] receiver aggregation mask per on_silence,
+          gate — [E] {0,1} fired edges (bytes accounting),
+          new_state — the threaded SparseEdgeCommState.
+        """
+        _check_wire(wire)
+        codec, cfg = self.codec, self.config
+        w, _ = tree_flatten_stacked(stacked_params)
+        w_full = ctx.gather(w)  # [N, D] — the only cross-pod movement
+        if reset is not None:
+            state = self.reset_edges(state, reset, ctx=ctx)
+        valid = (jnp.ones((self.e_dir,), jnp.float32) if live is None
+                 else live)
+        last = state.last_sent
+        w_edge = w_full[self.edge_src]  # [E, D] each edge's sender row
+        # the same elementwise gate as the dense layout, on [E, 1] panels
+        g2, d2 = edge_drift_gate(w_edge, last[:, None, :],
+                                 state.threshold[:, None], valid[:, None])
+        gate, drift = g2[:, 0], d2[:, 0]
+        # link-layer ack — the edge id IS the sender-layout address, so the
+        # dense path's rev_slot swap is the identity here.
+        delivered = gate * link_mask
+
+        x = w_edge - last if codec.is_delta else w_edge
+        if self.wants_rng:
+            if rng is None:
+                raise ValueError(f"codec {codec.name!r} needs an rng key")
+            keys = jax.random.split(rng, max(self.e_dir, 1))
+        else:
+            keys = jnp.zeros((self.e_dir, 2), jnp.uint32)
+
+        def enc(xi, key, res):
+            return codec.encode(xi, rng=key if self.wants_rng else None,
+                                residual=res)
+
+        if codec.has_residual:
+            payload, enc_res = jax.vmap(enc)(x, keys, state.residual)
+        else:
+            payload, _ = jax.vmap(lambda xi, key: enc(xi, key, None))(x, keys)
+            enc_res = None
+
+        dec_all = jax.vmap(lambda p: codec.decode(p, out_size=self.d))(payload)
+        recon = last + dec_all if codec.is_delta else dec_all
+        new_last = jnp.where(delivered[:, None] > 0, recon, last)
+        if codec.has_residual:
+            # EF residual tracks DELIVERED information only (see the dense
+            # twin): dropped/silent links keep their residual bit-identical.
+            keep = delivered.reshape(
+                (self.e_dir,) + (1,) * (enc_res.ndim - 1)) > 0
+            new_res = jnp.where(keep, enc_res, state.residual)
+        else:
+            new_res = None
+
+        if cfg.policy == "adaptive":
+            new_thr, new_ema = adaptive_threshold_update(
+                state.threshold, state.drift_ema, drift, gate, valid,
+                target=cfg.target_trigger, ema_beta=cfg.drift_ema_beta,
+                rate=cfg.threshold_rate)
+        else:
+            new_thr, new_ema = state.threshold, state.drift_ema
+        ever = jnp.maximum(state.ever_delivered, delivered)
+        new_state = SparseEdgeCommState(
+            last_sent=new_last, residual=new_res, threshold=new_thr,
+            drift_ema=new_ema, ever_delivered=ever)
+
+        if cfg.on_silence == "drop":
+            agg_mask = link_mask * gate
+        else:
+            agg_mask = link_mask * ever
+        return new_last, agg_mask, gate, new_state
 
 
 def codec_roundtrip_stacked(codec: Codec, stacked, rng=None):

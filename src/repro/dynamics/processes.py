@@ -49,10 +49,18 @@ The shipped catalog (`make_process` names):
     rewiring process — which changes the neighbour *sets* — stays a pure
     on-device transition: the padded layout is static, only the mask moves.
 
-Randomness discipline matches the engine's: per-edge draws happen over the
-FULL ``[N, N]`` upper triangle from the replicated rng stream and are
-symmetrized before slotting, so both endpoints of an edge (and every pod of
-the shard_map backend) see the same coin.
+Both node-axis layouts run the SAME processes.  Bound to a dense
+:class:`~repro.graphs.topology.Topology`, ``live`` comes out in the padded
+``[N, max_deg]`` layout; bound to a
+:class:`~repro.graphs.sparse.SparseTopology`, it comes out as a flat ``[E]``
+mask over the directed CSR edge list.  Randomness discipline makes the two
+bit-identical: every per-edge draw is ONE uniform per undirected pair, with
+pairs enumerated in canonical ascending ``(lo, hi)`` order — the dense
+layout scatters the ``[num_pairs]`` coin vector through a precomputed
+pair-id panel, the sparse layout through
+:func:`repro.graphs.sparse.undirected_pair_ids` — so both endpoints of an
+edge, every pod of the shard_map backend, AND both layouts of the same
+graph see the same coin.
 """
 from __future__ import annotations
 
@@ -63,13 +71,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.graphs.sparse import (
+    _DENSE_GUARD,
+    SparseTopology,
+    make_sparse_topology,
+    undirected_pair_ids,
+)
 from repro.graphs.topology import Topology, _from_adjacency, make_topology
 
 
 class GraphEvent(NamedTuple):
-    """One round's realized graph (see module docstring)."""
+    """One round's realized graph (see module docstring).
 
-    live: jnp.ndarray      # [N, max_deg] {0,1} f32, symmetric, subset of valid
+    ``live`` is laid out per binding: ``[N, max_deg]`` {0,1} in the padded
+    layout (symmetric, subset of ``neighbor_mask``) when bound to a dense
+    Topology, or ``[E]`` {0,1} over the directed CSR edge list (with
+    ``live[e] == live[rev_edge[e]]``) when bound to a SparseTopology."""
+
+    live: jnp.ndarray      # [N, max_deg] (dense) or [E] (sparse) {0,1} f32
     alive: jnp.ndarray     # [N] {0,1} f32
     rejoined: jnp.ndarray  # [N] {0,1} f32 (dead last round, alive now)
 
@@ -83,7 +102,7 @@ class BoundProcess:
     family mean over the union layout; None otherwise)."""
 
     process: "GraphProcess"
-    topo: Topology           # the (possibly augmented) static layout
+    topo: Any                # Topology or SparseTopology static layout
     state0: Any              # pytree of jnp arrays, scan-carried
     step: Callable           # (state, round_idx, key) -> (state, GraphEvent)
     stationary_live_frac: Optional[float] = None
@@ -104,16 +123,63 @@ def _layout(topo: Topology):
     return topo.num_nodes, idx, valid
 
 
-def _symmetric_uniform(key, n: int):
-    """[N, N] uniforms with u[i, j] == u[j, i] and zero diagonal: one coin
-    per undirected pair, drawn from ONE key so every observer agrees."""
-    u = jnp.triu(jax.random.uniform(key, (n, n), jnp.float32), 1)
-    return u + u.T
+def _pair_layout(topo):
+    """Canonical undirected-pair coin plumbing, shared by both layouts.
 
-def _edge_slots(mat, idx, valid):
-    """Gather a symmetric [N, N] edge field into the [N, max_deg] layout."""
-    n = valid.shape[0]
-    return mat[jnp.arange(n)[:, None], idx] * valid
+    Returns ``(num_pairs, to_live)``: pairs are enumerated in ascending
+    ``(lo, hi)`` order, identically for a dense Topology and the
+    SparseTopology of the same graph, and ``to_live`` scatters a
+    ``[num_pairs]`` {0,1} coin vector into the binding's live-mask shape
+    (``[N, max_deg]`` dense / ``[E]`` sparse).  ONE coin per undirected
+    pair means both endpoints, every pod, and both layouts agree."""
+    if isinstance(topo, SparseTopology):
+        pid, m = undirected_pair_ids(topo)
+        pid_j = jnp.asarray(pid)
+
+        def to_live(up):
+            return up[pid_j]
+
+        return m, to_live
+    n, _, valid = _layout(topo)
+    iu, ju = np.nonzero(np.triu(topo.adjacency, 1))
+    codes = iu.astype(np.int64) * n + ju  # row-major triu = (lo, hi) order
+    m = int(codes.shape[0])
+    if m == 0:
+        return 0, lambda up: jnp.zeros_like(valid)
+    idx = np.maximum(topo.neighbor_idx, 0).astype(np.int64)
+    rows = np.arange(n, dtype=np.int64)[:, None]
+    pcode = np.minimum(rows, idx) * n + np.maximum(rows, idx)
+    panel_j = jnp.asarray(
+        np.clip(np.searchsorted(codes, pcode), 0, m - 1).astype(np.int32))
+
+    def to_live(up):
+        return up[panel_j] * valid  # padding slots hit pair 0; valid zeroes them
+
+    return m, to_live
+
+
+def _live_layout(topo):
+    """Per-layout aliveness plumbing: ``(n, all_live, live_from_alive)``.
+
+    ``all_live`` is the every-edge-up mask in the binding's layout;
+    ``live_from_alive`` maps a ``[N]`` {0,1} aliveness vector to the live
+    mask (endpoint-AND — exact {0,1} float products, so dense and sparse
+    agree bitwise)."""
+    if isinstance(topo, SparseTopology):
+        src = jnp.asarray(topo.edge_src.astype(np.int32))
+        dst = jnp.asarray(topo.edge_dst.astype(np.int32))
+        all_live = jnp.ones((topo.num_directed,), jnp.float32)
+
+        def from_alive(alive):
+            return alive[src] * alive[dst]
+
+        return topo.num_nodes, all_live, from_alive
+    n, idx, valid = _layout(topo)
+
+    def from_alive(alive):
+        return valid * alive[:, None] * alive[idx]
+
+    return n, valid, from_alive
 
 
 class GraphProcess:
@@ -130,7 +196,9 @@ class GraphProcess:
     name: str = "graph-process"
     needs_rng: bool = True
 
-    def bind(self, topo: Topology) -> BoundProcess:
+    def bind(self, topo) -> BoundProcess:
+        """Bind to a dense Topology or a SparseTopology (the live-mask
+        layout follows the binding — see :class:`GraphEvent`)."""
         prepared = self.prepare(topo)
         return BoundProcess(process=self, topo=prepared,
                             state0=self.init_state(prepared),
@@ -138,16 +206,16 @@ class GraphProcess:
                             stationary_live_frac=self.stationary_live_frac())
 
     # ---------------------------------------------------------------- hooks
-    def prepare(self, topo: Topology) -> Topology:
+    def prepare(self, topo):
         """The static layout the engine compiles against (default: the
         world's own topology; rewiring returns the family's union graph)."""
         return topo
 
-    def init_state(self, topo: Topology):
+    def init_state(self, topo):
         """Initial device state (a pytree of jnp arrays; () if stateless)."""
         return ()
 
-    def make_step(self, topo: Topology) -> Callable:
+    def make_step(self, topo) -> Callable:
         raise NotImplementedError
 
     def stationary_live_frac(self) -> Optional[float]:
@@ -177,13 +245,13 @@ class StaticGraph(GraphProcess):
     name = "static"
     needs_rng = False
 
-    def make_step(self, topo: Topology):
-        n, _, valid = _layout(topo)
+    def make_step(self, topo):
+        n, all_live, _ = _live_layout(topo)
         ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
 
         def step(state, round_idx, key):
             del round_idx, key
-            return state, GraphEvent(live=valid, alive=ones, rejoined=zeros)
+            return state, GraphEvent(live=all_live, alive=ones, rejoined=zeros)
 
         return step
 
@@ -205,16 +273,18 @@ class EdgeDropout(GraphProcess):
         if not 0.0 <= self.p < 1.0:
             raise ValueError(f"drop probability must be in [0, 1), got {self.p}")
 
-    def make_step(self, topo: Topology):
-        n, idx, valid = _layout(topo)
+    def make_step(self, topo):
+        m, to_live = _pair_layout(topo)
+        n = topo.num_nodes
         ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
         p = jnp.float32(self.p)
 
         def step(state, round_idx, key):
             del round_idx
-            up = (_symmetric_uniform(key, n) >= p).astype(jnp.float32)
-            return state, GraphEvent(live=_edge_slots(up, idx, valid),
-                                     alive=ones, rejoined=zeros)
+            u = jax.random.uniform(key, (m,), jnp.float32)
+            up = (u >= p).astype(jnp.float32)
+            return state, GraphEvent(live=to_live(up), alive=ones,
+                                     rejoined=zeros)
 
         return step
 
@@ -248,24 +318,25 @@ class GilbertElliott(GraphProcess):
             raise ValueError("p_bg = 0 makes every outage permanent; use "
                              "edge removal in the topology instead")
 
-    def init_state(self, topo: Topology):
+    def init_state(self, topo):
         # all links start in the good state (the model-free choice; the
-        # chain forgets it at rate 1 - p_gb - p_bg)
-        return jnp.asarray(topo.adjacency.astype(np.float32))
+        # chain forgets it at rate 1 - p_gb - p_bg).  State is one chain
+        # per undirected pair — the same [num_pairs] vector either layout.
+        m, _ = _pair_layout(topo)
+        return jnp.ones((m,), jnp.float32)
 
-    def make_step(self, topo: Topology):
-        n, idx, valid = _layout(topo)
-        adj = jnp.asarray(topo.adjacency.astype(np.float32))
+    def make_step(self, topo):
+        m, to_live = _pair_layout(topo)
+        n = topo.num_nodes
         ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
         p_gb, p_bg = jnp.float32(self.p_gb), jnp.float32(self.p_bg)
 
         def step(up, round_idx, key):
             del round_idx
-            u = _symmetric_uniform(key, n)
-            new_up = jnp.where(up > 0, u >= p_gb, u < p_bg)
-            new_up = new_up.astype(jnp.float32) * adj
-            return new_up, GraphEvent(live=_edge_slots(new_up, idx, valid),
-                                      alive=ones, rejoined=zeros)
+            u = jax.random.uniform(key, (m,), jnp.float32)
+            new_up = jnp.where(up > 0, u >= p_gb, u < p_bg).astype(jnp.float32)
+            return new_up, GraphEvent(live=to_live(new_up), alive=ones,
+                                      rejoined=zeros)
 
         return step
 
@@ -300,11 +371,11 @@ class NodeChurn(GraphProcess):
                              f"never rejoins is a smaller world), got "
                              f"{self.p_rejoin}")
 
-    def init_state(self, topo: Topology):
+    def init_state(self, topo):
         return jnp.ones((topo.num_nodes,), jnp.float32)  # everyone present
 
-    def make_step(self, topo: Topology):
-        n, idx, valid = _layout(topo)
+    def make_step(self, topo):
+        n, _, from_alive = _live_layout(topo)
         p_leave, p_rejoin = jnp.float32(self.p_leave), jnp.float32(self.p_rejoin)
 
         def step(alive, round_idx, key):
@@ -313,9 +384,8 @@ class NodeChurn(GraphProcess):
             new_alive = jnp.where(alive > 0, u >= p_leave,
                                   u < p_rejoin).astype(jnp.float32)
             rejoined = (1.0 - alive) * new_alive
-            live = valid * new_alive[:, None] * new_alive[idx]
-            return new_alive, GraphEvent(live=live, alive=new_alive,
-                                         rejoined=rejoined)
+            return new_alive, GraphEvent(live=from_alive(new_alive),
+                                         alive=new_alive, rejoined=rejoined)
 
         return step
 
@@ -338,9 +408,10 @@ class PeriodicRewiring(GraphProcess):
     against their UNION layout, and round r masks the union down to graph
     ``(r // period) % num_graphs``.  The union is what makes rewiring —
     which changes neighbour SETS, not just edge liveness — expressible as a
-    pure on-device transition: the padded ``[N, max_deg]`` geometry (and
-    with it every compiled program and every ``[N, max_deg, ...]`` comm
-    state tensor) stays fixed, only the precomputed mask row changes.
+    pure on-device transition: the static geometry (the padded
+    ``[N, max_deg]`` panel, or the union's flat ``[E]`` edge list on the
+    sparse layout — and with it every compiled program and every per-edge
+    comm state tensor) stays fixed, only the precomputed mask row changes.
 
     The base topology contributes its node count only; the family is drawn
     fresh (``topo_kwargs`` go to the builder, e.g. ``dict(k=4, p=0.1)``).
@@ -373,8 +444,7 @@ class PeriodicRewiring(GraphProcess):
                               **kw)
                 for g in range(self.num_graphs)]
 
-    def bind(self, topo: Topology) -> BoundProcess:
-        n = topo.num_nodes
+    def _union_dense(self, n: int):
         family = self._family(n)
         union_adj = np.zeros((n, n), np.int8)
         for t in family:
@@ -388,6 +458,47 @@ class PeriodicRewiring(GraphProcess):
             t.adjacency[rows, idx].astype(np.float32) * union.neighbor_mask
             for t in family
         ])  # [K, N, max_deg] — graph g's edges in the union layout
+        return union, masks, float(max(union.neighbor_mask.sum(), 1))
+
+    def _union_sparse(self, n: int):
+        # Below the densify guard, draw the SAME dense family — the union
+        # graph, per-round masks and weights then match the dense binding
+        # edge for edge (the oracle-parity regime).  Above it, the dense
+        # samplers are off the table; use the vectorized sparse samplers
+        # (a different, documented random stream).
+        if n <= _DENSE_GUARD:
+            fam_codes = []
+            for t in self._family(n):
+                iu, ju = np.nonzero(np.triu(t.adjacency, 1))
+                fam_codes.append(iu.astype(np.int64) * n + ju)
+        else:
+            kw = dict(self.topo_kwargs)
+            if self.topology == "watts_strogatz":
+                kw.setdefault("k", 4)
+                kw.setdefault("p", 0.1)
+            fam_codes = []
+            for g in range(self.num_graphs):
+                t = make_sparse_topology(self.topology, n=n,
+                                         seed=self.seed + 9176 * g, **kw)
+                lo = np.minimum(t.edge_src, t.edge_dst).astype(np.int64)
+                hi = np.maximum(t.edge_src, t.edge_dst).astype(np.int64)
+                fam_codes.append(np.unique(lo * n + hi))
+        union_codes = np.unique(np.concatenate(fam_codes))
+        union = SparseTopology.from_pairs(
+            f"rewire_union({self.topology},K={self.num_graphs},n={n})",
+            n, union_codes // n, union_codes % n)
+        ecode = (np.minimum(union.edge_src, union.edge_dst).astype(np.int64)
+                 * n + np.maximum(union.edge_src, union.edge_dst))
+        masks = np.stack([np.isin(ecode, c).astype(np.float32)
+                          for c in fam_codes])  # [K, E] directed-edge masks
+        return union, masks, float(max(union.num_directed, 1))
+
+    def bind(self, topo) -> BoundProcess:
+        n = topo.num_nodes
+        if isinstance(topo, SparseTopology):
+            union, masks, denom = self._union_sparse(n)
+        else:
+            union, masks, denom = self._union_dense(n)
         masks_j = jnp.asarray(masks)
         ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
         period, k = self.period, self.num_graphs
@@ -400,10 +511,9 @@ class PeriodicRewiring(GraphProcess):
 
         return BoundProcess(
             process=self, topo=union, state0=(), step=step,
-            stationary_live_frac=float(masks.mean(axis=0).sum()
-                                       / max(union.neighbor_mask.sum(), 1)))
+            stationary_live_frac=float(masks.mean(axis=0).sum() / denom))
 
-    def make_step(self, topo: Topology):  # pragma: no cover - bind() owns it
+    def make_step(self, topo):  # pragma: no cover - bind() owns it
         raise RuntimeError("PeriodicRewiring builds its step in bind()")
 
     def stationary_live_frac(self) -> Optional[float]:

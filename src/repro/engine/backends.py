@@ -72,10 +72,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import DENSE_CTX, EdgeGossipTransport, PodContext
+from repro.comm import (DENSE_CTX, EdgeGossipTransport, PodContext,
+                        SparseEdgeGossipTransport)
 from repro.comm.trigger import edge_delivery
 from repro.dist.sharding import NODE_AXIS
 from repro.engine.neighborhood import DenseNeighborhood, SparseNeighborhood
@@ -221,7 +223,8 @@ def _make_gradient_exchange(exp):
         nbr_w_r = rows(nbr_weight)
         r = int(nbr_idx_r.shape[0])
 
-        def body(acc, d):
+        def body(carry, d):
+            acc, tot = carry
             j = nbr_idx_r[:, d]  # [r] neighbour ids in slot d
             cj = counts[j]
             base = (round_idx * max_deg + d) * bs
@@ -237,13 +240,18 @@ def _make_gradient_exchange(exp):
                 wb = w_d.reshape((r,) + (1,) * (gi.ndim - 1))
                 return a + wb * gi.astype(jnp.float32)
 
-            return jax.tree.map(add, acc, g), None
+            return (jax.tree.map(add, acc, g), tot + w_d), None
 
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params
         )
-        acc, _ = jax.lax.scan(body, zeros, jnp.arange(max_deg))
-        tot = jnp.sum(nbr_w_r * mask, axis=1)  # [r]
+        # totals ride the same scan as the gradient accumulator (not a
+        # separate jnp.sum), so a walk truncated to any slot width that
+        # covers every real neighbour — the sparse layout's power-of-two
+        # bucket widths — accumulates bit-identical (acc, tot) pairs: the
+        # trailing slots add exact +0 weights to a carry that starts at +0.
+        (acc, tot), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((r,), jnp.float32)), jnp.arange(max_deg))
         safe = jnp.maximum(tot, 1e-9)
         lr_ge = cfg.ge_lr if cfg.ge_lr is not None else cfg.lr
 
@@ -253,6 +261,100 @@ def _make_gradient_exchange(exp):
             return (p.astype(jnp.float32) - lr_ge * gate * wb * a).astype(p.dtype)
 
         return jax.tree.map(apply, params, acc)
+
+    return gradient_exchange
+
+
+def _make_sparse_gradient_exchange(exp):
+    """CFA-GE second phase on the sparse layout: the SAME slot walk as
+    `_make_gradient_exchange`, run over each width bucket's ragged slot
+    tables instead of the `[N, max_deg]` panel.
+
+    Bucket slot k of receiver i IS dense slot k — both enumerate i's CSR
+    in-edges sender-ascending — so the minibatch base is computed with the
+    GLOBAL dense max_degree and the per-slot keys fold the same k: every
+    real slot consumes bit-identical neighbour data, dropout keys and
+    composed weights.  Trailing zero-weight slots (a bucket's power-of-two
+    width vs max_degree, in either direction) are neutral because both the
+    gradient accumulator and the totals ride the scan carry from +0, and
+    their padding sources (node 0's data, zero params on dummy rows) are
+    finite.  Dummy bucket rows land on the [R+1] trash row and are sliced
+    away, mirroring the SparseNeighborhood scatter."""
+    cfg = exp.train
+    batcher = exp.batcher
+    counts = exp.counts
+    x_pad, y_pad = exp.x_pad, exp.y_pad
+    n = exp.n
+    plan = exp.sparse_plan
+    max_deg = int(exp.topo.max_degree)
+    per_pod = plan.per_pod
+    v_grad = jax.vmap(exp._grad_fn, in_axes=(0, 0, 0, 0))
+
+    def take(a, pod):
+        return jax.lax.dynamic_index_in_dim(a, pod, axis=0, keepdims=False)
+
+    def pad_row(p):
+        return jnp.concatenate([p, jnp.zeros((1,) + p.shape[1:], p.dtype)])
+
+    def gradient_exchange(ctx, params, link_u, live_e, round_idx, rng):
+        bs = cfg.batch_size
+        pod = ctx.pod if ctx.pod is not None else jnp.int32(0)
+        lr_ge = cfg.ge_lr if cfg.ge_lr is not None else cfg.lr
+        out = params
+        for wd in plan.widths:
+            bk = plan.buckets[wd]
+            rows_local = take(bk.rows_local, pod)   # [B]
+            src = take(bk.src, pod)                 # [B, wd]
+            wgt = take(bk.wgt, pod)                 # [B, wd]
+            epos = take(bk.epos, pod)               # [B, wd]
+            b = int(rows_local.shape[0])
+            m = jnp.ones_like(wgt)
+            if cfg.participation < 1.0:
+                m = m * (link_u[epos] < cfg.participation).astype(jnp.float32)
+            if live_e is not None:
+                m = m * live_e[epos]
+            w_slot = wgt * m                        # [B, wd]
+            p_b = jax.tree.map(lambda p: pad_row(p)[rows_local], params)
+            gid = jnp.clip(pod * per_pod + rows_local, 0, n - 1)
+
+            def body(carry, k):
+                acc, tot = carry
+                j = src[:, k]  # [b] sender ids in slot k
+                cj = counts[j]
+                base = (round_idx * max_deg + k) * bs
+                bidx = (base + jnp.arange(bs, dtype=jnp.int32)[None, :]) \
+                    * batcher.stride
+                bidx = bidx % jnp.maximum(cj[:, None], 1)
+                xj = x_pad[j[:, None], bidx]  # [b, bs, ...]
+                yj = y_pad[j[:, None], bidx]
+                keys = jax.random.split(jax.random.fold_in(rng, k), n)[gid]
+                g = v_grad(p_b, xj, yj, keys)  # grad of F_j at w_i
+                w_k = w_slot[:, k]
+
+                def add(a, gi):
+                    wb = w_k.reshape((b,) + (1,) * (gi.ndim - 1))
+                    return a + wb * gi.astype(jnp.float32)
+
+                return (jax.tree.map(add, acc, g), tot + w_k), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), p_b)
+            (acc, tot), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((b,), jnp.float32)), jnp.arange(wd))
+            safe = jnp.maximum(tot, 1e-9)
+
+            def apply(p, a):
+                wb = (1.0 / safe).reshape((b,) + (1,) * (a.ndim - 1))
+                gate = (tot > 0).astype(jnp.float32).reshape(
+                    (b,) + (1,) * (a.ndim - 1))
+                return (p.astype(jnp.float32)
+                        - lr_ge * gate * wb * a).astype(p.dtype)
+
+            new_b = jax.tree.map(apply, p_b, acc)
+            out = jax.tree.map(
+                lambda o, nb: pad_row(o).at[rows_local].set(nb)[:o.shape[0]],
+                out, new_b)
+        return out
 
     return gradient_exchange
 
@@ -273,7 +375,8 @@ def _make_round_body(exp, *, loss_reduce):
     cfg, strategy, agg_state = exp.train, exp.strategy, exp.agg_state
     caps = strategy.capabilities
     transport = exp.transport
-    per_edge = isinstance(transport, EdgeGossipTransport)
+    per_edge = isinstance(transport,
+                          (EdgeGossipTransport, SparseEdgeGossipTransport))
     wire = exp.wire
     nbr_idx, nbr_valid, nbr_weight = exp.nbr_idx, exp.nbr_valid, exp.nbr_weight
     counts = exp.counts
@@ -298,12 +401,15 @@ def _make_round_body(exp, *, loss_reduce):
         degrees = plan.degrees
         total_edges = jnp.float32(plan.num_directed)
         delivery_mask = None
+        edge_src = jnp.asarray(exp.topo.edge_src.astype(np.int32))
+        edge_dst = jnp.asarray(exp.topo.edge_dst.astype(np.int32))
     else:
         delivery_mask = _make_delivery_mask(exp)
         degrees = jnp.sum(nbr_valid, axis=1)
         total_edges = jnp.sum(degrees)  # directed edge count
     if caps.grad_exchange:
-        gradient_exchange = _make_gradient_exchange(exp)
+        gradient_exchange = (_make_sparse_gradient_exchange(exp) if sparse
+                             else _make_gradient_exchange(exp))
 
     def aggregate(rows, params, gathered, mask):
         state = (jax.tree.map(rows, agg_state) if caps.kind == "gossip"
@@ -345,12 +451,14 @@ def _make_round_body(exp, *, loss_reduce):
                 link_full = link_full * ev.live
         old_params = params
 
-        def flat_gossip(params, gate_vec, table_mat=None):
+        def flat_gossip(params, gate_vec, table_mat=None, edge_mask=None):
             """The flat-form gossip update: flatten the block's models,
             build the layout's Neighborhood over the full [N, D] table
             (gathered here unless the transport already decoded one), and
             run the strategy's flat aggregate.  `gate_vec` [N] {0,1} is the
-            senders' broadcast gate."""
+            senders' broadcast gate; `edge_mask` [E] {0,1} is the sparse
+            layout's live-edge factor (the dense layout folds liveness into
+            `link_full` instead, so it ignores the argument)."""
             local_mat, unflatten = tree_flatten_stacked(params)
             if table_mat is None:
                 table_mat = ctx.gather(local_mat)
@@ -358,7 +466,8 @@ def _make_round_body(exp, *, loss_reduce):
                 pod = ctx.pod if ctx.pod is not None else jnp.int32(0)
                 nb = SparseNeighborhood(plan, pod, table_mat, local_mat,
                                         unflatten, gate_vec, link_u,
-                                        cfg.participation)
+                                        cfg.participation,
+                                        edge_mask=edge_mask)
             else:
                 w = rows(nbr_weight) * edge_delivery(
                     gate_vec, rows(link_full), rows(nbr_idx))
@@ -379,7 +488,9 @@ def _make_round_body(exp, *, loss_reduce):
                 params = aggregate(rows, params, full, alive)
             elif caps.kind == "gossip":
                 if use_flat:
-                    params = flat_gossip(params, jnp.ones((n,), jnp.float32))
+                    params = flat_gossip(
+                        params, jnp.ones((n,), jnp.float32),
+                        edge_mask=(ev.live if sparse and has_dyn else None))
                 else:
                     full = jax.tree.map(ctx.gather, params)
                     gathered = strategy.exchange(exp, full, rows(nbr_idx))
@@ -387,8 +498,14 @@ def _make_round_body(exp, *, loss_reduce):
                                        rows(link_full))
                 if caps.grad_exchange:
                     rng, sub = jax.random.split(rng)
-                    params = gradient_exchange(rows, params, rows(link_full),
-                                               round_idx, sub)
+                    if sparse:
+                        params = gradient_exchange(
+                            ctx, params, link_u,
+                            ev.live if has_dyn else None, round_idx, sub)
+                    else:
+                        params = gradient_exchange(rows, params,
+                                                   rows(link_full),
+                                                   round_idx, sub)
             # kind == "none": isolation — no communication at all.
         elif per_edge:
             # per-EDGE transport: every directed link carries its own
@@ -400,32 +517,64 @@ def _make_round_body(exp, *, loss_reduce):
                 rng, ck = jax.random.split(rng)
             else:
                 ck = None
-            if has_dyn:
-                rj = ev.rejoined
-                reset = jnp.maximum(rj[:, None], rj[nbr_idx]) * nbr_valid
-                live = ev.live
-            else:
-                reset = live = None
-            gathered, mask, gate_full, new_comm = transport.exchange(
-                params, comm_state, link_full, ck, live=live, reset=reset,
-                ctx=ctx, wire=wire)
-            if use_flat:
-                # flat form over the transport's pre-gathered per-link
-                # panel (no single [N, D] table exists: slot models are
-                # per-link stale caches), composed weights ω·|D|·mask —
-                # the same kernel reduce as the per-node path, so fp32/thr0
-                # stays bit-exact against it.
+            if sparse:
+                # flat [E] path: a CSR directed edge id is both the sender-
+                # and receiver-layout address of its link, so participation
+                # draws, liveness and rejoin resets compose per edge id and
+                # the transport returns the per-edge reconstruction bank
+                # the SparseNeighborhood addresses by CSR position — no
+                # layout swap, no reverse-slot gather.
+                link_e = (jnp.ones((plan.num_directed,), jnp.float32)
+                          if link_u is None
+                          else (link_u < cfg.participation).astype(
+                              jnp.float32))
+                if has_dyn:
+                    rj = ev.rejoined
+                    reset = jnp.maximum(rj[edge_src], rj[edge_dst])
+                    live = ev.live
+                    link_e = link_e * live
+                else:
+                    reset = live = None
+                edge_table, mask_e, gate_full, new_comm = transport.exchange(
+                    params, comm_state, link_e, ck, live=live, reset=reset,
+                    ctx=ctx, wire=wire)
+                # participation/liveness/gates are already folded into the
+                # [E] masks, so the view gets no gate_vec/link_u of its own.
                 local_mat, unflatten = tree_flatten_stacked(params)
-                panel = jnp.concatenate(
-                    [l.reshape(l.shape[0], l.shape[1], -1)
-                      .astype(jnp.float32)
-                     for l in jax.tree.leaves(gathered)], axis=2)
-                nb = DenseNeighborhood(None, None, rows(nbr_weight) * mask,
-                                       local_mat, unflatten, panel=panel)
+                pod = ctx.pod if ctx.pod is not None else jnp.int32(0)
+                nb = SparseNeighborhood(
+                    plan, pod, None, local_mat, unflatten, None, None, 1.0,
+                    edge_table=edge_table, edge_mask=mask_e)
                 params = strategy.flat_aggregate(
                     exp, jax.tree.map(rows, agg_state), nb)
             else:
-                params = aggregate(rows, params, gathered, mask)
+                if has_dyn:
+                    rj = ev.rejoined
+                    reset = jnp.maximum(rj[:, None], rj[nbr_idx]) * nbr_valid
+                    live = ev.live
+                else:
+                    reset = live = None
+                gathered, mask, gate_full, new_comm = transport.exchange(
+                    params, comm_state, link_full, ck, live=live,
+                    reset=reset, ctx=ctx, wire=wire)
+                if use_flat:
+                    # flat form over the transport's pre-gathered per-link
+                    # panel (no single [N, D] table exists: slot models are
+                    # per-link stale caches), composed weights ω·|D|·mask —
+                    # the same kernel reduce as the per-node path, so
+                    # fp32/thr0 stays bit-exact against it.
+                    local_mat, unflatten = tree_flatten_stacked(params)
+                    panel = jnp.concatenate(
+                        [l.reshape(l.shape[0], l.shape[1], -1)
+                          .astype(jnp.float32)
+                         for l in jax.tree.leaves(gathered)], axis=2)
+                    nb = DenseNeighborhood(None, None,
+                                           rows(nbr_weight) * mask,
+                                           local_mat, unflatten, panel=panel)
+                    params = strategy.flat_aggregate(
+                        exp, jax.tree.map(rows, agg_state), nb)
+                else:
+                    params = aggregate(rows, params, gathered, mask)
             # unicast accounting: one payload per FIRED edge (a silent edge
             # of an otherwise-sending node costs nothing); failed links
             # still burn the sender's bytes.
@@ -466,7 +615,8 @@ def _make_round_body(exp, *, loss_reduce):
             if use_flat:
                 params = flat_gossip(
                     params, gate_vec,
-                    table_mat=tree_flatten_stacked(decoded)[0])
+                    table_mat=tree_flatten_stacked(decoded)[0],
+                    edge_mask=(ev.live if sparse and has_dyn else None))
             else:
                 mask = edge_delivery(gate_vec, rows(link_full),
                                      rows(nbr_idx))
@@ -477,8 +627,14 @@ def _make_round_body(exp, *, loss_reduce):
             # non-existent link carries nothing); failed links still burn
             # the sender's bytes.
             if has_dyn:
-                live_deg = jnp.sum(ev.live, axis=1)
-                sent_edges = jnp.sum(gate_full * live_deg)
+                if sparse:
+                    # Σ_e gate[src_e]·live_e — the flat-edge form of the
+                    # dense gate·live_outdeg sum (both are sums of exact
+                    # small integers, so f32 accumulates them exactly).
+                    sent_edges = jnp.sum(gate_full[edge_src] * ev.live)
+                else:
+                    live_deg = jnp.sum(ev.live, axis=1)
+                    sent_edges = jnp.sum(gate_full * live_deg)
                 trig = sent_edges / jnp.maximum(jnp.sum(ev.live), 1.0)
             else:
                 sent_edges = jnp.sum(gate_full * degrees)

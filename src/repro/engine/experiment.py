@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import WIRES, CommConfig, EdgeGossipTransport, GossipTransport
+from repro.comm import (WIRES, CommConfig, EdgeGossipTransport,
+                        GossipTransport, SparseEdgeGossipTransport)
 from repro.core.virtual_teacher import make_loss_fn
 from repro.data.allocation import pad_node_datasets
 from repro.data.pipeline import Batcher
@@ -215,15 +216,28 @@ class Experiment:
         if layout is None:
             layout = "sparse" if isinstance(topo, SparseTopology) else "dense"
         self.layout = layout
+        # Layout support is capability-driven: the strategy's Capabilities
+        # record declares which node-axis layouts it lowers to, plus ONE
+        # derived restriction — a gossip strategy without a flat_aggregate
+        # form only has the padded-gather lowering, which is dense-only.
+        caps = self.strategy.capabilities
+        allowed = tuple(
+            lo for lo in caps.layouts
+            if not (lo == "sparse" and caps.kind == "gossip"
+                    and self.strategy.flat_aggregate is None))
+        if layout not in allowed:
+            why = ("declares no flat_aggregate form, so only the dense "
+                   "padded-gather lowering exists"
+                   if layout in caps.layouts else
+                   "declares it unsupported in its Capabilities record")
+            raise ValueError(
+                f"method {method!r}: strategy "
+                f"{type(self.strategy).__name__} {why}; supported layouts: "
+                f"{allowed}")
         if layout == "dense" and isinstance(topo, SparseTopology):
             topo = topo.to_topology()
         elif layout == "sparse" and not isinstance(topo, SparseTopology):
             topo = SparseTopology.from_topology(topo)
-        if layout == "sparse" and world.dynamics is not None:
-            raise ValueError(
-                "layout='sparse' does not support a dynamics process yet "
-                "(time-varying masks are defined over the dense padded "
-                "layout); run layout='dense' or drop World.dynamics")
         # --- dynamics (repro.dynamics): bind the graph process once; it may
         # augment the static layout (rewiring compiles against the family's
         # union graph), so everything below derives from the bound topo.
@@ -251,23 +265,6 @@ class Experiment:
 
         # --- graph tensors (padded dense layout OR the sparse plan) ---
         if self.layout == "sparse":
-            caps = self.strategy.capabilities
-            if caps.grad_exchange:
-                raise ValueError(
-                    f"method {method!r} needs the gradient-exchange phase, "
-                    f"which walks the dense neighbour table; run "
-                    f"layout='dense'")
-            if caps.kind == "gossip" and self.strategy.flat_aggregate is None:
-                raise ValueError(
-                    f"method {method!r}: strategy "
-                    f"{type(self.strategy).__name__} declares no "
-                    f"flat_aggregate form, so it only runs on "
-                    f"layout='dense' (see repro.engine.neighborhood)")
-            if comm is not None and comm.use_per_edge:
-                raise ValueError(
-                    "per-edge transport state lives in dense [N, max_deg] "
-                    "edge slots; layout='sparse' supports the per-node "
-                    "transport only (CommConfig(use_per_edge=False))")
             n_pods = 1
             if backend == "shard_map" and self.mesh is not None:
                 n_pods = int(dict(self.mesh.shape).get(NODE_AXIS, 1))
@@ -330,8 +327,13 @@ class Experiment:
                     f"method {method!r} is unsupported "
                     f"(transport-capable methods: {roster})")
             if comm.use_per_edge:
-                self.transport = EdgeGossipTransport(
-                    comm, self.params, topo.neighbor_idx, topo.neighbor_mask)
+                if self.layout == "sparse":
+                    self.transport = SparseEdgeGossipTransport(
+                        comm, self.params, topo)
+                else:
+                    self.transport = EdgeGossipTransport(
+                        comm, self.params, topo.neighbor_idx,
+                        topo.neighbor_mask)
             else:
                 self.transport = GossipTransport(comm, self.params)
             self.comm_state = self.transport.init_state(self.params)

@@ -165,13 +165,32 @@ class SparseNeighborhood:
     accumulator; dummy bucket rows land there and are sliced away).
 
     `gate_vec` [N] {0,1} are the senders' broadcast gates (trigger fired /
-    ever-sent); `link_u` [E] are this round's replicated per-directed-edge
-    uniforms (None when participation == 1).  All gate factors are exact
-    {0,1} floats, so the composed weights equal the dense layout's
-    ω_e·|D_src|·gate·link products bit-for-bit."""
+    ever-sent; None skips the factor entirely — e.g. the per-edge transport
+    folds its gates into `edge_mask` instead); `link_u` [E] are this
+    round's replicated per-directed-edge uniforms (None when participation
+    == 1).  All gate factors are exact {0,1} floats, so the composed
+    weights equal the dense layout's ω_e·|D_src|·gate·link products
+    bit-for-bit.
+
+    Two optional [E] edge-indexed inputs extend the view to the full
+    scenario matrix without changing the reduce:
+
+      * ``edge_table`` [E, D] — per-DIRECTED-EDGE values (the sparse
+        per-edge transport's reconstruction bank): bucket slots then gather
+        `edge_table[epos]` instead of `table[src]`, the flat-edge analogue
+        of the dense panel form (receiver slots ARE CSR edge positions, so
+        no reverse gather is needed);
+      * ``edge_mask`` [E] {0,1} — a per-directed-edge weight factor (a
+        dynamics live mask, or the per-edge transport's aggregation mask),
+        applied through `epos` exactly where the dense layout multiplies
+        its `[N, max_deg]` mask panel.
+
+    Padding slots point at edge 0 (finite garbage) with wgt = 0, which the
+    `segment_neighbor_avg` kernel contract makes bit-neutral."""
 
     def __init__(self, plan: SparsePlan, pod, table, local_mat, unflatten_fn,
-                 gate_vec, link_u, participation: float):
+                 gate_vec, link_u, participation: float, *,
+                 edge_table=None, edge_mask=None):
         self.plan = plan
         self.pod = pod
         self.table = table
@@ -180,6 +199,8 @@ class SparseNeighborhood:
         self.gate_vec = gate_vec
         self.link_u = link_u
         self.participation = participation
+        self.edge_table = edge_table
+        self.edge_mask = edge_mask
 
     def _take(self, a):
         """Select this pod's slab of a [P, ...] plan array."""
@@ -187,10 +208,12 @@ class SparseNeighborhood:
                                             keepdims=False)
 
     def _weights(self, src, wgt, epos):
-        w = wgt * self.gate_vec[src]
+        w = wgt if self.gate_vec is None else wgt * self.gate_vec[src]
         if self.participation < 1.0:
             w = w * (self.link_u[epos] < self.participation).astype(
                 jnp.float32)
+        if self.edge_mask is not None:
+            w = w * self.edge_mask[epos]
         return w
 
     def local(self):
@@ -206,10 +229,12 @@ class SparseNeighborhood:
             bk = self.plan.buckets[wd]
             rows_local = self._take(bk.rows_local)
             src = self._take(bk.src)
-            vals = self.table[src]
+            epos = self._take(bk.epos)
+            vals = (self.edge_table[epos] if self.edge_table is not None
+                    else self.table[src])
             if delta:
                 vals = vals - local_pad[rows_local][:, None, :]
-            w = self._weights(src, self._take(bk.wgt), self._take(bk.epos))
+            w = self._weights(src, self._take(bk.wgt), epos)
             s, t = segment_neighbor_avg(vals, w)
             sums = sums.at[rows_local].set(s)
             tot = tot.at[rows_local].set(t)

@@ -55,6 +55,7 @@ from repro.core.aggregation import (
 from repro.core.decdiff import decdiff_aggregate_stacked
 
 KINDS = ("gossip", "server", "none")
+LAYOUTS = ("dense", "sparse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,10 +70,19 @@ class Capabilities:
       model on their data and we descend along their weighted gradients.
       Only meaningful on gossip strategies (the phase walks the neighbour
       table).
+    layouts: the node-axis layouts the strategy lowers to.  Every built-in
+      capability combination supports both; a strategy restricts this only
+      when its update genuinely needs state one layout cannot carry.
+      Layout rejection in `Experiment` is driven by THIS field (plus one
+      derived restriction: a gossip strategy without a `flat_aggregate`
+      form only has the padded-gather lowering, which is dense-only), so
+      the construction-time error can name exactly which layouts support
+      the method instead of pattern-matching on strings.
     """
 
     kind: str = "gossip"
     grad_exchange: bool = False
+    layouts: Tuple[str, ...] = LAYOUTS
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -82,6 +92,12 @@ class Capabilities:
             raise ValueError(
                 f"grad_exchange walks the neighbour table, so it requires "
                 f"kind='gossip', got kind={self.kind!r}")
+        layouts = tuple(self.layouts)
+        if not layouts or any(lo not in LAYOUTS for lo in layouts):
+            raise ValueError(
+                f"Capabilities.layouts must be a non-empty subset of "
+                f"{LAYOUTS}, got {self.layouts!r}")
+        object.__setattr__(self, "layouts", layouts)
 
     @property
     def transport(self) -> bool:

@@ -3,6 +3,8 @@ from repro.graphs.sparse import (  # noqa: F401
     SPARSE_BUILDERS,
     SparseTopology,
     make_sparse_topology,
+    rev_edge_permutation,
+    undirected_pair_ids,
 )
 from repro.graphs.topology import (  # noqa: F401
     TOPOLOGY_BUILDERS,

@@ -144,6 +144,41 @@ class SparseTopology:
         )
 
 
+# ------------------------------------------------------- edge-index helpers
+
+
+def rev_edge_permutation(st: SparseTopology) -> np.ndarray:
+    """[E] permutation pairing each directed edge with its reverse.
+
+    `rev[e]` is the CSR position of the directed edge `(dst[e] -> src[e])` —
+    the opposite record of the same undirected link.  The sparse per-edge
+    transport keys BOTH directions' state by CSR edge id directly, so this
+    permutation replaces the dense layout's `[N, max_deg]` reverse-slot
+    gather; it is an involution (`rev[rev[e]] == e`)."""
+    n = np.int64(st.num_nodes)
+    src = st.edge_src.astype(np.int64)
+    dst = st.edge_dst.astype(np.int64)
+    # edges are sorted by (dst, src), so dst*n + src is strictly ascending
+    # and searchsorted resolves the reverse edge's position exactly.
+    rev = np.searchsorted(dst * n + src, src * n + dst)
+    return rev.astype(np.int32)
+
+
+def undirected_pair_ids(st: SparseTopology) -> Tuple[np.ndarray, int]:
+    """[E] map from directed edge to canonical undirected pair id.
+
+    Pairs are enumerated in ascending `(lo, hi)` order (`lo*n + hi` codes) —
+    the SAME order the dense layout's `np.triu` enumeration yields — so a
+    single `[num_pairs]` random draw indexed through this map produces
+    bit-identical per-link coins on both layouts.  Returns
+    `(pair_id [E] int32, num_pairs)`; `pair_id[e] == pair_id[rev[e]]`."""
+    n = np.int64(st.num_nodes)
+    lo = np.minimum(st.edge_src, st.edge_dst).astype(np.int64)
+    hi = np.maximum(st.edge_src, st.edge_dst).astype(np.int64)
+    codes, inv = np.unique(lo * n + hi, return_inverse=True)
+    return inv.astype(np.int32), int(codes.shape[0])
+
+
 # ------------------------------------------------------------------ builders
 #
 # All samplers are vectorized numpy (no per-pair Python loops) and mirror the

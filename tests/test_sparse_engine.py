@@ -15,9 +15,13 @@ The acceptance pins for `Experiment(layout="sparse")`:
   4. plan — `build_sparse_plan` lays every node out exactly once, in the
      contiguous pod blocks shard_map slices, with the same ω·|D_src|
      weight product as the dense layout;
-  5. errors — the sparse layout refuses what it cannot represent
-     (dynamics, per-edge transport state, gradient exchange) with
-     actionable messages instead of silent wrong numbers.
+  5. errors — layout support is CAPABILITY-driven: the strategy's
+     Capabilities record (plus the one derived restriction — a gossip
+     strategy without a flat_aggregate form) decides what constructs, and
+     the rejection message lists exactly which layouts support the method.
+     The historical sparse carve-outs (dynamics, per-edge transport,
+     CFA-GE) are lifted — their equivalence pins live in
+     tests/test_sparse_parity.py.
 """
 import dataclasses
 
@@ -338,21 +342,77 @@ def test_neighborhood_views_bit_equal():
 # ------------------------------------------------------------------- errors
 
 
-def test_sparse_rejects_dynamics(ba_world):
+def test_lifted_combinations_construct_on_sparse(ba_world):
+    """The three historical sparse carve-outs — dynamics, per-edge
+    transport, CFA-GE — all construct now (their bit-parity pins live in
+    tests/test_sparse_parity.py)."""
+    from repro.comm import SparseEdgeGossipTransport
+
     world = dataclasses.replace(ba_world, dynamics=EdgeDropout(p=0.2))
-    with pytest.raises(ValueError, match="dynamics"):
-        Experiment(world, "decdiff", layout="sparse")
+    exp = Experiment(world, "decdiff", layout="sparse",
+                     schedule=Schedule(rounds=1, eval_every=1, mode="loop"),
+                     **TINY)
+    assert exp.bound_dyn is not None
+    exp = Experiment(ba_world, "decdiff", layout="sparse",
+                     comm=CommConfig(codec="int8", per_edge=True),
+                     schedule=Schedule(rounds=1, eval_every=1, mode="loop"),
+                     **TINY)
+    assert isinstance(exp.transport, SparseEdgeGossipTransport)
+    exp = Experiment(ba_world, "cfa-ge", layout="sparse",
+                     schedule=Schedule(rounds=1, eval_every=1, mode="loop"),
+                     **TINY)
+    assert exp.strategy.capabilities.grad_exchange
 
 
-def test_sparse_rejects_per_edge_transport(ba_world):
-    with pytest.raises(ValueError, match="per-node transport only"):
-        Experiment(ba_world, "decdiff", layout="sparse",
-                   comm=CommConfig(codec="int8", per_edge=True))
+def test_gossip_without_flat_form_is_dense_only(ba_world):
+    """The derived layout restriction: a gossip strategy with no
+    flat_aggregate form has only the padded-gather lowering, and the error
+    names the surviving layouts."""
+    from repro.engine.strategies import AggregationStrategy, register_method
+
+    class _PaddedOnlyStrategy(AggregationStrategy):
+        name = "padded-only"
+
+        def aggregate(self, exp, state, params, gathered, mask):
+            return params
+
+    register_method("padded-only-test", _PaddedOnlyStrategy(),
+                    overwrite=True)
+    with pytest.raises(ValueError, match=r"flat_aggregate") as ei:
+        Experiment(ba_world, "padded-only-test", layout="sparse")
+    assert "('dense',)" in str(ei.value)
+    # ...and the same strategy still constructs on the dense layout.
+    Experiment(ba_world, "padded-only-test", layout="dense",
+               schedule=Schedule(rounds=1, eval_every=1, mode="loop"),
+               **TINY)
 
 
-def test_sparse_rejects_gradient_exchange(ba_world):
-    with pytest.raises(ValueError, match="gradient-exchange"):
-        Experiment(ba_world, "cfa-ge", layout="sparse")
+def test_declared_capability_layouts_drive_rejection(ba_world):
+    """A strategy that declares layouts=('dense',) in its Capabilities
+    record is rejected on sparse FROM the record — no string-matching on
+    method names — and the message lists the supported layouts."""
+    from repro.engine.strategies import (Capabilities, DecDiffStrategy,
+                                         register_method)
+
+    class _DenseDeclaredStrategy(DecDiffStrategy):
+        name = "dense-declared"
+        capabilities = Capabilities(layouts=("dense",))
+
+    register_method("dense-declared-test", _DenseDeclaredStrategy(),
+                    overwrite=True)
+    with pytest.raises(ValueError, match="Capabilities record") as ei:
+        Experiment(ba_world, "dense-declared-test", layout="sparse")
+    assert "('dense',)" in str(ei.value)
+
+
+def test_capabilities_layouts_validated():
+    from repro.engine.strategies import Capabilities
+
+    with pytest.raises(ValueError, match="non-empty subset"):
+        Capabilities(layouts=())
+    with pytest.raises(ValueError, match="non-empty subset"):
+        Capabilities(layouts=("csr",))
+    assert Capabilities(layouts=["sparse"]).layouts == ("sparse",)
 
 
 def test_unknown_layout_rejected(ba_world):

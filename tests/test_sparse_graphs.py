@@ -353,3 +353,115 @@ def test_neighbor_weights_hub_rows():
     # hub row carries weight w(0,j) = j for each leaf j (ascending order)
     assert np.array_equal(star.neighbor_weights()[0],
                           np.arange(1, 10, dtype=np.float32))
+
+
+# --------------------------- satellite: hypothesis sampler property lanes
+#
+# Opt-in (`-m fuzz`, see conftest.py) and skipped entirely when hypothesis
+# is absent — tier-1 stays dependency-free.  Each sampler property runs the
+# full structural contract (`_assert_csr_invariants`) over RANDOM
+# (n, param, seed) triples, not the fixed SPARSE_CASES grid.
+
+try:
+    from hypothesis import assume, given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - hypothesis is optional
+    HAVE_HYP = False
+
+
+def _assert_same_edges(a: SparseTopology, b: SparseTopology):
+    """Edge set, weights AND canonical (dst, src) ordering coincide."""
+    assert a.num_nodes == b.num_nodes
+    assert np.array_equal(a.edge_src, b.edge_src)
+    assert np.array_equal(a.edge_dst, b.edge_dst)
+    assert np.array_equal(a.edge_weight, b.edge_weight)
+    assert np.array_equal(a.row_offsets, b.row_offsets)
+
+
+if HAVE_HYP:
+
+    SEEDS = hst.integers(min_value=0, max_value=2**31 - 1)
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=30)
+    @given(n=hst.integers(3, 96), m=hst.integers(1, 4), seed=SEEDS)
+    def test_fuzz_ba_sampler_invariants(n, m, seed):
+        assume(m < n)
+        st = sparse_barabasi_albert(n=n, m=m, seed=seed)
+        _assert_csr_invariants(st)
+        assert st.connected  # BA attachment is connected by construction
+        assert (st.degrees >= 1).all()
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=30)
+    @given(n=hst.integers(8, 64),
+           p=hst.floats(0.2, 0.9, allow_nan=False),
+           seed=SEEDS)
+    def test_fuzz_er_sampler_invariants(n, p, seed):
+        st = sparse_erdos_renyi(n=n, p=p, seed=seed)
+        _assert_csr_invariants(st)
+        assert st.connected  # ensure_connected resamples until it is
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=30)
+    @given(n=hst.integers(3, 96), half_k=hst.integers(1, 3),
+           p=hst.floats(0.0, 1.0, allow_nan=False), seed=SEEDS)
+    def test_fuzz_ws_sampler_invariants(n, half_k, p, seed):
+        k = 2 * half_k
+        assume(k < n)
+        st = sparse_watts_strogatz(n=n, k=k, p=p, seed=seed)
+        _assert_csr_invariants(st)
+        assert st.connected
+        # rewiring never changes the edge COUNT, only endpoints
+        assert st.num_edges == n * half_k
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=30)
+    @given(n=hst.integers(2, 32), num_pairs=hst.integers(1, 200),
+           seed=SEEDS)
+    def test_fuzz_from_pairs_first_wins_idempotent(n, num_pairs, seed):
+        """from_pairs on arbitrary (u, v, w) lists — self loops, duplicates,
+        both orientations, conflicting weights: the structural contract
+        holds, the FIRST weight of any duplicate wins, and feeding the
+        resulting directed edge list back in is the identity."""
+        rng = np.random.default_rng(seed)
+        u = rng.integers(0, n, num_pairs)
+        v = rng.integers(0, n, num_pairs)
+        w = rng.uniform(0.1, 3.0, num_pairs).astype(np.float32)
+        st = SparseTopology.from_pairs("fuzz", n, u, v, weights=w)
+        _assert_csr_invariants(st)
+        # first-wins: the stored weight is the FIRST input occurrence's
+        first = {}
+        for a, b, ww in zip(u, v, w):
+            lo, hi = (int(a), int(b)) if a < b else (int(b), int(a))
+            if lo != hi and (lo, hi) not in first:
+                first[(lo, hi)] = np.float32(ww)
+        got = {(min(int(s), int(d)), max(int(s), int(d))): np.float32(ww)
+               for s, d, ww in zip(st.edge_src, st.edge_dst, st.edge_weight)}
+        assert got == first
+        # idempotence: the canonical directed list round-trips bitwise
+        again = SparseTopology.from_pairs(
+            "fuzz2", n, st.edge_src, st.edge_dst, weights=st.edge_weight)
+        _assert_same_edges(st, again)
+
+    @pytest.mark.fuzz
+    @settings(deadline=None, max_examples=30)
+    @given(case=hst.sampled_from(["erdos_renyi", "barabasi_albert",
+                                  "watts_strogatz", "ring", "star"]),
+           n=hst.integers(5, 256), seed=SEEDS)
+    def test_fuzz_dense_round_trip(case, n, seed):
+        """from_topology(to_topology(t)) is the identity on edge set,
+        float32 weights and canonical ordering for every graph under the
+        densify guard — the duality the oracle matrix rests on."""
+        kw = {"erdos_renyi": dict(p=0.25, seed=seed),
+              "barabasi_albert": dict(m=2, seed=seed),
+              "watts_strogatz": dict(k=4, p=0.2, seed=seed),
+              "ring": {}, "star": {}}[case]
+        if case in ("barabasi_albert", "watts_strogatz"):
+            assume(n > 4)
+        st = make_sparse_topology(case, n=n, **kw)
+        back = SparseTopology.from_topology(st.to_topology())
+        _assert_same_edges(st, back)
+        assert back.connected == st.connected

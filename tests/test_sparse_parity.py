@@ -1,0 +1,330 @@
+"""Sparse scenario parity: the dense-oracle equivalence matrix.
+
+The acceptance pin for lifting the sparse layout's three construction-time
+carve-outs (dynamics, per-edge transport, CFA-GE): on ≤64-node worlds, at
+participation=1.0, `Experiment(layout="sparse")` reproduces the dense
+padded engine BIT-FOR-BIT — final params, total comm bytes, per-round
+trigger history, and per-round live-edge history — across
+
+  * methods     — the full strategy roster, under a dynamics process;
+  * transports  — per-node triggered, per-edge fixed-threshold, per-edge
+    adaptive int8 (stochastic rounding), with and without dynamics;
+  * dynamics    — every shipped GraphProcess through the per-edge adaptive
+    transport, scan-fused;
+  * backends    — vmap and shard_map on both layouts (single-pod in tier-1,
+    the forced 4-device mesh in the multihost lane).
+
+Why bit-equality is possible at all: both layouts draw their dynamics coins
+from ONE canonical uniform per undirected pair (ascending (lo, hi) order),
+key their codecs by the canonical CSR directed-edge id, compose all masks
+as products of exact {0,1} floats, and reduce through the same
+`segment_neighbor_avg` kernel, which is invariant to row blocking and slot
+padding.  participation < 1 is the documented exception (each layout draws
+its own shape of uniforms), so the matrix runs at participation = 1.0.
+
+The churn regression pins at the bottom mirror the PR-5 dense
+reset-discrimination construction on the flat [E] edge bank: a dead edge
+freezes its transport state bit-exactly, and a rejoin resets BOTH directed
+records of every incident link (the `rev_edge` pair).
+
+tests/.github lane note: the scale-smoke CI lane asserts this module
+collects at least MATRIX_MIN_TESTS tests, so the matrix cannot silently
+shrink.  Update the pin when deliberately extending the matrix.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, SparseEdgeGossipTransport
+from repro.dynamics import (
+    EdgeDropout,
+    GilbertElliott,
+    GraphEvent,
+    GraphProcess,
+    NodeChurn,
+    PeriodicRewiring,
+    StaticGraph,
+)
+from repro.dynamics.processes import _live_layout
+from repro.engine import Experiment, Schedule, World
+from repro.graphs.sparse import rev_edge_permutation, sparse_ring
+
+#: collection floor enforced by the CI scale-smoke lane (see .github).
+MATRIX_MIN_TESTS = 26
+
+TINY = dict(steps_per_round=1, batch_size=8, lr=0.1, momentum=0.9, seed=3)
+
+CATALOG = [
+    StaticGraph(),
+    EdgeDropout(p=0.3),
+    GilbertElliott(p_gb=0.25, p_bg=0.4),
+    NodeChurn(p_leave=0.3, p_rejoin=0.6),
+    PeriodicRewiring(period=2, num_graphs=3, seed=4,
+                     topo_kwargs={"k": 2, "p": 0.2}),
+]
+
+ADAPTIVE = CommConfig(codec="int8", policy="adaptive", target_trigger=0.6,
+                      per_edge=True)
+
+
+@pytest.fixture(scope="module")
+def ba_world():
+    from repro.models.mlp_cnn import make_mlp
+
+    return World.synthetic(dataset="synth-mnist", nodes=16,
+                           topology="barabasi_albert", m=2, seed=5,
+                           scale=0.02,
+                           model=make_mlp(num_classes=10, hidden=(16,)))
+
+
+def _run(world, method, layout, *, comm=None, dyn=None, backend="vmap",
+         rounds=3, mode="loop"):
+    w = world if dyn is None else dataclasses.replace(world, dynamics=dyn)
+    exp = Experiment(w, method, comm=comm, backend=backend, layout=layout,
+                     schedule=Schedule(rounds=rounds, eval_every=rounds,
+                                       mode=mode), **TINY)
+    exp.run()
+    return exp
+
+
+def _assert_bit_equal(a: Experiment, b: Experiment):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert a.comm_bytes_total == b.comm_bytes_total
+    assert a.trig_history == b.trig_history
+    assert a.live_history == b.live_history
+
+
+# ------------------------------------------------------------ method matrix
+
+
+@pytest.mark.parametrize("method", ["decavg", "dechetero", "cfa", "cfa-ge",
+                                    "decdiff", "decdiff+vt", "fedavg",
+                                    "isol"])
+def test_methods_match_dense_under_dropout(ba_world, method):
+    """Every method in the roster, under EdgeDropout — including CFA-GE,
+    whose gradient-exchange phase now lowers through the width buckets."""
+    dyn = EdgeDropout(p=0.3)
+    dense = _run(ba_world, method, "dense", dyn=dyn)
+    sparse = _run(ba_world, method, "sparse", dyn=dyn)
+    _assert_bit_equal(dense, sparse)
+
+
+# --------------------------------------------------------- transport matrix
+
+
+@pytest.mark.parametrize("dyn", [None, GilbertElliott(p_gb=0.25, p_bg=0.4)],
+                         ids=["static", "gilbert-elliott"])
+@pytest.mark.parametrize("comm", [
+    CommConfig(codec="int8", trigger_threshold=0.5),
+    CommConfig(codec="fp32", per_edge=True, trigger_threshold=0.5),
+    ADAPTIVE,
+], ids=["per-node-int8", "per-edge-fp32-thr", "per-edge-adaptive-int8"])
+def test_transports_match_dense(ba_world, comm, dyn):
+    """Per-node and per-edge transports: bytes, trigger history and the
+    per-edge controller state all reproduce the dense oracle."""
+    dense = _run(ba_world, "decdiff+vt", "dense", comm=comm, dyn=dyn)
+    sparse = _run(ba_world, "decdiff+vt", "sparse", comm=comm, dyn=dyn)
+    assert dense.comm_bytes_total > 0
+    _assert_bit_equal(dense, sparse)
+
+
+def test_per_edge_controller_state_matches_dense(ba_world):
+    """Beyond the histories: the sparse [E] threshold/EMA/ever banks hold
+    exactly the dense [N, max_deg] panels' valid entries, addressed by the
+    canonical edge id (receiver CSR rows = dense slot order)."""
+    dyn = EdgeDropout(p=0.3)
+    dense = _run(ba_world, "decdiff+vt", "dense", comm=ADAPTIVE, dyn=dyn)
+    sparse = _run(ba_world, "decdiff+vt", "sparse", comm=ADAPTIVE, dyn=dyn)
+    st = sparse.topo
+    off = st.row_offsets
+    # dense slot d of row i is the OUT-link i -> nbr_idx[i, d]; its flat CSR
+    # id is rev_edge[off[i] + d] (slot d of i's CSR row is the IN-link, and
+    # rev_edge flips direction), so rev_edge[off[i]:off[i+1]] enumerates
+    # dense row i's valid slots in order.
+    rev = rev_edge_permutation(st)
+    ds, ss = dense.comm_state, sparse.comm_state
+    for name in ("last_sent", "threshold", "drift_ema", "ever_delivered"):
+        panel = np.asarray(getattr(ds, name))
+        flat = np.asarray(getattr(ss, name))
+        for i in range(st.num_nodes):
+            deg = off[i + 1] - off[i]
+            ids = rev[off[i]:off[i + 1]]
+            assert np.array_equal(panel[i, :deg], flat[ids]), (name, i)
+
+
+# ---------------------------------------------------------- dynamics matrix
+
+
+@pytest.mark.parametrize("dyn", CATALOG, ids=lambda p: p.name)
+def test_processes_match_dense_through_adaptive_transport(ba_world, dyn):
+    """Every shipped GraphProcess through the per-edge adaptive int8
+    transport, scan-fused: live masks, resets, byte accounting and the
+    controller all agree with the dense engine bit-for-bit."""
+    dense = _run(ba_world, "decdiff+vt", "dense", comm=ADAPTIVE, dyn=dyn,
+                 mode="fused")
+    sparse = _run(ba_world, "decdiff+vt", "sparse", comm=ADAPTIVE, dyn=dyn,
+                  mode="fused")
+    _assert_bit_equal(dense, sparse)
+
+
+# ----------------------------------------------------------- backend matrix
+
+
+@pytest.mark.parametrize("method,comm", [
+    ("decdiff+vt", ADAPTIVE),
+    ("cfa-ge", None),
+], ids=["per-edge-adaptive", "cfa-ge"])
+def test_backends_match_across_layouts(ba_world, method, comm):
+    """All four (layout, backend) combinations agree (single-pod mesh in
+    tier-1; the real 4-pod split runs in the multihost lane below)."""
+    dyn = NodeChurn(p_leave=0.25, p_rejoin=0.5)
+    ref = _run(ba_world, method, "dense", comm=comm, dyn=dyn)
+    for layout in ("dense", "sparse"):
+        for backend in ("vmap", "shard_map"):
+            exp = _run(ba_world, method, layout, comm=comm, dyn=dyn,
+                       backend=backend)
+            _assert_bit_equal(ref, exp)
+
+
+@pytest.mark.multihost
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices for a real pod axis")
+@pytest.mark.parametrize("method,comm", [
+    ("decdiff+vt", ADAPTIVE),
+    ("cfa-ge", None),
+], ids=["per-edge-adaptive", "cfa-ge"])
+def test_four_pod_mesh_matches_dense_vmap(ba_world, method, comm):
+    """The forced 4-pod mesh: the sparse per-edge bank (replicated) and the
+    bucketed CFA-GE walk lower blockwise and still match the dense vmap
+    oracle bit-for-bit, scan-fused."""
+    dyn = EdgeDropout(p=0.3)
+    ref = _run(ba_world, method, "dense", comm=comm, dyn=dyn, mode="fused")
+    sm = _run(ba_world, method, "sparse", comm=comm, dyn=dyn,
+              backend="shard_map", mode="fused")
+    assert int(sm.mesh.shape["pod"]) == 4
+    _assert_bit_equal(ref, sm)
+
+
+# ------------------------------------------- churn regression pins (PR-5
+# reset-discrimination construction, re-run on the flat [E] edge bank)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScriptedChurn(GraphProcess):
+    """Test-only: alive follows a fixed [T, N] table; `_live_layout`
+    realizes the live mask in whichever layout the topology carries, so ONE
+    process definition drives both engines."""
+
+    table: tuple  # T rows of N {0,1}
+
+    name = "scripted_churn"
+    needs_rng = False
+
+    def init_state(self, topo):
+        return jnp.ones((topo.num_nodes,), jnp.float32)
+
+    def make_step(self, topo):
+        _, _, from_alive = _live_layout(topo)
+        table = jnp.asarray(self.table, jnp.float32)
+
+        def step(prev_alive, round_idx, key):
+            del key
+            alive = table[round_idx % table.shape[0]]
+            rejoined = (1.0 - prev_alive) * alive
+            return alive, GraphEvent(live=from_alive(alive), alive=alive,
+                                     rejoined=rejoined)
+
+        return step
+
+
+@pytest.fixture(scope="module")
+def ring_world():
+    from repro.models.mlp_cnn import make_mlp
+
+    return World.synthetic(dataset="synth-mnist", nodes=4, topology="ring",
+                           seed=3, scale=0.02,
+                           model=make_mlp(num_classes=10, hidden=(32,)))
+
+
+def _scripted(world):
+    # 4-node ring; node 0: alive, dead, alive (rejoins at round 2)
+    table = ((1, 1, 1, 1), (0, 1, 1, 1), (1, 1, 1, 1))
+    return dataclasses.replace(world, dynamics=ScriptedChurn(table=table))
+
+
+def test_rejoin_resets_both_directed_edge_records_in_engine(ring_world):
+    """The dense pin (tests/test_dynamics.py::
+    test_rejoin_resets_incident_edges_in_engine) on the sparse engine:
+    with threshold 2.6 only zero references fire after bootstrap, so the
+    round-2 fired edges are EXACTLY the 4 directed edges incident to the
+    rejoined node — proving the engine raised reset on BOTH directed
+    records (e and rev_edge[e]) of each incident link."""
+    comm = CommConfig(codec="fp32", trigger_threshold=2.6, per_edge=True)
+    exp = Experiment(_scripted(ring_world), "decdiff+vt", comm=comm,
+                     layout="sparse",
+                     schedule=Schedule(rounds=3, eval_every=3, mode="loop"),
+                     steps_per_round=2, batch_size=16, lr=0.1, momentum=0.9,
+                     seed=3)
+    exp.run()
+    assert exp.trig_history[0] == 1.0
+    assert exp.trig_history[1] == 0.0
+    assert abs(exp.trig_history[2] - 4.0 / 8.0) < 1e-6, exp.trig_history
+    st = exp.topo
+    rev = rev_edge_permutation(st)
+    ever = np.asarray(exp.comm_state.ever_delivered)
+    incident = np.flatnonzero((st.edge_src == 0) | (st.edge_dst == 0))
+    # every incident link re-delivered in BOTH directions after the reset
+    for e in incident:
+        assert ever[e] == 1.0 and ever[rev[e]] == 1.0, e
+    # ...and the engine's histories equal the dense engine's on the same
+    # scripted world (the ScriptedChurn protocol is layout-agnostic).
+    ref = Experiment(_scripted(ring_world), "decdiff+vt", comm=comm,
+                     layout="dense",
+                     schedule=Schedule(rounds=3, eval_every=3, mode="loop"),
+                     steps_per_round=2, batch_size=16, lr=0.1, momentum=0.9,
+                     seed=3)
+    ref.run()
+    _assert_bit_equal(ref, exp)
+
+
+def test_dead_edge_freezes_sparse_transport_state():
+    """Direct transport API (the dense pin's [E] mirror): a reset returns
+    exactly the flagged edges to bootstrap — including the reverse-direction
+    record — and a live=0 edge advances NOTHING: reference, residual,
+    threshold, EMA and delivery history all stay bit-identical."""
+    st = sparse_ring(4)
+    params = {"w": jnp.asarray(np.random.default_rng(0)
+                               .standard_normal((4, 16)), jnp.float32)}
+    cfg = CommConfig(codec="int8", policy="adaptive", target_trigger=0.9,
+                     stochastic=False)
+    tr = SparseEdgeGossipTransport(cfg, params, st)
+    state = tr.init_state(params)
+    link = jnp.ones((st.num_directed,), jnp.float32)
+    for _ in range(3):  # advance thresholds/EMA/references
+        _, _, _, state = tr.exchange(params, state, link)
+    rej = jnp.zeros((4,), jnp.float32).at[0].set(1.0)
+    reset = jnp.maximum(rej[tr.edge_src], rej[tr.edge_dst])
+    state2 = tr.reset_edges(state, reset)
+    rmask = np.asarray(reset) > 0
+    rev = np.asarray(tr.rev_edge)
+    assert rmask[rev[rmask]].all()  # the reset set is rev_edge-closed
+    assert (np.asarray(state2.last_sent)[rmask] == 0).all()
+    assert (np.asarray(state2.threshold)[rmask] == tr.thr0).all()
+    assert (np.asarray(state2.drift_ema)[rmask] == 0).all()
+    assert (np.asarray(state2.ever_delivered)[rmask] == 0).all()
+    for f, f2 in zip(state, state2):  # untouched edges bit-identical
+        if f is not None:
+            assert np.array_equal(np.asarray(f)[~rmask],
+                                  np.asarray(f2)[~rmask])
+    # frozen-when-down: a live=0 edge advances nothing
+    live = 1.0 - reset
+    _, _, gate, state3 = tr.exchange(params, state2, link * live, live=live)
+    assert (np.asarray(gate)[rmask] == 0).all()
+    for f2, f3 in zip(state2, state3):
+        if f2 is not None:
+            assert np.array_equal(np.asarray(f2)[rmask],
+                                  np.asarray(f3)[rmask])
