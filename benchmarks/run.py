@@ -73,6 +73,27 @@ def main() -> None:
            f"int8+adaptive dropout(0.2) dAcc={drop['acc_delta_vs_static']:+.3f} "
            f"bytes={drop['bytes_ratio_vs_static']:.2f}x vs static")
 
+    # --- time-to-accuracy suite (event clock) ---------------------------
+    from benchmarks import bench_time
+
+    t0 = time.time()
+    # the reduced lane runs as a smoke sweep (time_smoke artifact) so a
+    # down-scaled pass never clobbers the committed BENCH_time.json;
+    # --full refreshes the real artifact + BENCH verdict.
+    time_rows = bench_time.run(
+        rounds=40 if args.full else 10,
+        nodes=16 if args.full else 8,
+        verbose=False, smoke=not args.full)
+    tbase = next(r for r in time_rows if r["world"] == "ba"
+                 and r["config"] == "sync-fp32")
+    tchal = next(r for r in time_rows if r["world"] == "ba"
+                 and r["config"] == "deadline-int8"
+                 and r["scenario"] == "hetero")
+    record("time_suite", t0,
+           f"sync {tbase['sim_time']:.0f}s vs deadline "
+           f"{tchal['sim_time']:.0f}s simulated (ba, "
+           f"dAcc={tchal['acc_mean'] - tbase['acc_mean']:+.3f})")
+
     # --- comm table (paper §VI-A.3) ------------------------------------
     from benchmarks import bench_comm
 

@@ -207,14 +207,26 @@ class CommConfig:
 class CommState(NamedTuple):
     """Per-node transport state, threaded through the jitted round.
 
-    `last_sent` and `ever_sent` are receiver-facing: replicated over pods
-    (every pod recomputes the full-axis update from the gathered wire);
-    `residual` is sender-private and shards with its rows.
+    `last_sent`, `ever_sent` and `ever_recv` are receiver-facing: replicated
+    over pods (every pod recomputes the full-axis update from the gathered
+    wire); `residual` is sender-private and shards with its rows.
+
+    `ever_recv` is the per-EDGE delivery history (`[N, max_deg]` in the
+    padded receiver layout, `[E]` over the CSR edge list — whichever layout
+    the engine bound): has this edge ever actually DELIVERED a payload?  It
+    is what the `on_silence="stale"` mask consults — a payload that was
+    *sent but never arrived* (link failure, missed deadline) leaves it 0, so
+    the receiver does not aggregate a cache it never filled.  `ever_sent`
+    (sender-side, flips on transmission) is kept for byte/trigger
+    accounting; it must NOT gate staleness.  `ever_recv` is None when the
+    transport is built without an edge layout (direct construction) — the
+    engine always supplies one.
     """
 
     last_sent: jnp.ndarray            # [N, D] last reconstruction on the wire
     residual: Optional[jnp.ndarray]   # [R, ...] EF residual (None if stateless)
     ever_sent: jnp.ndarray            # [N] {0,1}: has node i transmitted yet?
+    ever_recv: Optional[jnp.ndarray] = None  # [N, max_deg] or [E] {0,1}
 
 
 class EdgeCommState(NamedTuple):
@@ -239,9 +251,18 @@ def _check_wire(wire: str):
 
 
 class GossipTransport:
-    """Flatten -> trigger -> encode -> wire -> decode -> unflatten."""
+    """Flatten -> trigger -> encode -> wire -> decode -> unflatten.
 
-    def __init__(self, config: CommConfig, stacked_params):
+    The optional edge-layout kwargs give the per-node transport a per-EDGE
+    delivery history (`CommState.ever_recv`) in the engine's bound layout:
+    pass `nbr_idx`/`nbr_valid` (the padded `[N, max_deg]` panels) on the
+    dense layout, or `edge_src`/`edge_dst` (the CSR directed edge list) on
+    the sparse one.  Without either the transport still runs (direct
+    construction, the legacy shape) but carries no delivery history —
+    `ever_recv` stays None."""
+
+    def __init__(self, config: CommConfig, stacked_params, *,
+                 nbr_idx=None, nbr_valid=None, edge_src=None, edge_dst=None):
         self.config = config
         self.codec = config.make_codec()
         mat, self._unflatten = tree_flatten_stacked(stacked_params)
@@ -251,15 +272,34 @@ class GossipTransport:
         self.dense_bytes = 4 * self.d  # fp32 reference for reduction ratios
         self.wants_rng = (self.codec.needs_rng
                           and getattr(self.codec, "stochastic", True))
+        if nbr_idx is not None:
+            idx = np.asarray(nbr_idx, np.int64)
+            self._recv_idx = jnp.asarray(np.maximum(idx, 0).astype(np.int32))
+            self._recv_valid = jnp.asarray(
+                np.asarray(nbr_valid, np.float32))
+            self._recv_shape = self._recv_idx.shape
+            self._edge_src = self._edge_dst = None
+        elif edge_src is not None:
+            self._edge_src = jnp.asarray(np.asarray(edge_src, np.int32))
+            self._edge_dst = jnp.asarray(np.asarray(edge_dst, np.int32))
+            self._recv_shape = self._edge_src.shape
+            self._recv_idx = self._recv_valid = None
+        else:
+            self._recv_shape = None
+            self._recv_idx = self._recv_valid = None
+            self._edge_src = self._edge_dst = None
 
     def init_state(self, stacked_params) -> CommState:
         mat, _ = tree_flatten_stacked(stacked_params)
         residual = (jax.vmap(self.codec.init_residual)(mat)
                     if self.codec.has_residual else None)
+        ever_recv = (jnp.zeros(self._recv_shape, jnp.float32)
+                     if self._recv_shape is not None else None)
         # zero reference: the first transmission carries the full model
         # through the codec, so receivers need no out-of-band bootstrap.
         return CommState(last_sent=jnp.zeros_like(mat), residual=residual,
-                         ever_sent=jnp.zeros((self.n,), jnp.float32))
+                         ever_sent=jnp.zeros((self.n,), jnp.float32),
+                         ever_recv=ever_recv)
 
     def state_specs(self, shard, rep) -> CommState:
         """The PartitionSpec tree matching init_state's layout: replicated
@@ -267,7 +307,19 @@ class GossipTransport:
         return CommState(
             last_sent=rep,
             residual=shard if self.codec.has_residual else None,
-            ever_sent=rep)
+            ever_sent=rep,
+            ever_recv=rep if self._recv_shape is not None else None)
+
+    def note_delivery(self, state: CommState, delivered) -> CommState:
+        """Fold one round's REALIZED deliveries (`[N, max_deg]` or `[E]`
+        {0,1} in the bound layout: trigger AND link AND live AND arrival)
+        into the per-edge delivery history.  Kept separate from `exchange`
+        because only the engine knows the composed delivery mask — the
+        transport sees the trigger gate, not the deadline."""
+        if state.ever_recv is None:
+            return state
+        return state._replace(
+            ever_recv=jnp.maximum(state.ever_recv, delivered))
 
     def reset_rows(self, state: CommState, reset,
                    ctx: PodContext = DENSE_CTX) -> CommState:
@@ -286,10 +338,23 @@ class GossipTransport:
             rr = ctx.rows(reset) > 0
             rb = rr.reshape(rr.shape + (1,) * (residual.ndim - 1))
             residual = jnp.where(rb, 0.0, residual)
+        ever_recv = state.ever_recv
+        if ever_recv is not None:
+            # every edge incident to a reset node (either direction) loses
+            # its delivery history: the rejoined device's caches of its
+            # peers AND its peers' caches of it are gone.
+            if self._recv_idx is not None:
+                clear = jnp.maximum(reset[:, None],
+                                    reset[self._recv_idx]) * self._recv_valid
+            else:
+                clear = jnp.maximum(reset[self._edge_src],
+                                    reset[self._edge_dst])
+            ever_recv = jnp.where(clear > 0, 0.0, ever_recv)
         return CommState(
             last_sent=jnp.where(r[:, None], 0.0, state.last_sent),
             residual=residual,
-            ever_sent=jnp.where(r, 0.0, state.ever_sent))
+            ever_sent=jnp.where(r, 0.0, state.ever_sent),
+            ever_recv=ever_recv)
 
     def exchange(self, stacked_params, state: CommState, rng=None,
                  send_mask=None, *, ctx: PodContext = DENSE_CTX,
@@ -364,7 +429,10 @@ class GossipTransport:
             new_res = jnp.where(keep, new_res, state.residual)
         new_state = CommState(
             last_sent=new_last, residual=new_res,
-            ever_sent=jnp.maximum(state.ever_sent, gate_full))
+            ever_sent=jnp.maximum(state.ever_sent, gate_full),
+            ever_recv=state.ever_recv)  # the engine folds realized
+        # deliveries in afterwards (note_delivery) — exchange cannot know
+        # the composed link x live x arrival mask.
         return self._unflatten(new_last), gate_full, new_state
 
 

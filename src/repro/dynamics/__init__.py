@@ -8,19 +8,22 @@
 A :class:`GraphProcess` turns the world's static topology into a per-round
 sequence of edge masks — i.i.d. edge dropout, Gilbert–Elliott bursty links,
 node churn (with explicit per-edge comm-state reset on rejoin), periodic
-rewiring — each a pure on-device state transition that compiles inside the
-engine's fused ``lax.scan`` schedule.  See docs/dynamics.md for the catalog
-and semantics.
+rewiring, scripted mask-table replay, and drift-adaptive energy churn
+(observing the `repro.timing` event clock's realized compute cost) — each a
+pure on-device state transition that compiles inside the engine's fused
+``lax.scan`` schedule.  See docs/dynamics.md for the catalog and semantics.
 """
 from repro.dynamics.processes import (  # noqa: F401
     PROCESSES,
     BoundProcess,
     EdgeDropout,
+    EnergyChurn,
     GilbertElliott,
     GraphEvent,
     GraphProcess,
     NodeChurn,
     PeriodicRewiring,
+    ScriptedGraph,
     StaticGraph,
     make_process,
 )

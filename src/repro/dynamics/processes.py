@@ -48,6 +48,25 @@ The shipped catalog (`make_process` names):
     ``(r // period) % num_graphs`` as a mask over the union.  This is how a
     rewiring process — which changes the neighbour *sets* — stays a pure
     on-device transition: the padded layout is static, only the mask moves.
+  ``scripted``          — mask-table replay: round r plays row
+    ``tables[r]`` of a recorded ``[T, ...]`` live-mask schedule (per-pair
+    coins or per-round adjacency matrices), with the `repro.timing`
+    period/clamp rule past the table end.  The replay mechanism for
+    recorded connectivity traces — and the determinism workhorse for
+    reproducing any adversarial schedule in a test.
+  ``energy_churn``      — drift-ADAPTIVE churn: each node drains a battery
+    by its REALIZED per-round compute seconds (observed from the
+    `repro.timing` event clock, one round delayed), dies at empty, and
+    recharges while dead until ``rejoin_at``.  The first observing process:
+    its transition reads a per-node scalar the engine feeds from the
+    timing state (see "Observing processes" below).
+
+Observing processes: a process with ``observes = True`` receives a fourth
+transition argument — a per-node ``[N]`` float32 observation vector the
+engine supplies (currently: the previous round's realized compute seconds,
+``TimingState.last_cost``; zeros at round 0).  The one-round delay keeps
+the transition causal inside the fused ``lax.scan``.  An observing process
+requires ``World(timing=...)``; `Experiment` raises otherwise.
 
 Both node-axis layouts run the SAME processes.  Bound to a dense
 :class:`~repro.graphs.topology.Topology`, ``live`` comes out in the padded
@@ -78,6 +97,7 @@ from repro.graphs.sparse import (
     undirected_pair_ids,
 )
 from repro.graphs.topology import Topology, _from_adjacency, make_topology
+from repro.timing.models import PAST_END, past_end_index
 
 
 class GraphEvent(NamedTuple):
@@ -104,7 +124,7 @@ class BoundProcess:
     process: "GraphProcess"
     topo: Any                # Topology or SparseTopology static layout
     state0: Any              # pytree of jnp arrays, scan-carried
-    step: Callable           # (state, round_idx, key) -> (state, GraphEvent)
+    step: Callable           # (state, round_idx, key[, obs]) -> (state, GraphEvent)
     stationary_live_frac: Optional[float] = None
 
     @property
@@ -114,6 +134,10 @@ class BoundProcess:
     @property
     def needs_rng(self) -> bool:
         return self.process.needs_rng
+
+    @property
+    def observes(self) -> bool:
+        return self.process.observes
 
 
 def _layout(topo: Topology):
@@ -158,6 +182,20 @@ def _pair_layout(topo):
     return m, to_live
 
 
+def _pair_coords(topo):
+    """The canonical undirected pair (lo, hi) node coordinates, in the same
+    ascending ``(lo, hi)`` order `_pair_layout` enumerates — how a recorded
+    ``[T, N, N]`` adjacency table is read down to per-pair coins."""
+    n = topo.num_nodes
+    if isinstance(topo, SparseTopology):
+        lo = np.minimum(topo.edge_src, topo.edge_dst).astype(np.int64)
+        hi = np.maximum(topo.edge_src, topo.edge_dst).astype(np.int64)
+        codes = np.unique(lo * n + hi)
+        return codes // n, codes % n
+    iu, ju = np.nonzero(np.triu(topo.adjacency, 1))
+    return iu.astype(np.int64), ju.astype(np.int64)
+
+
 def _live_layout(topo):
     """Per-layout aliveness plumbing: ``(n, all_live, live_from_alive)``.
 
@@ -190,11 +228,15 @@ class GraphProcess:
     :meth:`bind` once and the engine owns the returned transition.  Set
     ``needs_rng = False`` when the transition is deterministic — the engine
     then consumes NO extra rng, which is what makes ``StaticGraph``
-    bit-identical to running without dynamics at all.
+    bit-identical to running without dynamics at all.  Set
+    ``observes = True`` for a drift-adaptive process whose transition takes
+    a fourth ``obs`` argument (a per-node ``[N]`` float32 the engine feeds
+    from the `repro.timing` event clock — see the module docstring).
     """
 
     name: str = "graph-process"
     needs_rng: bool = True
+    observes: bool = False
 
     def bind(self, topo) -> BoundProcess:
         """Bind to a dense Topology or a SparseTopology (the live-mask
@@ -523,6 +565,143 @@ class PeriodicRewiring(GraphProcess):
         return None
 
 
+@dataclasses.dataclass(frozen=True)
+class ScriptedGraph(GraphProcess):
+    """Mask-table replay: round r realizes row ``tables[r]`` of a recorded
+    live-mask schedule.
+
+    ``tables`` is either ``[T, num_pairs]`` {0,1} coins over the canonical
+    ascending ``(lo, hi)`` undirected-pair enumeration, or ``[T, N, N]``
+    {0,1} symmetric adjacency matrices (read down to per-pair coins at the
+    STATIC topology's pair coordinates — edges outside the bound layout
+    are ignored, exactly like any other process's mask).  Past the table
+    end the shared `repro.timing` ``past_end`` rule applies: ``"wrap"``
+    replays the schedule periodically, ``"clamp"`` holds the last row
+    forever.  Deterministic (``needs_rng = False``) and pair-keyed, so both
+    layouts, both backends and both schedule modes realize the identical
+    sequence — the replay mechanism for recorded connectivity traces and
+    for pinning adversarial schedules in tests."""
+
+    tables: Any  # [T, num_pairs] pair coins or [T, N, N] adjacency, {0,1}
+    past_end: str = "wrap"
+
+    name = "scripted"
+    needs_rng = False
+
+    def __post_init__(self):
+        if self.past_end not in PAST_END:
+            raise ValueError(f"past_end must be one of {PAST_END}, "
+                             f"got {self.past_end!r}")
+        tab = np.asarray(self.tables, np.float32)
+        if tab.ndim not in (2, 3) or tab.shape[0] < 1:
+            raise ValueError(f"tables must be [T >= 1, num_pairs] or "
+                             f"[T >= 1, N, N], got shape {tab.shape}")
+        if tab.ndim == 3 and tab.shape[1] != tab.shape[2]:
+            raise ValueError(f"adjacency tables must be square per round, "
+                             f"got shape {tab.shape}")
+        if not np.isin(tab, (0.0, 1.0)).all():
+            raise ValueError("scripted masks must be {0, 1}")
+
+    def _coins(self, topo) -> np.ndarray:
+        """The [T, num_pairs] coin table in canonical pair order."""
+        tab = np.asarray(self.tables, np.float32)
+        m, _ = _pair_layout(topo)
+        if tab.ndim == 2:
+            if tab.shape[1] != m:
+                raise ValueError(
+                    f"pair-coin tables cover {tab.shape[1]} pairs, the "
+                    f"bound topology has {m} (canonical ascending (lo, hi) "
+                    f"order)")
+            return tab
+        if tab.shape[1] != topo.num_nodes:
+            raise ValueError(f"adjacency tables cover {tab.shape[1]} nodes, "
+                             f"world has {topo.num_nodes}")
+        asym = np.abs(tab - np.transpose(tab, (0, 2, 1)))
+        if asym.max() > 0:
+            raise ValueError("adjacency tables must be symmetric (an "
+                             "undirected edge is up or down for both "
+                             "endpoints)")
+        lo, hi = _pair_coords(topo)
+        return tab[:, lo, hi]
+
+    def make_step(self, topo):
+        m, to_live = _pair_layout(topo)
+        coins = jnp.asarray(self._coins(topo))
+        t_len, past_end = int(coins.shape[0]), self.past_end
+        n = topo.num_nodes
+        ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+
+        def step(state, round_idx, key):
+            del key
+            up = coins[past_end_index(round_idx, t_len, past_end)]
+            return state, GraphEvent(live=to_live(up), alive=ones,
+                                     rejoined=zeros)
+
+        return step
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyChurn(GraphProcess):
+    """Drift-adaptive churn: compute drains a battery, dead devices
+    recharge.
+
+    Each node starts with ``capacity`` seconds of energy.  Every round an
+    alive node drains its REALIZED compute seconds (the `repro.timing`
+    event clock's ``last_cost`` observation: step time x trained steps, one
+    round delayed — a straggler that trains fewer steps under a deadline
+    also drains less); at zero it churns out.  A dead node recharges
+    ``recharge`` seconds per round and rejoins once its energy reaches
+    ``rejoin_at`` (flagged in ``GraphEvent.rejoined``, so the transports
+    reset its incident comm state like any other churn).  Deterministic
+    given the observation stream (``needs_rng = False``) — the coupling to
+    training is entirely through the observed cost, which is what makes the
+    process ADAPTIVE rather than exogenous.  Requires ``World(timing=...)``.
+    """
+
+    capacity: float = 32.0
+    recharge: float = 4.0
+    rejoin_at: float = 16.0
+
+    name = "energy_churn"
+    needs_rng = False
+    observes = True
+
+    def __post_init__(self):
+        if not self.capacity > 0:
+            raise ValueError(f"capacity must be > 0, got {self.capacity}")
+        if not self.recharge > 0:
+            raise ValueError(f"recharge must be > 0 (a device that never "
+                             f"recharges never rejoins), got {self.recharge}")
+        if not 0.0 < self.rejoin_at <= self.capacity:
+            raise ValueError(f"rejoin_at must be in (0, capacity], got "
+                             f"{self.rejoin_at}")
+
+    def init_state(self, topo):
+        n = topo.num_nodes
+        return (jnp.full((n,), self.capacity, jnp.float32),  # energy
+                jnp.ones((n,), jnp.float32))                 # alive
+
+    def make_step(self, topo):
+        n, _, from_alive = _live_layout(topo)
+        cap = jnp.float32(self.capacity)
+        rech = jnp.float32(self.recharge)
+        rejoin_at = jnp.float32(self.rejoin_at)
+
+        def step(state, round_idx, key, obs):
+            del round_idx, key
+            energy, alive = state
+            e = jnp.clip(energy - alive * obs + (1.0 - alive) * rech,
+                         0.0, cap)
+            new_alive = jnp.where(alive > 0, e > 0,
+                                  e >= rejoin_at).astype(jnp.float32)
+            rejoined = (1.0 - alive) * new_alive
+            return (e, new_alive), GraphEvent(live=from_alive(new_alive),
+                                              alive=new_alive,
+                                              rejoined=rejoined)
+
+        return step
+
+
 # ---------------------------------------------------------------- registry
 
 PROCESSES: Dict[str, Callable[..., GraphProcess]] = {
@@ -531,6 +710,8 @@ PROCESSES: Dict[str, Callable[..., GraphProcess]] = {
     "gilbert_elliott": GilbertElliott,
     "node_churn": NodeChurn,
     "periodic_rewiring": PeriodicRewiring,
+    "scripted": ScriptedGraph,
+    "energy_churn": EnergyChurn,
 }
 
 

@@ -23,18 +23,20 @@ two backends differ ONLY in the context they bind:
     tests/test_engine.py and tests/test_exchange_unified.py on the
     4-device CPU mesh, across the full capability roster).
 
-The round function's calling convention depends on the transport and on
-whether the experiment carries a `repro.dynamics.GraphProcess` (whose
-state is threaded through the round exactly like the transport's):
+The round function's calling convention is ONE generic shape over the
+three optional scan-carried subsystem states — the transport's comm state,
+the `repro.dynamics` process state, and the `repro.timing` event clock —
+each present iff the experiment carries the subsystem:
 
-  no comm:  (params, opt, round_idx, rng) -> (params, opt, rng, loss)
-  comm:     (params, opt, comm_state, round_idx, rng)
-            -> (params, opt, comm_state, rng, loss, sent_edges, trig_frac)
-  dynamics: (params, opt, dyn_state, round_idx, rng)
-            -> (params, opt, dyn_state, rng, loss, live_edges)
-  both:     (params, opt, comm_state, dyn_state, round_idx, rng)
-            -> (params, opt, comm_state, dyn_state, rng, loss,
-                sent_edges, trig_frac, live_edges)
+  (params, opt, *states, round_idx, rng)
+    -> (params, opt, *states, rng, loss, *extras)
+
+with `states` the present members of (comm_state, dyn_state, time_state)
+in that order, and `extras` the present accounting groups, in the same
+order: (sent_edges, trig_frac) with a transport, (live_edges,) with
+dynamics, (sim_time, arrived_edges) with timing.  The no-subsystem case
+degenerates to the legacy (params, opt, round_idx, rng) -> (params, opt,
+rng, loss).
 
 With dynamics, the round starts by realizing this round's graph (one pure
 state transition -> a GraphEvent): a dead node runs zero local steps and
@@ -44,7 +46,24 @@ live edges, a node that rejoins after churn has its per-link transport
 state reset before the exchange, and server-style aggregation intersects
 its data-size weights with the live mask (an offline client's frozen
 params carry zero weight).  `trig_frac` is the fired fraction of LIVE
-directed edges; `live_edges` their count.
+directed edges; `live_edges` their count.  An OBSERVING process
+(`EnergyChurn`) additionally receives the event clock's previous-round
+realized per-node compute cost as its transition observation.
+
+With timing, the round is priced in simulated seconds.  Under
+`Schedule(deadline=d)` each round is a deadline TICK: node i's local-step
+budget is capped at `floor(d / dt_i)` (stragglers train fewer steps), and
+a payload on edge (j -> i) ARRIVES iff `t_cost_j + transfer_ji <= d`
+(send time = the sender's realized compute; transfer = latency +
+payload_bytes / bandwidth from the bound `repro.timing` tables).  The
+arrival mask is intersected with the link/live masks in THIS one round
+body — a late payload is indistinguishable from a failed link: the sender
+burns its bytes, per-edge state freezes, and the silence path (stale
+cache / drop) covers the receiver.  Without a deadline the schedule stays
+synchronous — budgets are uncapped, everything arrives, and the tick is
+the round's realized makespan (slowest node + slowest live transfer) — so
+the degenerate model is bit-identical to timing=None by construction (no
+extra rng is ever consumed: all time tables are bound numpy constants).
 
 Method behaviour enters exclusively through the experiment's strategy
 :class:`~repro.engine.Capabilities` record (kind / grad_exchange) and the
@@ -81,9 +100,23 @@ from repro.comm import (DENSE_CTX, EdgeGossipTransport, PodContext,
 from repro.comm.trigger import edge_delivery
 from repro.dist.sharding import NODE_AXIS
 from repro.engine.neighborhood import DenseNeighborhood, SparseNeighborhood
+from repro.timing import TimingState
 from repro.utils.pytree import tree_flatten_stacked
 
 BACKENDS = ("vmap", "shard_map")
+
+
+def _and_masks(*ms):
+    """Product of the non-None {0,1} float masks (None = all-ones = skip);
+    None if every factor is absent.  Exact {0,1} products, so composition
+    order cannot affect bits."""
+    ms = [m for m in ms if m is not None]
+    if not ms:
+        return None
+    out = ms[0]
+    for m in ms[1:]:
+        out = out * m
+    return out
 
 
 def build_round(exp):
@@ -115,16 +148,21 @@ def _freeze_dead(new_params, old_params, alive):
 
 def _make_realize(exp):
     """The dynamics prelude: consume (at most) one rng split and run the
-    process transition, yielding this round's GraphEvent."""
+    process transition, yielding this round's GraphEvent.  An observing
+    process additionally receives `obs` — the event clock's previous-round
+    realized per-node compute cost (zeros at round 0)."""
     bound = exp.bound_dyn
-    step, needs_rng = bound.step, bound.needs_rng
+    step, needs_rng, observes = bound.step, bound.needs_rng, bound.observes
 
-    def realize(dyn_state, round_idx, rng):
+    def realize(dyn_state, round_idx, rng, obs=None):
         if needs_rng:
             rng, dk = jax.random.split(rng)
         else:
             dk = None
-        dyn_state, ev = step(dyn_state, round_idx, dk)
+        if observes:
+            dyn_state, ev = step(dyn_state, round_idx, dk, obs)
+        else:
+            dyn_state, ev = step(dyn_state, round_idx, dk)
         return dyn_state, ev, rng
 
     return realize
@@ -135,7 +173,11 @@ def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
     nodes whose data is (x, y, counts); `rows` slices globally-computed
     [N, ...] randomness to the block (identity on the vmap backend).
     `alive` ([N], optional) zeroes the step budget of churned-out devices —
-    an offline node trains nothing and its params/opt state freeze."""
+    an offline node trains nothing and its params/opt state freeze.
+    `cap` ([N] int32, optional) is the event clock's deadline cap
+    (`floor(deadline / dt_i)`): a straggler trains only the steps that fit
+    in the tick.  Returns the FULL-axis realized budgets alongside, so the
+    clock can price each node's round at `budget_i * dt_i` seconds."""
     cfg = exp.train
     n = exp.n
     batcher = exp.batcher
@@ -146,17 +188,22 @@ def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
     v_take = jax.vmap(take_batch, in_axes=(0, 0, 0, None))
     v_step = jax.vmap(exp._train_step, in_axes=(0, 0, 0, 0, None, 0))
 
-    def local_training(params, opt, round_idx, rng, alive=None):
+    def local_training(params, opt, round_idx, rng, alive=None, cap=None):
         # Heterogeneous E (Alg. 1): per-node step budget for this round;
         # nodes past their budget keep their params (masked update).
+        # Budgets are computed FULL-axis (replicated rng, then capped and
+        # alive-masked) and row-sliced, so every pod prices every node.
         if cfg.hetero_steps_min > 0:
             rng, sub = jax.random.split(rng)
-            budgets = rows(jax.random.randint(
-                sub, (n,), cfg.hetero_steps_min, cfg.steps_per_round + 1))
+            budgets_full = jax.random.randint(
+                sub, (n,), cfg.hetero_steps_min, cfg.steps_per_round + 1)
         else:
-            budgets = rows(jnp.full((n,), cfg.steps_per_round, jnp.int32))
+            budgets_full = jnp.full((n,), cfg.steps_per_round, jnp.int32)
+        if cap is not None:
+            budgets_full = jnp.minimum(budgets_full, cap)
         if alive is not None:
-            budgets = budgets * rows(alive).astype(budgets.dtype)
+            budgets_full = budgets_full * alive.astype(budgets_full.dtype)
+        budgets = rows(budgets_full)
 
         def body(carry, b):
             params, opt, rng = carry
@@ -179,7 +226,7 @@ def _make_local_training(exp, *, x, y, counts, rows, loss_reduce):
 
         (params, opt, rng), losses = jax.lax.scan(
             body, (params, opt, rng), jnp.arange(cfg.steps_per_round))
-        return params, opt, rng, loss_reduce(jnp.mean(losses))
+        return params, opt, rng, loss_reduce(jnp.mean(losses)), budgets_full
 
     return local_training
 
@@ -364,12 +411,13 @@ def _make_sparse_gradient_exchange(exp):
 def _make_round_body(exp, *, loss_reduce):
     """The ONE round body, written against a PodContext.
 
-    Returns ``body(ctx, params, opt, comm_state, dyn_state, round_idx, rng,
-    x, y)`` -> the full 9-slot tuple ``(params, opt, comm_state, dyn_state,
-    rng, loss, sent_edges, trig_frac, live_edges)`` with ``None`` in the
-    slots the experiment does not carry (the backend wrappers squeeze those
-    out to the documented calling conventions).  All branching below is on
-    STATIC configuration — capabilities, transport type, dynamics presence
+    Returns ``body(ctx, params, opt, comm_state, dyn_state, time_state,
+    round_idx, rng, x, y)`` -> the full 12-slot tuple ``(params, opt,
+    comm_state, dyn_state, time_state, rng, loss, sent_edges, trig_frac,
+    live_edges, sim_time, arrived_edges)`` with ``None`` in the slots the
+    experiment does not carry (the backend wrappers squeeze those out to
+    the documented calling conventions).  All branching below is on STATIC
+    configuration — capabilities, transport type, dynamics/timing presence
     — so each experiment traces exactly one path.
     """
     cfg, strategy, agg_state = exp.train, exp.strategy, exp.agg_state
@@ -383,8 +431,19 @@ def _make_round_body(exp, *, loss_reduce):
     n = exp.n
     has_dyn = exp.bound_dyn is not None
     realize = _make_realize(exp) if has_dyn else None
+    dyn_observes = has_dyn and exp.bound_dyn.observes
+    has_time = exp.bound_timing is not None
+    bt = exp.bound_timing
+    deadline = exp.deadline if has_time else None
+    step_time = bt.step_time if has_time else None
+    transfer_e = bt.transfer_e if has_time else None
+    transfer_panel = bt.transfer_panel if has_time else None
     sparse = exp.layout == "sparse"
     plan = exp.sparse_plan if sparse else None
+    # Does this round exchange payloads over the graph?  Controls whether
+    # the synchronous-mode clock tick includes the slowest live link's
+    # landing time on top of the compute makespan.
+    exchanges = (exp.transport is not None) or caps.kind == "gossip"
     # Gossip aggregation lowers to the strategy's flat form whenever one is
     # declared: one weighted neighbour reduce over a Neighborhood view, the
     # SAME code on both layouts (the dense view is the small-N oracle for
@@ -416,7 +475,8 @@ def _make_round_body(exp, *, loss_reduce):
                  else agg_state)
         return strategy.aggregate(exp, state, params, gathered, mask)
 
-    def body(ctx, params, opt, comm_state, dyn_state, round_idx, rng, x, y):
+    def body(ctx, params, opt, comm_state, dyn_state, time_state, round_idx,
+             rng, x, y):
         rows = ctx.rows
         local_training = _make_local_training(
             exp, x=x, y=y, counts=rows(counts), rows=rows,
@@ -424,14 +484,36 @@ def _make_round_body(exp, *, loss_reduce):
 
         # -- dynamics prelude: realize this round's graph ------------------
         if has_dyn:
-            dyn_state, ev, rng = realize(dyn_state, round_idx, rng)
+            obs = (time_state.last_cost
+                   if has_time and dyn_observes else None)
+            dyn_state, ev, rng = realize(dyn_state, round_idx, rng, obs)
             alive = ev.alive
         else:
             ev, alive = None, None
 
+        # -- event-clock prelude: per-node step times + deadline cap -------
+        # A deadline tick caps node i at floor(deadline / dt_i) local steps
+        # (a straggler trains fewer); without a deadline (synchronous mode)
+        # the budgets are untouched and the tick stretches to the realized
+        # makespan below.  Timing consumes NO rng: dt comes from the bound
+        # model's numpy draws keyed at bind time.
+        if has_time:
+            dt = step_time(round_idx)
+            if deadline is not None:
+                cap = jnp.minimum(
+                    jnp.floor(jnp.float32(deadline) / dt),
+                    jnp.float32(cfg.steps_per_round)).astype(jnp.int32)
+            else:
+                cap = None
+        else:
+            dt = cap = None
+
         # -- Alg. 1 l.4-9: local SGD (dead nodes run zero steps) -----------
-        params, opt, rng, train_loss = local_training(
-            params, opt, round_idx, rng, alive=alive)
+        params, opt, rng, train_loss, budgets_full = local_training(
+            params, opt, round_idx, rng, alive=alive, cap=cap)
+        # realized per-node compute cost this round (0 for dead nodes)
+        t_cost = (budgets_full.astype(jnp.float32) * dt if has_time
+                  else None)
 
         # -- exogenous link failures ∩ the live graph ----------------------
         # The split happens unconditionally on both layouts so the rng
@@ -440,25 +522,43 @@ def _make_round_body(exp, *, loss_reduce):
         # is why oracle equivalence is stated at participation == 1.0 —
         # there, neither layout draws at all.
         rng, sub = jax.random.split(rng)
+        # Arrival under a deadline tick: edge (j -> i)'s payload lands at
+        # t_cost_j + latency_ji + bytes/bandwidth_ji and is delivered iff it
+        # lands by the deadline.  A late payload is EXACTLY a failed link —
+        # same freeze/stale/drop silence path, sender's bytes still burned.
         if sparse:
-            link_full = None
+            link_full = arr_full = None
             link_u = (jax.random.uniform(sub, (plan.num_directed,))
                       if cfg.participation < 1.0 else None)
+            arr_e = ((t_cost[edge_src] + transfer_e
+                      <= jnp.float32(deadline)).astype(jnp.float32)
+                     if deadline is not None else None)
         else:
-            link_u = None
+            link_u = arr_e = None
             link_full = delivery_mask(sub)
             if has_dyn:
                 link_full = link_full * ev.live
+            if deadline is not None:
+                arr_full = (t_cost[nbr_idx] + transfer_panel
+                            <= jnp.float32(deadline)).astype(
+                                jnp.float32) * nbr_valid
+                link_full = link_full * arr_full
+            else:
+                arr_full = None
         old_params = params
 
-        def flat_gossip(params, gate_vec, table_mat=None, edge_mask=None):
+        def flat_gossip(params, gate_vec, table_mat=None, edge_mask=None,
+                        mask_full=None):
             """The flat-form gossip update: flatten the block's models,
             build the layout's Neighborhood over the full [N, D] table
             (gathered here unless the transport already decoded one), and
             run the strategy's flat aggregate.  `gate_vec` [N] {0,1} is the
             senders' broadcast gate; `edge_mask` [E] {0,1} is the sparse
-            layout's live-edge factor (the dense layout folds liveness into
-            `link_full` instead, so it ignores the argument)."""
+            layout's per-edge factor (liveness ∩ arrival ∩ delivery
+            history); `mask_full` [N, max_deg] {0,1} is the dense layout's
+            fully-composed counterpart — when given it REPLACES the default
+            gate·link composition (the per-node transport computes its
+            silence semantics there)."""
             local_mat, unflatten = tree_flatten_stacked(params)
             if table_mat is None:
                 table_mat = ctx.gather(local_mat)
@@ -469,8 +569,11 @@ def _make_round_body(exp, *, loss_reduce):
                                         cfg.participation,
                                         edge_mask=edge_mask)
             else:
-                w = rows(nbr_weight) * edge_delivery(
-                    gate_vec, rows(link_full), rows(nbr_idx))
+                if mask_full is not None:
+                    w = rows(nbr_weight) * rows(mask_full)
+                else:
+                    w = rows(nbr_weight) * edge_delivery(
+                        gate_vec, rows(link_full), rows(nbr_idx))
                 nb = DenseNeighborhood(table_mat, rows(nbr_idx), w,
                                        local_mat, unflatten)
             state = jax.tree.map(rows, agg_state)
@@ -490,7 +593,8 @@ def _make_round_body(exp, *, loss_reduce):
                 if use_flat:
                     params = flat_gossip(
                         params, jnp.ones((n,), jnp.float32),
-                        edge_mask=(ev.live if sparse and has_dyn else None))
+                        edge_mask=_and_masks(
+                            ev.live if sparse and has_dyn else None, arr_e))
                 else:
                     full = jax.tree.map(ctx.gather, params)
                     gathered = strategy.exchange(exp, full, rows(nbr_idx))
@@ -501,7 +605,8 @@ def _make_round_body(exp, *, loss_reduce):
                     if sparse:
                         params = gradient_exchange(
                             ctx, params, link_u,
-                            ev.live if has_dyn else None, round_idx, sub)
+                            _and_masks(ev.live if has_dyn else None, arr_e),
+                            round_idx, sub)
                     else:
                         params = gradient_exchange(rows, params,
                                                    rows(link_full),
@@ -535,6 +640,11 @@ def _make_round_body(exp, *, loss_reduce):
                     link_e = link_e * live
                 else:
                     reset = live = None
+                if arr_e is not None:
+                    # a late payload is a failed link: the receiver's
+                    # per-edge cache freezes and its bank serves the stale
+                    # (or dropped) reconstruction, bit-identically.
+                    link_e = link_e * arr_e
                 edge_table, mask_e, gate_full, new_comm = transport.exchange(
                     params, comm_state, link_e, ck, live=live, reset=reset,
                     ctx=ctx, wire=wire)
@@ -604,24 +714,53 @@ def _make_round_body(exp, *, loss_reduce):
                 params, comm_state, ck, send_mask=send_mask, ctx=ctx,
                 wire=wire)
             # `decoded` rows of silent nodes hold their cached last-sent
-            # model, so "stale" aggregates them at full weight (masking
-            # only neighbours that have NEVER transmitted — their cache is
-            # still the zero bootstrap reference); "drop" masks any silent
-            # node like a failed link.
-            if transport.config.on_silence == "drop":
-                gate_vec = gate_full
+            # model, so "stale" aggregates them at full weight — masking
+            # only edges that have NEVER DELIVERED, whose receiver-side
+            # cache is still the zero bootstrap reference.  Delivery, not
+            # transmission: a payload sent into a dead/failed/late link
+            # never reached this receiver, so `ever_recv` must not flip
+            # (the old `ever_sent` gate flipped on send and let receivers
+            # aggregate bootstrap zeros as if they were models).  "drop"
+            # masks any silent or undelivered edge like a failed link.
+            stale = transport.config.on_silence != "drop"
+            if sparse:
+                live_e = ev.live if has_dyn else None
+                # current-round exogenous edge factors (participation is
+                # applied inside the Neighborhood view via link_u)
+                cur_e = _and_masks(live_e, arr_e)
+                part_e = ((link_u < cfg.participation).astype(jnp.float32)
+                          if link_u is not None else None)
+                delivered_e = _and_masks(gate_full[edge_src], part_e,
+                                         live_e, arr_e)
+                new_comm = transport.note_delivery(new_comm, delivered_e)
+                if stale:
+                    params = flat_gossip(
+                        params, None,
+                        table_mat=tree_flatten_stacked(decoded)[0],
+                        edge_mask=_and_masks(cur_e, new_comm.ever_recv))
+                else:
+                    params = flat_gossip(
+                        params, gate_full,
+                        table_mat=tree_flatten_stacked(decoded)[0],
+                        edge_mask=cur_e)
             else:
-                gate_vec = new_comm.ever_sent
-            if use_flat:
-                params = flat_gossip(
-                    params, gate_vec,
-                    table_mat=tree_flatten_stacked(decoded)[0],
-                    edge_mask=(ev.live if sparse and has_dyn else None))
-            else:
-                mask = edge_delivery(gate_vec, rows(link_full),
-                                     rows(nbr_idx))
-                gathered = strategy.exchange(exp, decoded, rows(nbr_idx))
-                params = aggregate(rows, params, gathered, mask)
+                delivered_full = edge_delivery(gate_full, link_full,
+                                               nbr_idx)
+                new_comm = transport.note_delivery(new_comm, delivered_full)
+                if stale:
+                    mask_full = link_full * new_comm.ever_recv
+                else:
+                    mask_full = delivered_full
+                if use_flat:
+                    params = flat_gossip(
+                        params, None,
+                        table_mat=tree_flatten_stacked(decoded)[0],
+                        mask_full=mask_full)
+                else:
+                    gathered = strategy.exchange(exp, decoded,
+                                                 rows(nbr_idx))
+                    params = aggregate(rows, params, gathered,
+                                       rows(mask_full))
             # broadcast accounting: a transmitting node pays one payload
             # per outgoing edge — its LIVE outgoing edges under dynamics (a
             # non-existent link carries nothing); failed links still burn
@@ -647,17 +786,64 @@ def _make_round_body(exp, *, loss_reduce):
         else:
             live_total = None
 
-        return (params, opt, new_comm, dyn_state, rng, train_loss,
-                sent_edges, trig, live_total)
+        # -- event-clock epilogue: advance the simulated clock -------------
+        # Deadline mode ticks by exactly `deadline` (the round IS the tick);
+        # synchronous mode ticks by the realized makespan — the slowest
+        # node's compute, stretched to the slowest LIVE link's landing time
+        # when the round exchanges payloads (everyone waits for everyone:
+        # that is the cost the deadline frontier is measured against).
+        if has_time:
+            if deadline is not None:
+                tick = jnp.float32(deadline)
+            else:
+                tick = jnp.max(t_cost)
+                if exchanges:
+                    if sparse:
+                        lv = (ev.live if has_dyn
+                              else jnp.ones_like(transfer_e))
+                        land = lv * (t_cost[edge_src] + transfer_e)
+                    else:
+                        lv = ev.live if has_dyn else nbr_valid
+                        land = lv * (t_cost[nbr_idx] + transfer_panel)
+                    tick = jnp.maximum(tick, jnp.max(land))
+            sim_t = time_state.t + tick
+            if deadline is not None:
+                if sparse:
+                    arr_live = (arr_e * ev.live if has_dyn else arr_e)
+                else:
+                    arr_live = (arr_full * ev.live if has_dyn
+                                else arr_full)
+                arrived = jnp.sum(arr_live)
+            else:
+                # no deadline: every live edge's payload arrives
+                arrived = (jnp.sum(ev.live) if has_dyn else total_edges)
+            new_time = TimingState(t=sim_t, last_cost=t_cost)
+        else:
+            sim_t = arrived = new_time = None
+
+        return (params, opt, new_comm, dyn_state, new_time, rng, train_loss,
+                sent_edges, trig, live_total, sim_t, arrived)
 
     return body
 
 
 def _squeeze(out):
-    """Drop the None slots of the full 9-tuple, yielding the documented
+    """Drop the None slots of the full 12-tuple, yielding the documented
     per-configuration calling convention (the slot ORDER is fixed, so the
     surviving entries line up with the module-docstring signatures)."""
     return tuple(o for o in out if o is not None)
+
+
+def _unpack_states(exp, rest):
+    """Split a round_fn's positional tail ``(*states, round_idx, rng)``
+    into the body's fixed slots, with None for the states the experiment
+    does not carry.  States appear in (comm, dyn, time) order."""
+    rest = list(rest)
+    comm_state = rest.pop(0) if exp.transport is not None else None
+    dyn_state = rest.pop(0) if exp.bound_dyn is not None else None
+    time_state = rest.pop(0) if exp.bound_timing is not None else None
+    round_idx, rng = rest
+    return comm_state, dyn_state, time_state, round_idx, rng
 
 
 # ------------------------------------------------------------- vmap backend
@@ -666,25 +852,12 @@ def _build_vmap_round(exp):
     """The dense lowering: the round body under the identity context."""
     body = _make_round_body(exp, loss_reduce=_identity_rows)
     x, y = exp.x_pad, exp.y_pad
-    has_comm = exp.transport is not None
-    has_dyn = exp.bound_dyn is not None
 
-    def call(params, opt, comm_state, dyn_state, round_idx, rng):
+    def round_fn(params, opt, *rest):
+        comm_state, dyn_state, time_state, round_idx, rng = \
+            _unpack_states(exp, rest)
         return _squeeze(body(DENSE_CTX, params, opt, comm_state, dyn_state,
-                             round_idx, rng, x, y))
-
-    if has_comm and has_dyn:
-        def round_fn(params, opt, comm_state, dyn_state, round_idx, rng):
-            return call(params, opt, comm_state, dyn_state, round_idx, rng)
-    elif has_comm:
-        def round_fn(params, opt, comm_state, round_idx, rng):
-            return call(params, opt, comm_state, None, round_idx, rng)
-    elif has_dyn:
-        def round_fn(params, opt, dyn_state, round_idx, rng):
-            return call(params, opt, None, dyn_state, round_idx, rng)
-    else:
-        def round_fn(params, opt, round_idx, rng):
-            return call(params, opt, None, None, round_idx, rng)
+                             time_state, round_idx, rng, x, y))
 
     return round_fn
 
@@ -718,6 +891,7 @@ def _build_shardmap_round(exp):
     transport = exp.transport
     has_comm = transport is not None
     has_dyn = exp.bound_dyn is not None
+    has_time = exp.bound_timing is not None
 
     def pmean(v):
         return jax.lax.pmean(v, NODE_AXIS)
@@ -738,64 +912,37 @@ def _build_shardmap_round(exp):
 
     shard = P(NODE_AXIS)
     rep = P()
+    # State specs in (comm, dyn, time) order.  Dynamics state and the
+    # TimingState (scalar clock + [N] last-cost) are fully replicated:
+    # every pod advances them identically from replicated rng/masks, the
+    # same discipline that keeps the backends bit-identical everywhere
+    # else.  Transport state splits by the transport's own `state_specs`.
+    state_specs = []
     if has_comm:
-        comm_specs = transport.state_specs(shard, rep)
+        state_specs.append(transport.state_specs(shard, rep))
+    if has_dyn:
+        state_specs.append(rep)
+    if has_time:
+        state_specs.append(rep)
+    state_specs = tuple(state_specs)
+    # Replicated extras past (rng, loss): (sent, trig | live | sim_t, arr).
+    n_extras = 2 * has_comm + has_dyn + 2 * has_time
 
-    if has_comm and has_dyn:
-        def block(params, opt, comm_state, dyn_state, round_idx, rng, x, y):
-            return _squeeze(body(make_ctx(), params, opt, comm_state,
-                                 dyn_state, round_idx, rng, x, y))
+    def block(params, opt, *rest):
+        comm_state, dyn_state, time_state, round_idx, rng = \
+            _unpack_states(exp, rest[:-2])
+        x, y = rest[-2:]
+        return _squeeze(body(make_ctx(), params, opt, comm_state, dyn_state,
+                             time_state, round_idx, rng, x, y))
 
-        sharded = shard_map(
-            block, mesh,
-            in_specs=(shard, shard, comm_specs, rep, rep, rep, shard, shard),
-            out_specs=(shard, shard, comm_specs, rep, rep, rep, rep, rep,
-                       rep),
-            check_rep=False)
+    sharded = shard_map(
+        block, mesh,
+        in_specs=(shard, shard) + state_specs + (rep, rep, shard, shard),
+        out_specs=((shard, shard) + state_specs + (rep, rep)
+                   + (rep,) * n_extras),
+        check_rep=False)
 
-        def round_fn(params, opt, comm_state, dyn_state, round_idx, rng):
-            return sharded(params, opt, comm_state, dyn_state, round_idx,
-                           rng, exp.x_pad, exp.y_pad)
-    elif has_comm:
-        def block(params, opt, comm_state, round_idx, rng, x, y):
-            return _squeeze(body(make_ctx(), params, opt, comm_state, None,
-                                 round_idx, rng, x, y))
-
-        sharded = shard_map(
-            block, mesh,
-            in_specs=(shard, shard, comm_specs, rep, rep, shard, shard),
-            out_specs=(shard, shard, comm_specs, rep, rep, rep, rep),
-            check_rep=False)
-
-        def round_fn(params, opt, comm_state, round_idx, rng):
-            return sharded(params, opt, comm_state, round_idx, rng,
-                           exp.x_pad, exp.y_pad)
-    elif has_dyn:
-        def block(params, opt, dyn_state, round_idx, rng, x, y):
-            return _squeeze(body(make_ctx(), params, opt, None, dyn_state,
-                                 round_idx, rng, x, y))
-
-        sharded = shard_map(
-            block, mesh,
-            in_specs=(shard, shard, rep, rep, rep, shard, shard),
-            out_specs=(shard, shard, rep, rep, rep, rep),
-            check_rep=False)
-
-        def round_fn(params, opt, dyn_state, round_idx, rng):
-            return sharded(params, opt, dyn_state, round_idx, rng,
-                           exp.x_pad, exp.y_pad)
-    else:
-        def block(params, opt, round_idx, rng, x, y):
-            return _squeeze(body(make_ctx(), params, opt, None, None,
-                                 round_idx, rng, x, y))
-
-        sharded = shard_map(
-            block, mesh,
-            in_specs=(shard, shard, rep, rep, shard, shard),
-            out_specs=(shard, shard, rep, rep),
-            check_rep=False)
-
-        def round_fn(params, opt, round_idx, rng):
-            return sharded(params, opt, round_idx, rng, exp.x_pad, exp.y_pad)
+    def round_fn(params, opt, *rest):
+        return sharded(params, opt, *rest, exp.x_pad, exp.y_pad)
 
     return round_fn

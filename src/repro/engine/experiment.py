@@ -61,6 +61,8 @@ from repro.graphs.sparse import SparseTopology
 from repro.graphs.topology import Topology
 from repro.models.api import SmallModel
 from repro.optim.sgd import sgd_momentum
+from repro.timing import Timing
+from repro.utils.pytree import tree_flatten_stacked
 
 SCHEDULE_MODES = ("fused", "loop")
 LAYOUTS = ("dense", "sparse")
@@ -88,16 +90,29 @@ class TrainConfig:
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """How many rounds, how often to eval, and how the rounds execute."""
+    """How many rounds, how often to eval, and how the rounds execute.
+
+    `deadline` (simulated seconds; requires `World(timing=...)`) turns each
+    round into an event-clock DEADLINE TICK: a node trains as many local
+    steps as fit in the deadline (capped at `steps_per_round` — stragglers
+    train fewer), and a payload is aggregated only if `send_time + latency
+    + bytes/bandwidth <= deadline`; late arrivals fall into the existing
+    stale/drop silence paths.  `deadline=None` keeps the schedule
+    synchronous — every round waits for the slowest node and link and the
+    clock merely reports the makespan.  See docs/timing.md."""
 
     rounds: int = 100
     eval_every: int = 5
     mode: str = "fused"  # "fused" (one lax.scan program) | "loop" (per-round)
+    deadline: Optional[float] = None  # simulated seconds per round tick
 
     def __post_init__(self):
         if self.mode not in SCHEDULE_MODES:
             raise ValueError(f"schedule mode must be one of {SCHEDULE_MODES}, "
                              f"got {self.mode!r}")
+        if self.deadline is not None and not self.deadline > 0:
+            raise ValueError(f"deadline must be > 0 simulated seconds, "
+                             f"got {self.deadline}")
 
     @staticmethod
     def eval_rounds(rounds: int, eval_every: int):
@@ -132,13 +147,20 @@ class World:
     x_test: np.ndarray
     y_test: np.ndarray
     dynamics: Optional[GraphProcess] = None
+    # Optional event clock (repro.timing): per-node step times and per-edge
+    # latency/bandwidth pricing each round in simulated seconds.  With
+    # `Schedule(deadline=...)` the rounds become deadline ticks (stragglers
+    # train fewer steps, late payloads miss the round); without one the
+    # schedule stays synchronous and the clock reports the makespan.
+    timing: Optional[Timing] = None
 
     @classmethod
     def synthetic(cls, dataset: str = "synth-mnist", nodes: int = 16,
                   topology: str = "erdos_renyi", seed: int = 0,
                   scale: float = 0.05, min_per_class: int = 1,
                   model: Optional[SmallModel] = None,
-                  dynamics: Optional[GraphProcess] = None, **topo_kwargs):
+                  dynamics: Optional[GraphProcess] = None,
+                  timing: Optional[Timing] = None, **topo_kwargs):
         """The paper's synthetic worlds in one call: seeded dataset,
         complex-network topology (extra kwargs go to the graph builder,
         e.g. p=0.25 for ER, m=2 for BA), truncated-Zipf non-IID split."""
@@ -161,7 +183,8 @@ class World:
         xs, ys = split_by_allocation(ds.x_train, ds.y_train, alloc)
         model = model or model_for_dataset(dataset, ds.num_classes)
         return cls(model=model, topo=topo, xs=xs, ys=ys,
-                   x_test=ds.x_test, y_test=ds.y_test, dynamics=dynamics)
+                   x_test=ds.x_test, y_test=ds.y_test, dynamics=dynamics,
+                   timing=timing)
 
 
 def _default_mesh(n: int):
@@ -334,8 +357,14 @@ class Experiment:
                     self.transport = EdgeGossipTransport(
                         comm, self.params, topo.neighbor_idx,
                         topo.neighbor_mask)
+            elif self.layout == "sparse":
+                self.transport = GossipTransport(
+                    comm, self.params,
+                    edge_src=topo.edge_src, edge_dst=topo.edge_dst)
             else:
-                self.transport = GossipTransport(comm, self.params)
+                self.transport = GossipTransport(
+                    comm, self.params, nbr_idx=topo.neighbor_idx,
+                    nbr_valid=topo.neighbor_mask)
             self.comm_state = self.transport.init_state(self.params)
 
         # --- dynamics state + live-edge accounting ---
@@ -348,12 +377,48 @@ class Experiment:
         self._live_rounds = 0
         self.live_history: List[float] = []  # per-round live-edge fraction
 
+        # --- event clock (repro.timing): bind the time models once, priced
+        # from the transport's EXACT bytes-on-wire (dense fp32 model size
+        # without one) ---
+        self.timing = world.timing
+        self.bound_timing = None
+        self.time_state = None
+        self.deadline = self.schedule.deadline
+        if world.timing is not None:
+            if not isinstance(world.timing, Timing):
+                raise TypeError(
+                    f"World.timing must be a repro.timing.Timing, "
+                    f"got {type(world.timing).__name__}")
+            if self.transport is not None:
+                payload = float(self.transport.payload_bytes)
+            else:
+                flat, _ = tree_flatten_stacked(self.params)
+                payload = 4.0 * float(flat.shape[1])
+            self.bound_timing = world.timing.bind(topo, payload)
+            self.time_state = self.bound_timing.state0
+        elif self.deadline is not None:
+            raise ValueError(
+                "Schedule(deadline=...) prices rounds in simulated seconds "
+                "and needs World(timing=...) to define them")
+        if (self.bound_dyn is not None and self.bound_dyn.observes
+                and self.bound_timing is None):
+            raise ValueError(
+                f"dynamics process {self.bound_dyn.name!r} observes the "
+                f"event clock's per-node compute cost; give the world a "
+                f"repro.timing.Timing (World(timing=...))")
+        self.sim_time = 0.0
+        self.sim_time_history: List[float] = []  # absolute seconds per round
+        self._arrived_sum = 0.0
+        self._arrived_rounds = 0
+        self.arrived_history: List[float] = []  # per-round arrived fraction
+
         # --- method state + the lowered round ---
         self.agg_state = self.strategy.init_state(self)
         self._round_raw = backends.build_round(self)
-        # donate the round-carried state: params, opt, then comm/dyn state
+        # donate the round-carried state: params, opt, then comm/dyn/time
         donate = tuple(range(2 + (self.transport is not None)
-                             + (self.bound_dyn is not None)))
+                             + (self.bound_dyn is not None)
+                             + (self.bound_timing is not None)))
         self._round = jax.jit(self._round_raw, donate_argnums=donate)
         self._fused_cache = {}
 
@@ -364,12 +429,42 @@ class Experiment:
                             loss_per_node=np.asarray(loss))
 
     # ------------------------------------------------------------------
+    # The generic round calling convention (shared with engine.backends):
+    #   round_fn(params, opt, *states, round_idx, rng)
+    #     -> (params, opt, *states, rng, loss, *extras)
+    # with `states` the present members of (comm_state, dyn_state,
+    # time_state) in that order and `extras` the present groups of
+    # (sent, trig | live | sim_t, arrived).  Both schedule modes and the
+    # fused scan body unpack by the same three flags.
+    def _state_flags(self):
+        return (self.transport is not None, self.bound_dyn is not None,
+                self.bound_timing is not None)
+
+    def _get_states(self):
+        has_comm, has_dyn, has_time = self._state_flags()
+        states = ()
+        states += (self.comm_state,) if has_comm else ()
+        states += (self.dyn_state,) if has_dyn else ()
+        states += (self.time_state,) if has_time else ()
+        return states
+
+    def _set_states(self, states):
+        has_comm, has_dyn, has_time = self._state_flags()
+        states = list(states)
+        if has_comm:
+            self.comm_state = states.pop(0)
+        if has_dyn:
+            self.dyn_state = states.pop(0)
+        if has_time:
+            self.time_state = states.pop(0)
+        assert not states
+
     def _fused_program(self, rounds: int, eval_every: int):
         """One jitted program for the whole schedule: `lax.scan` over the
         rounds with the eval gated per round by a static flag array (the
         non-eval branch is never executed, only compiled), stacking per-node
-        accuracy/loss — and, with a transport, the per-round fired-edge
-        counts — as scan outputs."""
+        accuracy/loss — and the per-round accounting extras (fired edges,
+        live edges, simulated time) — as scan outputs."""
         key = (rounds, eval_every)
         cached = self._fused_cache.get(key)
         if cached is not None:
@@ -380,8 +475,7 @@ class Experiment:
         round_fn = self._round_raw
         eval_fn = self._eval_raw
         x_test, y_test, n = self.x_test, self.y_test, self.n
-        has_comm = self.transport is not None
-        has_dyn = self.bound_dyn is not None
+        n_states = sum(self._state_flags())
 
         def gated_eval(flag, params):
             return jax.lax.cond(
@@ -393,31 +487,13 @@ class Experiment:
 
         def body(carry, xs):
             r, flag = xs
-            if has_comm and has_dyn:
-                params, opt, comm_state, dyn_state, rng = carry
-                (params, opt, comm_state, dyn_state, rng, _, sent, trig,
-                 live) = round_fn(params, opt, comm_state, dyn_state, r, rng)
-                carry = (params, opt, comm_state, dyn_state, rng)
-                extras = (sent, trig, live)
-            elif has_comm:
-                params, opt, comm_state, rng = carry
-                (params, opt, comm_state, rng, _, sent, trig) = round_fn(
-                    params, opt, comm_state, r, rng)
-                carry = (params, opt, comm_state, rng)
-                extras = (sent, trig)
-            elif has_dyn:
-                params, opt, dyn_state, rng = carry
-                params, opt, dyn_state, rng, _, live = round_fn(
-                    params, opt, dyn_state, r, rng)
-                carry = (params, opt, dyn_state, rng)
-                extras = (live,)
-            else:
-                params, opt, rng = carry
-                params, opt, rng, _ = round_fn(params, opt, r, rng)
-                carry = (params, opt, rng)
-                extras = ()
+            params, opt = carry[:2]
+            states, rng = carry[2:2 + n_states], carry[-1]
+            out = round_fn(params, opt, *states, r, rng)
+            carry = out[:2 + n_states] + (out[2 + n_states],)  # ... + rng
+            extras = out[4 + n_states:]  # everything past the loss slot
             acc, loss = gated_eval(flag, carry[0])
-            return carry, (acc, loss) + extras
+            return carry, (acc, loss) + tuple(extras)
 
         def program(carry):
             return jax.lax.scan(
@@ -446,46 +522,62 @@ class Experiment:
         self._live_rounds += 1
         self.live_history.append(frac)
 
+    def _account_time(self, sim_t, arrived_edges):
+        """Event-clock accounting: `sim_t` is the ABSOLUTE simulated time at
+        the end of the round; `arrived_edges` counts live directed edges
+        whose payload made the deadline (all of them in synchronous mode).
+        The arrived fraction is against the round's live edges under a
+        dynamics process, the full static layout otherwise."""
+        self.sim_time = float(sim_t)
+        self.sim_time_history.append(self.sim_time)
+        denom = (self.live_history[-1] * self._total_directed
+                 if self.bound_dyn is not None else self._total_directed)
+        frac = float(arrived_edges) / max(denom, 1.0)
+        self._arrived_sum += frac
+        self._arrived_rounds += 1
+        self.arrived_history.append(frac)
+
+    def _account_extras(self, extras):
+        """Route one round's extras group-by-group (the generic convention:
+        (sent, trig | live | sim_t, arrived) for the present subsystems)."""
+        extras = list(extras)
+        if self.transport is not None:
+            self._account_comm(extras.pop(0), extras.pop(0))
+        if self.bound_dyn is not None:
+            self._account_live(extras.pop(0))
+        if self.bound_timing is not None:
+            self._account_time(extras.pop(0), extras.pop(0))
+        assert not extras
+
     def _finish_metrics(self, m: RoundMetrics, history, verbose):
         if self.transport is not None:
             m.bytes_on_wire = self.comm_bytes_total
             m.triggered_frac = self._trig_sum / max(self._comm_rounds, 1)
         if self.bound_dyn is not None:
             m.live_edge_frac = self._live_sum / max(self._live_rounds, 1)
+        if self.bound_timing is not None:
+            m.sim_time = self.sim_time
+            m.arrived_frac = self._arrived_sum / max(self._arrived_rounds, 1)
         history.append(m)
         if verbose:
             self._print_round(m)
 
     def _run_fused(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
         fused = self._fused_program(rounds, eval_every)
-        has_comm = self.transport is not None
-        has_dyn = self.bound_dyn is not None
-        carry = (self.params, self.opt_state)
-        carry += (self.comm_state,) if has_comm else ()
-        carry += (self.dyn_state,) if has_dyn else ()
-        carry += (self.rng,)
+        n_states = sum(self._state_flags())
+        carry = (self.params, self.opt_state) + self._get_states() \
+            + (self.rng,)
         carry, ys = fused(carry)
-        (self.params, self.opt_state), rest = carry[:2], list(carry[2:])
-        if has_comm:
-            self.comm_state = rest.pop(0)
-        if has_dyn:
-            self.dyn_state = rest.pop(0)
-        (self.rng,) = rest
-        acc_r, loss_r, rest = ys[0], ys[1], list(ys[2:])
-        sent_r = trig_r = live_r = None
-        if has_comm:
-            sent_r, trig_r = np.asarray(rest.pop(0)), np.asarray(rest.pop(0))
-        if has_dyn:
-            live_r = np.asarray(rest.pop(0))
-        acc_r, loss_r = np.asarray(acc_r), np.asarray(loss_r)
+        self.params, self.opt_state = carry[:2]
+        self._set_states(carry[2:2 + n_states])
+        self.rng = carry[-1]
+        acc_r, loss_r = np.asarray(ys[0]), np.asarray(ys[1])
+        extras_r = [np.asarray(e) for e in ys[2:]]
 
         evals = set(Schedule.eval_rounds(rounds, eval_every))
         history: List[RoundMetrics] = []
         for r in range(rounds):
-            if has_comm:
-                self._account_comm(sent_r[r], trig_r[r])
-            if has_dyn:
-                self._account_live(live_r[r])
+            self._account_extras([e[r] for e in extras_r])
             if r in evals:
                 m = RoundMetrics(round=r, acc_per_node=acc_r[r],
                                  loss_per_node=loss_r[r])
@@ -494,34 +586,15 @@ class Experiment:
 
     def _run_loop(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
         evals = set(Schedule.eval_rounds(rounds, eval_every))
-        has_comm = self.transport is not None
-        has_dyn = self.bound_dyn is not None
+        n_states = sum(self._state_flags())
         history: List[RoundMetrics] = []
         for r in range(rounds):
-            if has_comm and has_dyn:
-                (self.params, self.opt_state, self.comm_state,
-                 self.dyn_state, self.rng, _, sent_edges, trig,
-                 live) = self._round(
-                    self.params, self.opt_state, self.comm_state,
-                    self.dyn_state, jnp.int32(r), self.rng)
-                self._account_comm(sent_edges, trig)
-                self._account_live(live)
-            elif has_comm:
-                (self.params, self.opt_state, self.comm_state, self.rng, _,
-                 sent_edges, trig) = self._round(
-                    self.params, self.opt_state, self.comm_state,
-                    jnp.int32(r), self.rng)
-                self._account_comm(sent_edges, trig)
-            elif has_dyn:
-                (self.params, self.opt_state, self.dyn_state, self.rng, _,
-                 live) = self._round(
-                    self.params, self.opt_state, self.dyn_state,
-                    jnp.int32(r), self.rng)
-                self._account_live(live)
-            else:
-                self.params, self.opt_state, self.rng, _ = self._round(
-                    self.params, self.opt_state, jnp.int32(r), self.rng
-                )
+            out = self._round(self.params, self.opt_state,
+                              *self._get_states(), jnp.int32(r), self.rng)
+            self.params, self.opt_state = out[:2]
+            self._set_states(out[2:2 + n_states])
+            self.rng = out[2 + n_states]
+            self._account_extras(out[4 + n_states:])
             if r in evals:
                 m = self.evaluate()
                 m.round = r
@@ -534,9 +607,11 @@ class Experiment:
                 f"  trig {m.triggered_frac:.2f}")
         live = ("" if m.live_edge_frac is None else
                 f"  live {m.live_edge_frac:.2f}")
+        time = ("" if m.sim_time is None else
+                f"  t {m.sim_time:.1f}s  arr {m.arrived_frac:.2f}")
         print(f"[{self.method.name}] round {m.round:4d}  "
               f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  "
-              f"loss {m.loss_mean:.4f}{comm}{live}")
+              f"loss {m.loss_mean:.4f}{comm}{live}{time}")
 
     def run(self, rounds: Optional[int] = None,
             eval_every: Optional[int] = None, verbose: bool = False,

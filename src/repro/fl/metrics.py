@@ -36,6 +36,16 @@ class RoundMetrics:
     # non-existent link carries nothing and costs nothing (unlike a
     # `participation` Bernoulli failure, which the sender pays for).
     live_edge_frac: Optional[float] = None
+    # Event-clock accounting (None without a repro.timing Timing): the
+    # ABSOLUTE simulated time in seconds at the end of this round (the
+    # time-to-accuracy x-axis; with Schedule(deadline=d) this is (round+1)*d,
+    # otherwise the cumulative synchronous makespan), and the running mean
+    # fraction of live directed edges whose payload ARRIVED by the deadline
+    # (1.0 in synchronous mode — everything waits).  A late payload still
+    # burns the sender's bytes (the PR-5 failed-link convention) but is not
+    # aggregated until a later round re-delivers or the stale cache serves it.
+    sim_time: Optional[float] = None
+    arrived_frac: Optional[float] = None
 
     @property
     def acc_mean(self) -> float:

@@ -1,0 +1,40 @@
+"""repro.timing — the event-clock subsystem: time-to-accuracy, not rounds.
+
+    from repro.timing import Timing, LognormalStep, LognormalLink
+    world = World.synthetic(nodes=16, topology="barabasi_albert", m=2,
+                            timing=Timing(node=LognormalStep(sigma=0.5),
+                                          link=LognormalLink()))
+    Experiment(world, "decdiff+vt", comm=...,
+               schedule=Schedule(rounds=100, deadline=6.0)).run()
+
+A :class:`Timing` prices every round in simulated seconds: per-node step
+times (constant / lognormal / straggler tiers / trace tables) and per-edge
+latency + bandwidth, with each payload costing its codec's EXACT
+bytes-on-wire.  ``Schedule(deadline=...)`` turns rounds into deadline
+ticks — a payload is delivered iff ``send_time + latency +
+bytes/bandwidth <= deadline``, late arrivals fall into the existing
+stale/drop silence paths, and stragglers train fewer local steps.  With
+``deadline=None`` the engine stays synchronous (every round waits for the
+slowest node and link) and merely reports the simulated makespan.  See
+docs/timing.md.
+"""
+from repro.timing.models import (  # noqa: F401
+    LINK_MODELS,
+    NODE_MODELS,
+    PAST_END,
+    BoundTiming,
+    ConstantLink,
+    ConstantStep,
+    LinkTimeModel,
+    LognormalLink,
+    LognormalStep,
+    NodeTimeModel,
+    StragglerStep,
+    TableLink,
+    Timing,
+    TimingState,
+    TraceStep,
+    make_link_model,
+    make_node_model,
+    past_end_index,
+)

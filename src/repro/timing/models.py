@@ -1,0 +1,419 @@
+"""Event-clock models: per-node step time, per-edge latency + bandwidth.
+
+The paper's coordination-free setting has no central clock, yet a
+synchronous round schedule advances every node in lock-step — a fiction
+that hides exactly the device heterogeneity the setting is about.  This
+module prices a round in SIMULATED SECONDS instead:
+
+  * a :class:`NodeTimeModel` assigns every node the wall-clock cost of ONE
+    local SGD step (constant, lognormal-heterogeneous, straggler-tiered, or
+    trace-table-driven a la per-device capacity traces);
+  * a :class:`LinkTimeModel` assigns every directed edge a latency and a
+    bandwidth, so a payload of ``payload_bytes`` (the codec's EXACT
+    bytes-on-wire from ``repro.comm``) needs ``latency + bytes/bandwidth``
+    seconds to cross it.
+
+:class:`Timing` packages one of each; ``Timing.bind(topo, payload_bytes)``
+freezes them against a topology into a :class:`BoundTiming` — the per-node
+``step_time(round_idx) -> [N]`` schedule plus the per-edge ``transfer``
+seconds in the binding's layout (flat ``[E]`` over the canonical CSR
+directed edge list for a `SparseTopology`; the padded ``[N, max_deg]``
+receiver panel for a dense `Topology`, scattered from the SAME canonical
+enumeration so the two layouts agree bit-for-bit on the same graph).
+
+Randomness discipline: every stochastic model draws with NUMPY at bind
+time, keyed by its own ``seed`` — binding consumes no jax rng, so an
+experiment with timing enabled consumes exactly the rng stream of one
+without (the degenerate-timing oracle in tests/test_timing.py).  Per-edge
+draws are one draw per UNDIRECTED pair in canonical ascending ``(lo, hi)``
+order (the `repro.dynamics` coin discipline), mirrored onto both directed
+records, so a link is symmetric and both layouts scatter the same value.
+
+The quantized event clock itself (deadline ticks, arrival masks, straggler
+step budgets) lives in the engine round body — see docs/timing.md for the
+semantics and `repro.engine.backends` for the lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.sparse import SparseTopology
+
+PAST_END = ("wrap", "clamp")
+
+
+def past_end_index(round_idx, length: int, past_end: str):
+    """The shared period/clamp rule for ``[T, ...]`` schedule tables past
+    the table end: ``wrap`` repeats the table periodically, ``clamp`` holds
+    the last row forever.  ``round_idx`` may be a traced int32 scalar."""
+    r = jnp.asarray(round_idx).astype(jnp.int32)
+    if past_end == "wrap":
+        return r % length
+    return jnp.minimum(r, length - 1)
+
+
+def _check_past_end(past_end: str):
+    if past_end not in PAST_END:
+        raise ValueError(f"past_end must be one of {PAST_END}, "
+                         f"got {past_end!r}")
+
+
+# ----------------------------------------------------------- node models
+
+class NodeTimeModel:
+    """Protocol: the wall-clock seconds ONE local SGD step costs per node.
+
+    ``bind(n)`` freezes the model against an ``n``-node world and returns
+    ``step_time(round_idx) -> [N] f32`` — strictly positive seconds, pure
+    in ``round_idx`` so it compiles inside the fused ``lax.scan``."""
+
+    def bind(self, n: int) -> Callable:
+        raise NotImplementedError
+
+
+def _positive(name: str, v: float):
+    if not v > 0:
+        raise ValueError(f"{name} must be > 0, got {v}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantStep(NodeTimeModel):
+    """Every node takes ``dt`` seconds per local step — the homogeneous
+    baseline (and half of the degenerate model that must reproduce the
+    synchronous engine bit-for-bit)."""
+
+    dt: float = 1.0
+
+    def __post_init__(self):
+        _positive("dt", self.dt)
+
+    def bind(self, n: int) -> Callable:
+        dt = jnp.full((n,), self.dt, jnp.float32)
+        return lambda round_idx: dt
+
+
+@dataclasses.dataclass(frozen=True)
+class LognormalStep(NodeTimeModel):
+    """Static heterogeneous devices: node i's per-step time is one draw
+    ``median * exp(sigma * z_i)``, z_i ~ N(0, 1), frozen for the whole run
+    (a device's compute capability does not change round to round).  Drawn
+    with numpy at bind time — no jax rng is consumed."""
+
+    median: float = 1.0
+    sigma: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        _positive("median", self.median)
+        if self.sigma < 0:
+            raise ValueError(f"sigma must be >= 0, got {self.sigma}")
+
+    def bind(self, n: int) -> Callable:
+        r = np.random.default_rng(self.seed)
+        dt = jnp.asarray(
+            (self.median * np.exp(self.sigma * r.standard_normal(n)))
+            .astype(np.float32))
+        return lambda round_idx: dt
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerStep(NodeTimeModel):
+    """A two-tier population: a ``frac`` fraction of nodes (chosen once,
+    numpy-seeded) is ``factor``x slower than the ``dt`` baseline — the
+    BENCH_time straggler scenario (10% of nodes 8x slower) a synchronous
+    engine cannot even express without stalling every round on the slowest
+    device."""
+
+    dt: float = 1.0
+    frac: float = 0.1
+    factor: float = 8.0
+    seed: int = 0
+
+    def __post_init__(self):
+        _positive("dt", self.dt)
+        _positive("factor", self.factor)
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError(f"frac must be in [0, 1], got {self.frac}")
+
+    def slow_nodes(self, n: int) -> np.ndarray:
+        """The straggler ids (deterministic in ``seed``; exposed so a bench
+        can report per-tier accuracy)."""
+        k = int(round(self.frac * n))
+        if k == 0:
+            return np.zeros((0,), np.int64)
+        return np.sort(np.random.default_rng(self.seed)
+                       .choice(n, size=k, replace=False))
+
+    def bind(self, n: int) -> Callable:
+        dt = np.full((n,), self.dt, np.float32)
+        dt[self.slow_nodes(n)] *= self.factor
+        dt_j = jnp.asarray(dt)
+        return lambda round_idx: dt_j
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceStep(NodeTimeModel):
+    """Trace-table-driven step times: ``table[t, i]`` is node i's per-step
+    seconds in round t (a recorded device-capacity trace).  Past the table
+    end the ``past_end`` rule applies: ``"wrap"`` replays the trace
+    periodically, ``"clamp"`` holds the last row."""
+
+    table: Any  # [T, N] positive seconds (array-like)
+    past_end: str = "wrap"
+
+    def __post_init__(self):
+        _check_past_end(self.past_end)
+        tab = np.asarray(self.table, np.float32)
+        if tab.ndim != 2 or tab.shape[0] < 1:
+            raise ValueError(f"trace table must be [T >= 1, N], "
+                             f"got shape {tab.shape}")
+        if not (tab > 0).all():
+            raise ValueError("trace step times must be strictly positive")
+
+    def bind(self, n: int) -> Callable:
+        tab = np.asarray(self.table, np.float32)
+        if tab.shape[1] != n:
+            raise ValueError(f"trace table covers {tab.shape[1]} nodes, "
+                             f"world has {n}")
+        tab_j = jnp.asarray(tab)
+        t_len, past_end = int(tab.shape[0]), self.past_end
+
+        def step_time(round_idx):
+            return tab_j[past_end_index(round_idx, t_len, past_end)]
+
+        return step_time
+
+
+# ----------------------------------------------------------- link models
+
+def _directed_edges(topo):
+    """The canonical directed-edge enumeration both layouts share.
+
+    Returns ``(src, dst, pair_id, num_pairs)`` with edges sorted by
+    ``(dst, src)`` — exactly the CSR order of a `SparseTopology` and the
+    flattened valid-slot order of the dense padded layout — and
+    ``pair_id[e]`` the undirected pair's index in ascending ``(lo, hi)``
+    order (the `repro.dynamics` coin enumeration)."""
+    if isinstance(topo, SparseTopology):
+        src = topo.edge_src.astype(np.int64)
+        dst = topo.edge_dst.astype(np.int64)
+    else:
+        dst, src = np.nonzero(topo.adjacency)  # row-major = (dst, src) sort
+        src, dst = src.astype(np.int64), dst.astype(np.int64)
+    n = topo.num_nodes
+    lo, hi = np.minimum(src, dst), np.maximum(src, dst)
+    codes = np.unique(lo * n + hi)
+    pair_id = np.searchsorted(codes, lo * n + hi)
+    return src, dst, pair_id, int(codes.shape[0])
+
+
+class LinkTimeModel:
+    """Protocol: the seconds one payload needs to cross each directed edge.
+
+    ``bind(topo, payload_bytes)`` returns the per-edge transfer time
+    ``latency_e + payload_bytes / bandwidth_e`` as a ``[num_directed]``
+    float32 numpy array in the canonical ``(dst, src)`` edge order of
+    :func:`_directed_edges` — the engine scatters it into whichever layout
+    it compiled."""
+
+    def bind(self, topo, payload_bytes: float) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _transfer(latency, bandwidth, payload_bytes: float) -> np.ndarray:
+    lat = np.asarray(latency, np.float64)
+    bw = np.asarray(bandwidth, np.float64)
+    if (lat < 0).any():
+        raise ValueError("latency must be >= 0")
+    if not (bw > 0).all():
+        raise ValueError("bandwidth must be > 0 (use float('inf') for an "
+                         "infinitely fast link)")
+    return (lat + payload_bytes / bw).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantLink(LinkTimeModel):
+    """Every link: fixed ``latency`` seconds plus ``payload / bandwidth``
+    transfer.  The default (zero latency, infinite bandwidth) is the other
+    half of the degenerate model: every payload lands instantly."""
+
+    latency: float = 0.0
+    bandwidth: float = float("inf")  # bytes per second
+
+    def bind(self, topo, payload_bytes: float) -> np.ndarray:
+        src, _, _, _ = _directed_edges(topo)
+        t = _transfer(self.latency, self.bandwidth, payload_bytes)
+        return np.full((src.shape[0],), float(t), np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LognormalLink(LinkTimeModel):
+    """Heterogeneous links: per-UNDIRECTED-pair lognormal latency and
+    bandwidth draws (numpy, at bind time), mirrored onto both directed
+    records so a link costs the same in both directions.  Draws are keyed
+    by the canonical ascending ``(lo, hi)`` pair order, so the dense and
+    sparse bindings of the same graph price every edge identically."""
+
+    latency_median: float = 0.01
+    latency_sigma: float = 0.5
+    bandwidth_median: float = 1e6
+    bandwidth_sigma: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        _positive("latency_median", self.latency_median)
+        _positive("bandwidth_median", self.bandwidth_median)
+        for nm, v in (("latency_sigma", self.latency_sigma),
+                      ("bandwidth_sigma", self.bandwidth_sigma)):
+            if v < 0:
+                raise ValueError(f"{nm} must be >= 0, got {v}")
+
+    def bind(self, topo, payload_bytes: float) -> np.ndarray:
+        _, _, pair_id, m = _directed_edges(topo)
+        r = np.random.default_rng(self.seed)
+        lat = self.latency_median * np.exp(
+            self.latency_sigma * r.standard_normal(m))
+        bw = self.bandwidth_median * np.exp(
+            self.bandwidth_sigma * r.standard_normal(m))
+        return _transfer(lat, bw, payload_bytes)[pair_id]
+
+
+@dataclasses.dataclass(frozen=True)
+class TableLink(LinkTimeModel):
+    """Explicit per-edge latency/bandwidth tables (recorded network
+    traces).  Scalars broadcast; arrays are indexed by the canonical
+    directed-edge enumeration (``(dst, src)``-sorted — CSR order), the same
+    id that keys the per-edge transport's rng stream."""
+
+    latency: Any = 0.0
+    bandwidth: Any = float("inf")
+
+    def bind(self, topo, payload_bytes: float) -> np.ndarray:
+        src, _, _, _ = _directed_edges(topo)
+        e = int(src.shape[0])
+        lat = np.asarray(self.latency, np.float64)
+        bw = np.asarray(self.bandwidth, np.float64)
+        for nm, v in (("latency", lat), ("bandwidth", bw)):
+            if v.ndim and v.shape != (e,):
+                raise ValueError(
+                    f"TableLink {nm} table has shape {v.shape}; the graph "
+                    f"has {e} directed edges ((dst, src)-sorted)")
+        return _transfer(np.broadcast_to(lat, (e,)),
+                         np.broadcast_to(bw, (e,)), payload_bytes)
+
+
+# ------------------------------------------------------------- the clock
+
+class TimingState(NamedTuple):
+    """The event clock's scan-carried state.
+
+    ``t`` is the absolute simulated time (seconds since round 0);
+    ``last_cost`` is the previous round's REALIZED per-node compute seconds
+    (step time x trained steps) — the observation a drift-adaptive
+    `GraphProcess` (e.g. ``EnergyChurn``) reads, one round delayed so the
+    transition stays causal inside the scan."""
+
+    t: jnp.ndarray          # scalar f32, absolute simulated seconds
+    last_cost: jnp.ndarray  # [N] f32, last round's realized compute seconds
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundTiming:
+    """A `Timing` frozen against a topology (see `Timing.bind`)."""
+
+    timing: "Timing"
+    payload_bytes: float
+    step_time: Callable        # (round_idx) -> [N] f32 seconds per step
+    transfer_e: jnp.ndarray    # [num_directed] f32, canonical CSR order
+    transfer_panel: Optional[jnp.ndarray]  # [N, max_deg] f32 (dense binding)
+    state0: TimingState
+
+    @property
+    def is_dense(self) -> bool:
+        return self.transfer_panel is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """The event-clock configuration: one node model + one link model.
+
+    The default ``Timing()`` is the DEGENERATE model — uniform unit step
+    time, zero latency, infinite bandwidth — which the engine must
+    reproduce bit-identically to running with no timing at all (the oracle
+    that makes the subsystem safe; `Schedule(deadline=None)` then just adds
+    a simulated-seconds axis to the same run).  See docs/timing.md."""
+
+    node: NodeTimeModel = dataclasses.field(default_factory=ConstantStep)
+    link: LinkTimeModel = dataclasses.field(default_factory=ConstantLink)
+
+    def bind(self, topo, payload_bytes: float) -> BoundTiming:
+        """Freeze against ``topo`` (dense `Topology` or `SparseTopology`) and
+        a per-payload byte size (the transport's exact ``payload_bytes``, or
+        the dense fp32 model size without one)."""
+        if not isinstance(self.node, NodeTimeModel):
+            raise TypeError(f"Timing.node must be a NodeTimeModel, "
+                            f"got {type(self.node).__name__}")
+        if not isinstance(self.link, LinkTimeModel):
+            raise TypeError(f"Timing.link must be a LinkTimeModel, "
+                            f"got {type(self.link).__name__}")
+        n = topo.num_nodes
+        transfer = np.asarray(self.link.bind(topo, float(payload_bytes)),
+                              np.float32)
+        if isinstance(topo, SparseTopology):
+            panel = None
+        else:
+            # scatter the canonical (dst, src)-ordered transfer times into
+            # the padded receiver panel: slot e of receiver r is r's e-th
+            # in-edge sender-ascending, i.e. canonical edge offsets[r] + e.
+            valid = topo.neighbor_mask.astype(bool)
+            deg = valid.sum(axis=1).astype(np.int64)
+            offsets = np.concatenate([np.zeros(1, np.int64), np.cumsum(deg)])
+            panel_np = np.zeros(valid.shape, np.float32)
+            for r_i in range(n):
+                panel_np[r_i, :deg[r_i]] = \
+                    transfer[offsets[r_i]:offsets[r_i + 1]]
+            panel = jnp.asarray(panel_np)
+        state0 = TimingState(t=jnp.float32(0.0),
+                             last_cost=jnp.zeros((n,), jnp.float32))
+        return BoundTiming(timing=self, payload_bytes=float(payload_bytes),
+                           step_time=self.node.bind(n),
+                           transfer_e=jnp.asarray(transfer),
+                           transfer_panel=panel, state0=state0)
+
+
+NODE_MODELS = {
+    "constant": ConstantStep,
+    "lognormal": LognormalStep,
+    "straggler": StragglerStep,
+    "trace": TraceStep,
+}
+
+LINK_MODELS = {
+    "constant": ConstantLink,
+    "lognormal": LognormalLink,
+    "table": TableLink,
+}
+
+
+def make_node_model(name: str, **kwargs) -> NodeTimeModel:
+    """Build a catalog node model by name (kwargs to its constructor)."""
+    try:
+        cls = NODE_MODELS[name]
+    except KeyError:
+        raise ValueError(f"unknown node time model {name!r}; "
+                         f"available: {sorted(NODE_MODELS)}") from None
+    return cls(**kwargs)
+
+
+def make_link_model(name: str, **kwargs) -> LinkTimeModel:
+    """Build a catalog link model by name (kwargs to its constructor)."""
+    try:
+        cls = LINK_MODELS[name]
+    except KeyError:
+        raise ValueError(f"unknown link time model {name!r}; "
+                         f"available: {sorted(LINK_MODELS)}") from None
+    return cls(**kwargs)
