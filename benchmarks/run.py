@@ -94,6 +94,22 @@ def main() -> None:
            f"{tchal['sim_time']:.0f}s simulated (ba, "
            f"dAcc={tchal['acc_mean'] - tbase['acc_mean']:+.3f})")
 
+    # --- telemetry overhead + ledger/trace (repro.obs) ------------------
+    from benchmarks import bench_obs
+
+    t0 = time.time()
+    # same smoke convention: the reduced lane writes obs_smoke only;
+    # --full refreshes the obs_suite artifact behind BENCH_obs.json.
+    if args.full:
+        obs = bench_obs.run(verbose=False)
+    else:
+        obs = bench_obs.run(rounds=8, eval_every=4, verbose=False,
+                            smoke=True)
+    record("obs_telemetry", t0,
+           f"all-channels overhead {obs['overhead_frac'] * 100:+.1f}% "
+           f"(gate <=5%), trace bytes "
+           f"{'exact' if obs['trace']['bytes_exact'] else 'MISMATCH'}")
+
     # --- comm table (paper §VI-A.3) ------------------------------------
     from benchmarks import bench_comm
 

@@ -570,6 +570,16 @@ class EdgeGossipTransport:
         legal on replicated quantities — the swap crosses rows."""
         return arr[self.nbr_idx, self.rev_slot]
 
+    def recv_layout(self, arr):
+        """Receiver-layout view of a full sender-layout [N, E] panel,
+        zeroed on padding slots: entry (r, e) is the sender's value for
+        the directed link (nbr_idx[r, e] -> r).  Padding slots of the swap
+        alias edge (0, 0), so the valid mask is applied here — this is the
+        orientation the telemetry channels (repro.obs) observe fired gates
+        in, matching the per-node transport's receiver panel and the
+        canonical (dst, src) edge order after the panel flatten."""
+        return self._swap_layout(arr) * self.nbr_valid
+
     def _gather_receiver_rows(self, new_last_full, rows):
         """The reverse-slot gather: receiver row r's slot e reads sender
         nbr_idx[r, e]'s reference at slot rev_slot[r, e] out of the full

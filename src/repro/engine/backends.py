@@ -24,19 +24,21 @@ two backends differ ONLY in the context they bind:
     4-device CPU mesh, across the full capability roster).
 
 The round function's calling convention is ONE generic shape over the
-three optional scan-carried subsystem states — the transport's comm state,
-the `repro.dynamics` process state, and the `repro.timing` event clock —
-each present iff the experiment carries the subsystem:
+four optional scan-carried subsystem states — the transport's comm state,
+the `repro.dynamics` process state, the `repro.timing` event clock, and
+the `repro.obs` telemetry accumulators — each present iff the experiment
+carries the subsystem:
 
   (params, opt, *states, round_idx, rng)
     -> (params, opt, *states, rng, loss, *extras)
 
-with `states` the present members of (comm_state, dyn_state, time_state)
-in that order, and `extras` the present accounting groups, in the same
-order: (sent_edges, trig_frac) with a transport, (live_edges,) with
-dynamics, (sim_time, arrived_edges) with timing.  The no-subsystem case
-degenerates to the legacy (params, opt, round_idx, rng) -> (params, opt,
-rng, loss).
+with `states` the present members of (comm_state, dyn_state, time_state,
+obs_state) in that order, and `extras` the present accounting groups, in
+the same order: (sent_edges, trig_frac) with a transport, (live_edges,)
+with dynamics, (sim_time, arrived_edges) with timing, and (obs_snapshot,)
+— a dict of per-round channel values — with telemetry.  The no-subsystem
+case degenerates to the legacy (params, opt, round_idx, rng) -> (params,
+opt, rng, loss).
 
 With dynamics, the round starts by realizing this round's graph (one pure
 state transition -> a GraphEvent): a dead node runs zero local steps and
@@ -412,13 +414,14 @@ def _make_round_body(exp, *, loss_reduce):
     """The ONE round body, written against a PodContext.
 
     Returns ``body(ctx, params, opt, comm_state, dyn_state, time_state,
-    round_idx, rng, x, y)`` -> the full 12-slot tuple ``(params, opt,
-    comm_state, dyn_state, time_state, rng, loss, sent_edges, trig_frac,
-    live_edges, sim_time, arrived_edges)`` with ``None`` in the slots the
-    experiment does not carry (the backend wrappers squeeze those out to
-    the documented calling conventions).  All branching below is on STATIC
-    configuration — capabilities, transport type, dynamics/timing presence
-    — so each experiment traces exactly one path.
+    obs_state, round_idx, rng, x, y)`` -> the full 14-slot tuple
+    ``(params, opt, comm_state, dyn_state, time_state, obs_state, rng,
+    loss, sent_edges, trig_frac, live_edges, sim_time, arrived_edges,
+    obs_snapshot)`` with ``None`` in the slots the experiment does not
+    carry (the backend wrappers squeeze those out to the documented
+    calling conventions).  All branching below is on STATIC configuration
+    — capabilities, transport type, dynamics/timing/telemetry presence —
+    so each experiment traces exactly one path.
     """
     cfg, strategy, agg_state = exp.train, exp.strategy, exp.agg_state
     caps = strategy.capabilities
@@ -433,6 +436,8 @@ def _make_round_body(exp, *, loss_reduce):
     realize = _make_realize(exp) if has_dyn else None
     dyn_observes = has_dyn and exp.bound_dyn.observes
     has_time = exp.bound_timing is not None
+    has_obs = exp.bound_obs is not None
+    tele = exp.bound_obs
     bt = exp.bound_timing
     deadline = exp.deadline if has_time else None
     step_time = bt.step_time if has_time else None
@@ -475,8 +480,8 @@ def _make_round_body(exp, *, loss_reduce):
                  else agg_state)
         return strategy.aggregate(exp, state, params, gathered, mask)
 
-    def body(ctx, params, opt, comm_state, dyn_state, time_state, round_idx,
-             rng, x, y):
+    def body(ctx, params, opt, comm_state, dyn_state, time_state, obs_state,
+             round_idx, rng, x, y):
         rows = ctx.rows
         local_training = _make_local_training(
             exp, x=x, y=y, counts=rows(counts), rows=rows,
@@ -580,7 +585,13 @@ def _make_round_body(exp, *, loss_reduce):
             return strategy.flat_aggregate(exp, state, nb)
 
         # -- the exchange + aggregation, by declared capability ------------
+        # With telemetry, each transport branch also captures its fired /
+        # delivered edge masks in the RECEIVER orientation (the dense
+        # [N, max_deg] panel or the flat [E] bank — the same full-axis
+        # replicated quantities the byte accounting sums, so the channel
+        # accumulators agree with `sent_edges` exactly).
         sent_edges = trig = new_comm = None
+        obs_fired = obs_deliv = None
         if transport is None:
             if caps.kind == "server":
                 # server-style: global average over the full stack, with
@@ -657,6 +668,9 @@ def _make_round_body(exp, *, loss_reduce):
                     edge_table=edge_table, edge_mask=mask_e)
                 params = strategy.flat_aggregate(
                     exp, jax.tree.map(rows, agg_state), nb)
+                if has_obs:
+                    obs_fired = gate_full
+                    obs_deliv = gate_full * link_e
             else:
                 if has_dyn:
                     rj = ev.rejoined
@@ -685,6 +699,9 @@ def _make_round_body(exp, *, loss_reduce):
                         exp, jax.tree.map(rows, agg_state), nb)
                 else:
                     params = aggregate(rows, params, gathered, mask)
+                if has_obs:
+                    obs_fired = transport.recv_layout(gate_full)
+                    obs_deliv = obs_fired * link_full
             # unicast accounting: one payload per FIRED edge (a silent edge
             # of an otherwise-sending node costs nothing); failed links
             # still burn the sender's bytes.
@@ -733,6 +750,10 @@ def _make_round_body(exp, *, loss_reduce):
                 delivered_e = _and_masks(gate_full[edge_src], part_e,
                                          live_e, arr_e)
                 new_comm = transport.note_delivery(new_comm, delivered_e)
+                if has_obs:
+                    obs_fired = (gate_full[edge_src] * ev.live if has_dyn
+                                 else gate_full[edge_src])
+                    obs_deliv = delivered_e
                 if stale:
                     params = flat_gossip(
                         params, None,
@@ -747,6 +768,10 @@ def _make_round_body(exp, *, loss_reduce):
                 delivered_full = edge_delivery(gate_full, link_full,
                                                nbr_idx)
                 new_comm = transport.note_delivery(new_comm, delivered_full)
+                if has_obs:
+                    obs_fired = gate_full[nbr_idx] * (ev.live if has_dyn
+                                                      else nbr_valid)
+                    obs_deliv = delivered_full
                 if stale:
                     mask_full = link_full * new_comm.ever_recv
                 else:
@@ -821,14 +846,28 @@ def _make_round_body(exp, *, loss_reduce):
         else:
             sim_t = arrived = new_time = None
 
-        return (params, opt, new_comm, dyn_state, new_time, rng, train_loss,
-                sent_edges, trig, live_total, sim_t, arrived)
+        # -- telemetry epilogue: channel arithmetic on the carried dict ----
+        # Pure full-axis arithmetic over quantities the round already
+        # computed (no rng, no extra collectives — the params-reading
+        # consensus/drift probes live OUTSIDE the round, gated to eval
+        # rounds by the runner), so `telemetry=None` stays bit-identical
+        # by construction.
+        if has_obs:
+            obs_state, obs_out = tele.step(
+                obs_state, budgets=budgets_full, t_cost=t_cost,
+                fired=obs_fired, delivered=obs_deliv)
+        else:
+            obs_out = None
+
+        return (params, opt, new_comm, dyn_state, new_time, obs_state, rng,
+                train_loss, sent_edges, trig, live_total, sim_t, arrived,
+                obs_out)
 
     return body
 
 
 def _squeeze(out):
-    """Drop the None slots of the full 12-tuple, yielding the documented
+    """Drop the None slots of the full 14-tuple, yielding the documented
     per-configuration calling convention (the slot ORDER is fixed, so the
     surviving entries line up with the module-docstring signatures)."""
     return tuple(o for o in out if o is not None)
@@ -837,13 +876,14 @@ def _squeeze(out):
 def _unpack_states(exp, rest):
     """Split a round_fn's positional tail ``(*states, round_idx, rng)``
     into the body's fixed slots, with None for the states the experiment
-    does not carry.  States appear in (comm, dyn, time) order."""
+    does not carry.  States appear in (comm, dyn, time, obs) order."""
     rest = list(rest)
     comm_state = rest.pop(0) if exp.transport is not None else None
     dyn_state = rest.pop(0) if exp.bound_dyn is not None else None
     time_state = rest.pop(0) if exp.bound_timing is not None else None
+    obs_state = rest.pop(0) if exp.bound_obs is not None else None
     round_idx, rng = rest
-    return comm_state, dyn_state, time_state, round_idx, rng
+    return comm_state, dyn_state, time_state, obs_state, round_idx, rng
 
 
 # ------------------------------------------------------------- vmap backend
@@ -854,10 +894,10 @@ def _build_vmap_round(exp):
     x, y = exp.x_pad, exp.y_pad
 
     def round_fn(params, opt, *rest):
-        comm_state, dyn_state, time_state, round_idx, rng = \
+        comm_state, dyn_state, time_state, obs_state, round_idx, rng = \
             _unpack_states(exp, rest)
         return _squeeze(body(DENSE_CTX, params, opt, comm_state, dyn_state,
-                             time_state, round_idx, rng, x, y))
+                             time_state, obs_state, round_idx, rng, x, y))
 
     return round_fn
 
@@ -892,6 +932,7 @@ def _build_shardmap_round(exp):
     has_comm = transport is not None
     has_dyn = exp.bound_dyn is not None
     has_time = exp.bound_timing is not None
+    has_obs = exp.bound_obs is not None
 
     def pmean(v):
         return jax.lax.pmean(v, NODE_AXIS)
@@ -912,11 +953,14 @@ def _build_shardmap_round(exp):
 
     shard = P(NODE_AXIS)
     rep = P()
-    # State specs in (comm, dyn, time) order.  Dynamics state and the
-    # TimingState (scalar clock + [N] last-cost) are fully replicated:
+    # State specs in (comm, dyn, time, obs) order.  Dynamics state, the
+    # TimingState (scalar clock + [N] last-cost) and the telemetry
+    # accumulator dict (full-axis channel sums) are fully replicated:
     # every pod advances them identically from replicated rng/masks, the
     # same discipline that keeps the backends bit-identical everywhere
-    # else.  Transport state splits by the transport's own `state_specs`.
+    # else.  Transport state splits by the transport's own `state_specs`;
+    # the single `rep` spec is a pytree PREFIX covering every leaf of the
+    # telemetry dict.
     state_specs = []
     if has_comm:
         state_specs.append(transport.state_specs(shard, rep))
@@ -924,16 +968,19 @@ def _build_shardmap_round(exp):
         state_specs.append(rep)
     if has_time:
         state_specs.append(rep)
+    if has_obs:
+        state_specs.append(rep)
     state_specs = tuple(state_specs)
-    # Replicated extras past (rng, loss): (sent, trig | live | sim_t, arr).
-    n_extras = 2 * has_comm + has_dyn + 2 * has_time
+    # Replicated extras past (rng, loss):
+    # (sent, trig | live | sim_t, arr | obs_snapshot).
+    n_extras = 2 * has_comm + has_dyn + 2 * has_time + has_obs
 
     def block(params, opt, *rest):
-        comm_state, dyn_state, time_state, round_idx, rng = \
+        comm_state, dyn_state, time_state, obs_state, round_idx, rng = \
             _unpack_states(exp, rest[:-2])
         x, y = rest[-2:]
         return _squeeze(body(make_ctx(), params, opt, comm_state, dyn_state,
-                             time_state, round_idx, rng, x, y))
+                             time_state, obs_state, round_idx, rng, x, y))
 
     sharded = shard_map(
         block, mesh,

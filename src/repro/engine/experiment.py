@@ -38,8 +38,10 @@ metrics continue where the last call stopped.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import List, Optional
+import time as _time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +62,8 @@ from repro.fl.trainer import make_eval_fn, make_grad_fn, make_train_step
 from repro.graphs.sparse import SparseTopology
 from repro.graphs.topology import Topology
 from repro.models.api import SmallModel
+from repro.obs import (RunLedger, Telemetry, log_round, round_record,
+                       run_manifest)
 from repro.optim.sgd import sgd_momentum
 from repro.timing import Timing
 from repro.utils.pytree import tree_flatten_stacked
@@ -153,6 +157,13 @@ class World:
     # train fewer steps, late payloads miss the round); without one the
     # schedule stays synchronous and the clock reports the makespan.
     timing: Optional[Timing] = None
+    # Optional telemetry (repro.obs): opt-in per-node/per-edge channel
+    # accumulators riding the scan carry (consensus/drift probes, exact
+    # per-edge bytes, staleness ages, ...), a schema-validated JSONL run
+    # ledger, and Chrome-trace export of the event clock.  `telemetry=None`
+    # is bit-identical to an engine without the subsystem.  See
+    # docs/observability.md.
+    telemetry: Optional[Telemetry] = None
 
     @classmethod
     def synthetic(cls, dataset: str = "synth-mnist", nodes: int = 16,
@@ -160,7 +171,8 @@ class World:
                   scale: float = 0.05, min_per_class: int = 1,
                   model: Optional[SmallModel] = None,
                   dynamics: Optional[GraphProcess] = None,
-                  timing: Optional[Timing] = None, **topo_kwargs):
+                  timing: Optional[Timing] = None,
+                  telemetry: Optional[Telemetry] = None, **topo_kwargs):
         """The paper's synthetic worlds in one call: seeded dataset,
         complex-network topology (extra kwargs go to the graph builder,
         e.g. p=0.25 for ER, m=2 for BA), truncated-Zipf non-IID split."""
@@ -184,7 +196,7 @@ class World:
         model = model or model_for_dataset(dataset, ds.num_classes)
         return cls(model=model, topo=topo, xs=xs, ys=ys,
                    x_test=ds.x_test, y_test=ds.y_test, dynamics=dynamics,
-                   timing=timing)
+                   timing=timing, telemetry=telemetry)
 
 
 def _default_mesh(n: int):
@@ -412,13 +424,50 @@ class Experiment:
         self._arrived_rounds = 0
         self.arrived_history: List[float] = []  # per-round arrived fraction
 
+        # --- telemetry (repro.obs): bind the channel selection once; the
+        # accumulator dict becomes one more scan-carried state and the
+        # per-round snapshots one more extras group.  The ledger (when
+        # configured) opens here with the run manifest.
+        self.telemetry = world.telemetry
+        self.bound_obs = None
+        self.obs_state = None
+        # layout-native channel snapshots, one per round (ALL rounds, not
+        # just eval rounds — the trace exporter diffs the cumulative
+        # channels round by round)
+        self.obs_history: List[Dict] = []
+        self.ledger = None
+        if world.telemetry is not None:
+            if not isinstance(world.telemetry, Telemetry):
+                raise TypeError(
+                    f"World.telemetry must be a repro.obs.Telemetry, "
+                    f"got {type(world.telemetry).__name__}")
+            self.bound_obs = world.telemetry.bind(self)
+            if self.bound_obs is not None:
+                self.obs_state = self.bound_obs.state0
+            if world.telemetry.ledger is not None:
+                self.ledger = RunLedger(world.telemetry.ledger)
+                self.ledger.write_manifest(run_manifest(self))
+        # the params-reading probes (consensus/drift) are instantaneous
+        # norms consumed only at eval rounds, so they run under the SAME
+        # gate as the eval itself: the fused program inlines `_probes_raw`
+        # in its static-flag cond, loop mode calls the jitted version at
+        # eval rounds — non-eval rounds never pay the flatten + norms.
+        self._probes_raw = self._probes = None
+        if self.bound_obs is not None and self.bound_obs.has_probes:
+            _tele = self.bound_obs
+
+            def _probes_raw(params):
+                return _tele.eval_probes(tree_flatten_stacked(params)[0])
+
+            self._probes_raw = _probes_raw
+            self._probes = jax.jit(_probes_raw)
+
         # --- method state + the lowered round ---
         self.agg_state = self.strategy.init_state(self)
         self._round_raw = backends.build_round(self)
-        # donate the round-carried state: params, opt, then comm/dyn/time
-        donate = tuple(range(2 + (self.transport is not None)
-                             + (self.bound_dyn is not None)
-                             + (self.bound_timing is not None)))
+        # donate the round-carried state: params, opt, then
+        # comm/dyn/time/obs
+        donate = tuple(range(2 + sum(self._state_flags())))
         self._round = jax.jit(self._round_raw, donate_argnums=donate)
         self._fused_cache = {}
 
@@ -433,23 +482,24 @@ class Experiment:
     #   round_fn(params, opt, *states, round_idx, rng)
     #     -> (params, opt, *states, rng, loss, *extras)
     # with `states` the present members of (comm_state, dyn_state,
-    # time_state) in that order and `extras` the present groups of
-    # (sent, trig | live | sim_t, arrived).  Both schedule modes and the
-    # fused scan body unpack by the same three flags.
+    # time_state, obs_state) in that order and `extras` the present groups
+    # of (sent, trig | live | sim_t, arrived | obs_snapshot).  Both
+    # schedule modes and the fused scan body unpack by the same four flags.
     def _state_flags(self):
         return (self.transport is not None, self.bound_dyn is not None,
-                self.bound_timing is not None)
+                self.bound_timing is not None, self.bound_obs is not None)
 
     def _get_states(self):
-        has_comm, has_dyn, has_time = self._state_flags()
+        has_comm, has_dyn, has_time, has_obs = self._state_flags()
         states = ()
         states += (self.comm_state,) if has_comm else ()
         states += (self.dyn_state,) if has_dyn else ()
         states += (self.time_state,) if has_time else ()
+        states += (self.obs_state,) if has_obs else ()
         return states
 
     def _set_states(self, states):
-        has_comm, has_dyn, has_time = self._state_flags()
+        has_comm, has_dyn, has_time, has_obs = self._state_flags()
         states = list(states)
         if has_comm:
             self.comm_state = states.pop(0)
@@ -457,6 +507,8 @@ class Experiment:
             self.dyn_state = states.pop(0)
         if has_time:
             self.time_state = states.pop(0)
+        if has_obs:
+            self.obs_state = states.pop(0)
         assert not states
 
     def _fused_program(self, rounds: int, eval_every: int):
@@ -474,16 +526,26 @@ class Experiment:
                            np.int32)
         round_fn = self._round_raw
         eval_fn = self._eval_raw
+        # telemetry's params probes share the eval's static gate: the
+        # untaken branch returns structural zeros, so non-eval rounds
+        # never execute the flatten + norm traffic
+        probes_fn = self._probes_raw
+        probe_zeros = (self.bound_obs.probe_zeros()
+                       if probes_fn is not None else {})
         x_test, y_test, n = self.x_test, self.y_test, self.n
         n_states = sum(self._state_flags())
 
+        def _eval_on(p):
+            acc, loss = eval_fn(p, x_test, y_test)
+            return acc, loss, (probes_fn(p) if probes_fn is not None
+                               else {})
+
+        def _eval_off(p):
+            return (jnp.zeros((n,), jnp.float32),
+                    jnp.zeros((n,), jnp.float32), probe_zeros)
+
         def gated_eval(flag, params):
-            return jax.lax.cond(
-                flag > 0,
-                lambda p: eval_fn(p, x_test, y_test),
-                lambda p: (jnp.zeros((n,), jnp.float32),
-                           jnp.zeros((n,), jnp.float32)),
-                params)
+            return jax.lax.cond(flag > 0, _eval_on, _eval_off, params)
 
         def body(carry, xs):
             r, flag = xs
@@ -492,8 +554,11 @@ class Experiment:
             out = round_fn(params, opt, *states, r, rng)
             carry = out[:2 + n_states] + (out[2 + n_states],)  # ... + rng
             extras = out[4 + n_states:]  # everything past the loss slot
-            acc, loss = gated_eval(flag, carry[0])
-            return carry, (acc, loss) + tuple(extras)
+            acc, loss, probes = gated_eval(flag, carry[0])
+            ys = (acc, loss) + tuple(extras)
+            if probes_fn is not None:
+                ys = ys + (probes,)
+            return carry, ys
 
         def program(carry):
             return jax.lax.scan(
@@ -537,9 +602,16 @@ class Experiment:
         self._arrived_rounds += 1
         self.arrived_history.append(frac)
 
+    def _account_obs(self, snapshot):
+        """Telemetry accounting: keep the round's layout-native channel
+        snapshot (numpy) — `RoundMetrics.detail` and the trace exporter
+        materialize from these on the host."""
+        self.obs_history.append(jax.tree.map(np.asarray, snapshot))
+
     def _account_extras(self, extras):
         """Route one round's extras group-by-group (the generic convention:
-        (sent, trig | live | sim_t, arrived) for the present subsystems)."""
+        (sent, trig | live | sim_t, arrived | obs_snapshot) for the
+        present subsystems)."""
         extras = list(extras)
         if self.transport is not None:
             self._account_comm(extras.pop(0), extras.pop(0))
@@ -547,9 +619,12 @@ class Experiment:
             self._account_live(extras.pop(0))
         if self.bound_timing is not None:
             self._account_time(extras.pop(0), extras.pop(0))
+        if self.bound_obs is not None:
+            self._account_obs(extras.pop(0))
         assert not extras
 
-    def _finish_metrics(self, m: RoundMetrics, history, verbose):
+    def _finish_metrics(self, m: RoundMetrics, history, verbose,
+                        probes=None):
         if self.transport is not None:
             m.bytes_on_wire = self.comm_bytes_total
             m.triggered_frac = self._trig_sum / max(self._comm_rounds, 1)
@@ -558,30 +633,56 @@ class Experiment:
         if self.bound_timing is not None:
             m.sim_time = self.sim_time
             m.arrived_frac = self._arrived_sum / max(self._arrived_rounds, 1)
+        if self.bound_obs is not None and self.obs_history:
+            m.detail = self.bound_obs.materialize(
+                self.obs_history[-1], acc_per_node=m.acc_per_node,
+                probes=probes)
         history.append(m)
+        if self.ledger is not None:
+            self.ledger.write(round_record(m))
         if verbose:
-            self._print_round(m)
+            log_round(self.method.name, m)
 
     def _run_fused(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
+        cold = (rounds, eval_every) not in self._fused_cache
         fused = self._fused_program(rounds, eval_every)
         n_states = sum(self._state_flags())
         carry = (self.params, self.opt_state) + self._get_states() \
             + (self.rng,)
+        if self.ledger is not None and cold:
+            # compile-time counter for the ledger: AOT-lower and compile
+            # the SAME jitted program (same jaxpr, donation honored) so
+            # the compile seconds are separable from the dispatch; the
+            # compiled executable replaces the cache entry and serves
+            # every later call.
+            t0 = _time.perf_counter()
+            fused = fused.lower(carry).compile()
+            self._compile_s = _time.perf_counter() - t0
+            self._fused_cache[(rounds, eval_every)] = fused
+        self._cold_compile = cold
         carry, ys = fused(carry)
         self.params, self.opt_state = carry[:2]
         self._set_states(carry[2:2 + n_states])
         self.rng = carry[-1]
         acc_r, loss_r = np.asarray(ys[0]), np.asarray(ys[1])
-        extras_r = [np.asarray(e) for e in ys[2:]]
+        # the telemetry extras group is a DICT of stacked arrays — convert
+        # per leaf (scalars and dicts alike) rather than per group
+        extras_r = [jax.tree.map(np.asarray, e) for e in ys[2:]]
+        # the eval-gated params probes ride as the LAST scan output, after
+        # the round extras (zeros on non-eval rounds — never read there)
+        probes_r = extras_r.pop() if self._probes_raw is not None else None
 
         evals = set(Schedule.eval_rounds(rounds, eval_every))
         history: List[RoundMetrics] = []
         for r in range(rounds):
-            self._account_extras([e[r] for e in extras_r])
+            self._account_extras(
+                [jax.tree.map(lambda a: a[r], e) for e in extras_r])
             if r in evals:
                 m = RoundMetrics(round=r, acc_per_node=acc_r[r],
                                  loss_per_node=loss_r[r])
-                self._finish_metrics(m, history, verbose)
+                probes = (jax.tree.map(lambda a: a[r], probes_r)
+                          if probes_r is not None else None)
+                self._finish_metrics(m, history, verbose, probes=probes)
         return history
 
     def _run_loop(self, rounds, eval_every, verbose) -> List[RoundMetrics]:
@@ -598,20 +699,11 @@ class Experiment:
             if r in evals:
                 m = self.evaluate()
                 m.round = r
-                self._finish_metrics(m, history, verbose)
+                probes = (jax.tree.map(np.asarray,
+                                       self._probes(self.params))
+                          if self._probes is not None else None)
+                self._finish_metrics(m, history, verbose, probes=probes)
         return history
-
-    def _print_round(self, m: RoundMetrics):
-        comm = ("" if m.bytes_on_wire is None else
-                f"  wire {m.bytes_on_wire / 1e6:.2f} MB"
-                f"  trig {m.triggered_frac:.2f}")
-        live = ("" if m.live_edge_frac is None else
-                f"  live {m.live_edge_frac:.2f}")
-        time = ("" if m.sim_time is None else
-                f"  t {m.sim_time:.1f}s  arr {m.arrived_frac:.2f}")
-        print(f"[{self.method.name}] round {m.round:4d}  "
-              f"acc {m.acc_mean:.4f} ± {m.acc_std:.4f}  "
-              f"loss {m.loss_mean:.4f}{comm}{live}{time}")
 
     def run(self, rounds: Optional[int] = None,
             eval_every: Optional[int] = None, verbose: bool = False,
@@ -619,7 +711,14 @@ class Experiment:
         """Run the schedule; returns the eval history (includes round 0 =
         after the initial local training, matching the paper's Fig. 1
         x-axis).  Repeated calls continue from the current state (round
-        indices restart, so the deterministic batch schedule repeats)."""
+        indices restart, so the deterministic batch schedule repeats).
+
+        Verbose round lines go through the ``repro.obs.round`` logging
+        stream
+        (same text as always), the JSONL ledger gets one record per eval
+        round plus a run summary (wall seconds, rounds/sec, compile-time
+        counters), and `Telemetry(profile_dir=...)` wraps the run in a
+        `jax.profiler` capture."""
         rounds = self.schedule.rounds if rounds is None else rounds
         eval_every = (self.schedule.eval_every if eval_every is None
                       else eval_every)
@@ -627,6 +726,25 @@ class Experiment:
         if mode not in SCHEDULE_MODES:
             raise ValueError(f"schedule mode must be one of {SCHEDULE_MODES}, "
                              f"got {mode!r}")
-        if mode == "fused":
-            return self._run_fused(rounds, eval_every, verbose)
-        return self._run_loop(rounds, eval_every, verbose)
+        self._cold_compile = None
+        self._compile_s = None
+        profile = contextlib.nullcontext()
+        if self.telemetry is not None and self.telemetry.profile_dir:
+            profile = jax.profiler.trace(self.telemetry.profile_dir)
+        t0 = _time.perf_counter()
+        with profile:
+            if mode == "fused":
+                history = self._run_fused(rounds, eval_every, verbose)
+            else:
+                history = self._run_loop(rounds, eval_every, verbose)
+        if self.ledger is not None:
+            wall = _time.perf_counter() - t0
+            rec = {"kind": "summary", "mode": mode, "rounds": int(rounds),
+                   "wall_s": wall,
+                   "rounds_per_sec": rounds / max(wall, 1e-9)}
+            if self._cold_compile is not None:
+                rec["cold_compile"] = bool(self._cold_compile)
+            if self._compile_s is not None:
+                rec["compile_s"] = self._compile_s
+            self.ledger.write(rec)
+        return history

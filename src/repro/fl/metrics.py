@@ -46,6 +46,14 @@ class RoundMetrics:
     # aggregated until a later round re-delivers or the stale cache serves it.
     sim_time: Optional[float] = None
     arrived_frac: Optional[float] = None
+    # Telemetry detail (None without a repro.obs Telemetry): the selected
+    # channels materialized at this eval round — node channels as [N]
+    # arrays, edge channels as [E] arrays in the canonical
+    # (dst, src)-sorted directed-edge order shared by both layouts (see
+    # docs/observability.md for the catalog).  Cumulative channels
+    # (steps/compute/bytes/trigger) cover every round up to and including
+    # this one, mirroring `bytes_on_wire`.
+    detail: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def acc_mean(self) -> float:
@@ -63,7 +71,29 @@ class RoundMetrics:
 def characteristic_time(history: Sequence[RoundMetrics], centralized_acc: float,
                         thresholds=(0.5, 0.8, 0.9, 0.95)) -> Dict[float, Optional[int]]:
     """Paper Table IV: first round at which the node-average accuracy reaches
-    `thr * centralized_acc`.  None = never within the horizon."""
+    `thr * centralized_acc`.
+
+    Edge-case contract (tested in tests/test_obs.py):
+
+      * a threshold that is NEVER reached within the horizon maps to
+        ``None`` — callers must treat None as "did not converge", not 0;
+      * ``centralized_acc <= 0`` raises ``ValueError``: every target
+        ``thr * centralized_acc`` would be <= 0, so round 0 would "reach"
+        all of them vacuously and the table would claim instant
+        convergence for any method (pass the actual centralized benchmark
+        accuracy, which is positive by definition);
+      * an empty history raises ``ValueError`` (there is no round to
+        report) rather than silently returning all-None.
+    """
+    if len(history) == 0:
+        raise ValueError(
+            "characteristic_time got an empty history; run the experiment "
+            "(or pass its eval history) before computing Table IV")
+    if not centralized_acc > 0:
+        raise ValueError(
+            f"centralized_acc must be > 0 (the centralized benchmark "
+            f"accuracy the thresholds are fractions of), got "
+            f"{centralized_acc}")
     out: Dict[float, Optional[int]] = {}
     for thr in thresholds:
         target = thr * centralized_acc
@@ -118,9 +148,15 @@ def comm_bytes_per_round(method: str, topo: Topology, model_bytes: int,
 
 
 def accuracy_table(histories: Dict[str, List[RoundMetrics]]) -> Dict[str, Dict[str, float]]:
-    """Final-round summary akin to the paper's Table II."""
+    """Final-round summary akin to the paper's Table II.  A method with an
+    empty history raises ValueError (a run that never evaluated has no
+    final round to tabulate)."""
     table = {}
     for method, hist in histories.items():
+        if len(hist) == 0:
+            raise ValueError(
+                f"accuracy_table: method {method!r} has an empty history "
+                f"(no eval rounds); run it before tabulating")
         last = hist[-1]
         table[method] = {
             "acc_mean": last.acc_mean,

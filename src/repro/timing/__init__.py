@@ -15,8 +15,11 @@ ticks — a payload is delivered iff ``send_time + latency +
 bytes/bandwidth <= deadline``, late arrivals fall into the existing
 stale/drop silence paths, and stragglers train fewer local steps.  With
 ``deadline=None`` the engine stays synchronous (every round waits for the
-slowest node and link) and merely reports the simulated makespan.  See
-docs/timing.md.
+slowest node and link) and merely reports the simulated makespan.  With
+``World(telemetry=...)`` also bound, `repro.obs.export_trace` renders the
+realized clock as a Chrome/Perfetto trace — per-node train spans and
+per-edge transfer spans with exact bytes and arrival-vs-deadline.  See
+docs/timing.md and docs/observability.md.
 """
 from repro.timing.models import (  # noqa: F401
     LINK_MODELS,
